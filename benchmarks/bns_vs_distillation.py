@@ -1,0 +1,76 @@
+"""Table 3 reproduction: BNS solver-distillation cost accounting vs
+Progressive Distillation (Salimans & Ho 2022; Meng et al. 2023).
+
+The PD numbers are the published ones (Appendix D.4 arithmetic, reproduced
+here exactly); the BNS numbers come from our actual training configuration
+(Appendix D.1: 15k/30k iterations, batch 40, + training-set generation cost).
+"""
+from __future__ import annotations
+
+from repro.core.ns_solver import count_parameters
+
+
+def pd_forwards_cifar10(steps: int) -> int:
+    updates = {8: 500_000, 4: 550_000}[steps]
+    return updates * 128 * 3              # batch 128, 2 teacher + 1 student
+
+
+def pd_forwards_imagenet64(steps: int) -> int:
+    updates = {16: 300_000, 8: 350_000, 4: 400_000}[steps]
+    return updates * 2048 * 3
+
+
+def bns_forwards(nfe: int, iterations: int, batch: int, genset: int) -> int:
+    return iterations * batch * nfe + genset
+
+
+ROWS = [
+    # dataset, nfe, method, forwards, train-set size, params
+    ("CIFAR10", 4, "PD", pd_forwards_cifar10(4), 50_000, ">50m"),
+    ("CIFAR10", 8, "PD", pd_forwards_cifar10(8), 50_000, ">50m"),
+    ("CIFAR10", 4, "BNS", bns_forwards(4, 30_000, 40, 85_000), 520,
+     count_parameters(4)),
+    ("CIFAR10", 8, "BNS", bns_forwards(8, 30_000, 40, 85_000), 520,
+     count_parameters(8)),
+    ("ImageNet-64", 4, "PD", pd_forwards_imagenet64(4), 1_200_000, ">200m"),
+    ("ImageNet-64", 8, "PD", pd_forwards_imagenet64(8), 1_200_000, ">200m"),
+    ("ImageNet-64", 16, "PD", pd_forwards_imagenet64(16), 1_200_000, ">200m"),
+    ("ImageNet-64", 4, "BNS", bns_forwards(4, 15_000, 40, 90_000), 520,
+     count_parameters(4)),
+    ("ImageNet-64", 8, "BNS", bns_forwards(8, 15_000, 40, 90_000), 520,
+     count_parameters(8)),
+    ("ImageNet-64", 16, "BNS", bns_forwards(16, 15_000, 40, 90_000), 520,
+     count_parameters(16)),
+]
+
+# Paper Table 3 forward counts (in millions) for validation.
+PAPER = {
+    ("CIFAR10", 4, "PD"): 211e6, ("CIFAR10", 8, "PD"): 192e6,
+    ("CIFAR10", 4, "BNS"): 4.9e6, ("CIFAR10", 8, "BNS"): 9.7e6,
+    ("ImageNet-64", 4, "PD"): 2457e6, ("ImageNet-64", 8, "PD"): 2150e6,
+    ("ImageNet-64", 16, "PD"): 1843e6,
+    ("ImageNet-64", 4, "BNS"): 2.5e6, ("ImageNet-64", 8, "BNS"): 4.9e6,
+    ("ImageNet-64", 16, "BNS"): 9.7e6,
+}
+
+
+def run(log=print):
+    rows_out = []
+    for ds, nfe, method, fwd, ts, params in ROWS:
+        paper = PAPER[(ds, nfe, method)]
+        rel = fwd / paper
+        ok = 0.85 < rel < 1.15
+        rows_out.append({"dataset": ds, "nfe": nfe, "method": method,
+                         "forwards": fwd, "paper_forwards": paper,
+                         "match": ok, "train_set": ts, "params": params})
+        log(f"[{'PASS' if ok else 'FAIL'}] {ds} {method} NFE={nfe}: "
+            f"{fwd/1e6:.1f}m forwards (paper {paper/1e6:.0f}m), "
+            f"train set {ts}, params {params}")
+    ratio = pd_forwards_imagenet64(16) / bns_forwards(16, 15_000, 40, 90_000)
+    log(f"ImageNet-64 NFE16: BNS uses {1/ratio:.2%} of PD's forwards "
+        f"(paper: ~0.5%)")
+    return rows_out
+
+
+if __name__ == "__main__":
+    run()

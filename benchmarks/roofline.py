@@ -1,0 +1,169 @@
+"""Roofline analysis (deliverable g): three terms per (arch x shape x mesh)
+from the dry-run artifacts in experiments/dryrun/*.json.
+
+    compute    = HLO_FLOPs_per_device / peak_FLOPs            [s]
+    memory     = HLO_bytes_per_device / HBM_bw                [s]
+    collective = wire_bytes_per_device / ICI_link_bw          [s]
+
+Hardware model: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+Wire bytes: all-reduce counts 2x (reduce-scatter + all-gather phases); other
+collectives 1x of their output bytes.
+
+MODEL_FLOPS = 6 N D (train) / 2 N D (prefill/decode), N_active for MoE —
+the ratio MODEL_FLOPS / HLO_FLOPs exposes remat/redundancy waste.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+SHAPE_TOKENS = {
+    "train_4k": 4096 * 256,
+    "prefill_32k": 32768 * 32,
+    "decode_32k": 128,          # one token per sequence
+    "long_500k": 1,
+}
+
+
+def wire_bytes(coll: dict) -> float:
+    total = 0.0
+    for kind, v in coll.items():
+        if kind.endswith("_count"):
+            continue
+        factor = 2.0 if kind == "all-reduce" else 1.0
+        total += factor * v
+    return total
+
+
+SHAPE_INFO = {
+    "train_4k": (4096, 256, 3.0),     # (seq, batch, fwd+bwd multiplier)
+    "prefill_32k": (32768, 32, 1.0),
+    "decode_32k": (32768, 128, 1.0),
+    "long_500k": (524288, 1, 1.0),
+}
+
+
+def model_flops(rec: dict) -> float:
+    """Useful FLOPs: 2*N_active per token (matmuls) + attention score/value
+    FLOPs (4 * L * H*hd * S per query token for full attention; window-capped
+    for long_500k; O(1)-state for SSM/linear attention)."""
+    from repro.configs import get_config
+
+    cfg = get_config(rec["arch"])
+    shape = rec["shape"]
+    seq, batch, bwd = SHAPE_INFO[shape]
+    n = rec.get("active_param_count") or rec["param_count"]
+    q_tokens = batch if shape.startswith(("decode", "long")) else seq * batch
+    flops = 2.0 * n * q_tokens
+    # attention context length per query token
+    if cfg.family in ("dense", "moe", "vlm", "encdec", "hybrid"):
+        ctx = seq / 2 if shape in ("train_4k", "prefill_32k") else seq
+        if shape == "long_500k" and cfg.sliding_window:
+            ctx = min(ctx, cfg.sliding_window)
+        layers = (cfg.n_layers if cfg.family != "hybrid"
+                  else cfg.n_layers // cfg.hybrid_attn_every)
+        flops += 4.0 * layers * cfg.n_heads * cfg.resolved_head_dim * ctx * q_tokens
+    return bwd * flops / rec["devices"]   # per device
+
+
+def analyze_record(rec: dict) -> dict:
+    if rec.get("status") != "ok":
+        return rec
+    compute = rec["flops"] / PEAK_FLOPS
+    memory = rec["bytes"] / HBM_BW
+    collective = wire_bytes(rec.get("collectives", {})) / ICI_BW
+    terms = {"compute": compute, "memory": memory, "collective": collective}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(rec)
+    return {
+        **rec,
+        "t_compute": compute,
+        "t_memory": memory,
+        "t_collective": collective,
+        "dominant": dominant,
+        "model_flops": mf,
+        "useful_ratio": mf / rec["flops"] if rec["flops"] else 0.0,
+    }
+
+
+def load_all(outdir: str = "experiments/dryrun") -> list[dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(outdir, "*.json"))):
+        with open(path) as f:
+            recs.append(analyze_record(json.load(f)))
+    return recs
+
+
+def fmt_s(x: float) -> str:
+    if x >= 1e-3:
+        return f"{x*1e3:.2f}ms"
+    return f"{x*1e6:.1f}us"
+
+
+def table(recs: list[dict], mesh: str = "pod16x16") -> str:
+    lines = ["| arch | shape | compute | memory | collective | dominant | "
+             "model/HLO flops |",
+             "|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if r.get("mesh") != mesh:
+            continue
+        if r.get("status") == "skipped":
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                         f"skipped | — |")
+            continue
+        if r.get("status") != "ok":
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_s(r['t_compute'])} | "
+            f"{fmt_s(r['t_memory'])} | {fmt_s(r['t_collective'])} | "
+            f"**{r['dominant']}** | {r['useful_ratio']:.2f} |")
+    return "\n".join(lines)
+
+
+def comparison_table(recs: list[dict]) -> str:
+    """Baseline vs seq-par-optimized (mesh tag pod16x16-opt) dominant terms."""
+    base = {(r["arch"], r["shape"]): r for r in recs
+            if r.get("mesh") == "pod16x16" and r.get("status") == "ok"}
+    opt = {(r["arch"], r["shape"]): r for r in recs
+           if r.get("mesh") == "pod16x16-opt" and r.get("status") == "ok"}
+    lines = ["| arch | shape | baseline dominant | optimized dominant | speedup |",
+             "|---|---|---|---|---|"]
+    for key in sorted(opt):
+        b, o = base.get(key), opt[key]
+        if b is None:
+            continue
+        bd = max(b["t_compute"], b["t_memory"], b["t_collective"])
+        od = max(o["t_compute"], o["t_memory"], o["t_collective"])
+        lines.append(f"| {key[0]} | {key[1]} | {fmt_s(bd)} ({b['dominant']}) | "
+                     f"{fmt_s(od)} ({o['dominant']}) | {bd/od:.1f}x |")
+    return "\n".join(lines)
+
+
+def main():
+    recs = load_all()
+    print(table(recs))
+    os.makedirs("experiments", exist_ok=True)
+    with open("experiments/roofline.md", "w") as f:
+        f.write("# Roofline terms (single pod, 16x16 = 256 chips)\n\n")
+        f.write(table(recs, "pod16x16"))
+        f.write("\n\n# Multi-pod (2x16x16 = 512 chips)\n\n")
+        f.write(table(recs, "pod2x16x16"))
+        f.write("\n\n# Baseline vs optimized (seq-parallel attention fleet-wide)\n\n")
+        f.write(comparison_table(recs))
+        f.write("\n")
+    # CSV lines for benchmarks/run.py convention
+    for r in recs:
+        if r.get("status") == "ok":
+            dom = {"compute": r["t_compute"], "memory": r["t_memory"],
+                   "collective": r["t_collective"]}[r["dominant"]]
+            print(f"roofline/{r['arch']}/{r['shape']}/{r['mesh']},"
+                  f"{dom*1e6:.1f},dominant={r['dominant']}")
+
+
+if __name__ == "__main__":
+    main()

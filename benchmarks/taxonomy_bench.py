@@ -1,0 +1,59 @@
+"""Figure 3 / Theorem 3.2 benchmark: every solver family converts to NS
+parameters with numerically-exact trajectory agreement, plus Algorithm-1
+runtime per call (the sampling engine's inner loop cost).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ns_solver, schedulers, solvers, st_solvers, st_transform, taxonomy, toy
+from repro.core.bns import solver_to_ns
+from repro.core.bst_solver import bst_euler_program, identity_bst, materialize_bst
+from repro.core.exponential import ddim_program, dpm2m_program, exp_grid
+
+
+def run(log=print):
+    sched = schedulers.fm_ot()
+    field = toy.mixture_field(sched, toy.two_moons_means(),
+                              jnp.full((16,), 0.15), jnp.ones((16,)))
+    x0 = jax.random.normal(jax.random.PRNGKey(0), (64, 2))
+    rows = []
+
+    cases = []
+    for name in ["euler", "midpoint", "heun", "rk4", "ab2", "ab4"]:
+        grid = solvers.grid_for_nfe(name, 8)
+        cases.append((name, solvers.solver_program(name), (grid,)))
+    for name, prog in [("ddim", ddim_program), ("dpm2m", dpm2m_program)]:
+        cases.append((name, prog, (exp_grid(sched, 8), sched)))
+    st = st_transform.scheduler_change_st(sched, st_transform.scaled_sigma(sched, 3.0))
+    cases.append(("st_euler_sigma3", st_solvers.st_program(solvers.euler_program, st),
+                  (solvers.uniform_grid(8),)))
+    cases.append(("edm_heun", st_solvers.edm_program(solvers.heun_program, sched, 20.0),
+                  (solvers.power_grid(4, 3.0),)))
+    cases.append(("bst_euler", bst_euler_program,
+                  (materialize_bst(identity_bst(8)),)))
+
+    for name, prog, args in cases:
+        direct = taxonomy.run_direct(prog, field, x0, *args)
+        ns = taxonomy.to_ns(prog, *args)
+        sample = jax.jit(lambda x, p=ns: ns_solver.ns_sample(p, field.fn, x))
+        out = sample(x0)
+        err = float(jnp.max(jnp.abs(out - direct)))
+        out.block_until_ready()
+        t0 = time.time()
+        for _ in range(20):
+            sample(x0).block_until_ready()
+        us = (time.time() - t0) / 20 * 1e6
+        rows.append({"solver": name, "n": ns.n, "max_err": err,
+                     "alg1_us_per_call": us})
+        log(f"[{'PASS' if err < 1e-3 else 'FAIL'}] {name:16s} -> NS(n={ns.n}) "
+            f"max|direct - Alg.1| = {err:.2e}  ({us:.0f} us/call)")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,54 @@
+"""Quickstart: distill a BNS solver for an analytic flow model in ~1 minute.
+
+  PYTHONPATH=src python examples/quickstart.py
+
+Steps (the whole paper in miniature):
+  1. take a 'pre-trained' flow model — the exact mixture velocity field;
+  2. generate (noise, sample) pairs with adaptive RK45 (the GT sampler);
+  3. convert baselines (Euler/Midpoint/DDIM/DPM++) to NS form and score them;
+  4. optimize a Bespoke Non-Stationary solver (Algorithm 2) at NFE=8;
+  5. print the PSNR leaderboard — BNS should win by several dB.
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core import ns_solver, schedulers, toy
+from repro.core.bns import (
+    BNSTrainConfig, generate_pairs, psnr, solver_to_ns, train_bns,
+)
+
+NFE = 8
+
+
+def main():
+    sched = schedulers.fm_ot()
+    field = toy.mixture_field(sched, toy.two_moons_means(),
+                              jnp.full((16,), 0.15), jnp.ones((16,)))
+
+    print("generating RK45 ground-truth pairs...")
+    train = generate_pairs(field, jax.random.PRNGKey(0), 256, (2,))
+    val = generate_pairs(field, jax.random.PRNGKey(1), 256, (2,))
+
+    scores = {}
+    for name in ["euler", "midpoint", "ddim", "dpm2m"]:
+        ns = solver_to_ns(name, NFE, field)
+        xh = ns_solver.ns_sample(ns, field.fn, val[0])
+        scores[name] = float(jnp.mean(psnr(xh, val[1])))
+
+    print(f"training BNS solver (NFE={NFE}, "
+          f"{ns_solver.count_parameters(NFE)} parameters)...")
+    cfg = BNSTrainConfig(nfe=NFE, init_solver="midpoint", iterations=800,
+                         val_every=100, batch_size=64)
+    res = train_bns(field, train, val, cfg,
+                    log=lambda m: print("  " + m))
+    scores["BNS (ours)"] = res.val_psnr
+
+    print(f"\nPSNR @ {NFE} NFE (vs RK45 ground truth):")
+    for name, s in sorted(scores.items(), key=lambda kv: kv[1]):
+        print(f"  {name:12s} {s:6.2f} dB")
+    assert scores["BNS (ours)"] == max(scores.values())
+    print("\nBNS wins — the paper's headline result, reproduced.")
+
+
+if __name__ == "__main__":
+    main()

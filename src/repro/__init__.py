@@ -1,0 +1,4 @@
+"""repro — Bespoke Non-Stationary Solvers (Shaul et al., ICML 2024) as a
+production multi-pod JAX framework. See README.md and DESIGN.md."""
+
+__version__ = "1.0.0"

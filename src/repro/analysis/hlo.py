@@ -1,0 +1,257 @@
+"""Trip-count-aware cost extraction from optimized HLO text.
+
+``compiled.cost_analysis()`` counts each while-loop body ONCE — for layer
+scans this under-reports FLOPs/bytes by the layer count. This analyzer parses
+``compiled.as_text()``, builds the call graph, multiplies every computation's
+cost by the product of enclosing ``known_trip_count``s, and returns per-device
+totals:
+
+  flops        — matmul FLOPs (dot ops: 2 * prod(out) * prod(contract dims);
+                 the MFU convention — elementwise flops are ignored)
+  bytes        — approximate HBM traffic: sum of operand+output bytes over
+                 materializing ops (fusions count their boundary tensors only,
+                 which is exactly the fused traffic)
+  collectives  — output bytes + op counts per collective kind
+
+Approximations are documented in EXPERIMENTS.md §Roofline; exactness is not
+required — the roofline needs the right order of magnitude and the right
+*ratios* between candidate optimizations.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {"bf16": 2, "f16": 2, "f32": 4, "f64": 8, "s32": 4, "u32": 4,
+                "s8": 1, "u8": 1, "s16": 2, "u16": 2, "pred": 1, "s64": 8,
+                "u64": 8, "c64": 8, "c128": 16, "token": 0, "s4": 1, "u4": 1}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_HEAD_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*")
+
+
+def _parse_op_line(line: str):
+    """Split an HLO op line into (name, type_str, kind, rest) or None.
+
+    Tuple types may contain `/*index=N*/` comments and layout braces, so the
+    type is scanned with balanced parentheses rather than a regex.
+    """
+    m = _OP_HEAD_RE.match(line)
+    if not m:
+        return None
+    name = m.group(1)
+    i = m.end()
+    n = len(line)
+    if i < n and line[i] == "(":
+        depth = 0
+        j = i
+        while j < n:
+            if line[j] == "(":
+                depth += 1
+            elif line[j] == ")":
+                depth -= 1
+                if depth == 0:
+                    j += 1
+                    break
+            j += 1
+        type_str = line[i:j]
+    else:
+        j = i
+        while j < n and not line[j].isspace():
+            j += 1
+        type_str = line[i:j]
+    km = re.match(r"\s+([\w\-$]+)\(", line[j:])
+    if not km:
+        return None
+    kind = km.group(1)
+    rest = line[j + km.end():]
+    return name, type_str, kind, rest
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s*->\s*.*\{\s*$")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLED_RE = re.compile(
+    r"(?:body|condition|calls|to_apply)=%?([\w.\-]+)"
+    r"|branch_computations=\{([^}]*)\}")
+
+# Ops whose operands/outputs we count as memory traffic. TPU-fusion-optimistic
+# model: top-level elementwise ops (add/multiply/convert/...) are EXCLUDED —
+# the TPU backend fuses them into neighbors, while the CPU backend we compile
+# with leaves them top-level and inserts bf16->f32 convert copies a TPU would
+# never emit. What remains: matmul operand/result traffic, fusion boundaries,
+# slice/update traffic (KV caches), reductions, and collectives.
+_TRAFFIC_KINDS = {
+    "fusion", "dot", "copy", "dynamic-slice", "dynamic-update-slice",
+    "slice", "concatenate", "reduce", "reduce-window", "pad",
+    "gather", "scatter", "sort", "reverse",
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+}
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(type_str: str):
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return None, ()
+    dims = tuple(int(d) for d in m.group(2).split(",") if d)
+    return m.group(1), dims
+
+
+@dataclasses.dataclass
+class _Op:
+    name: str
+    kind: str
+    type_str: str
+    rest: str        # operand list + attrs
+
+
+@dataclasses.dataclass
+class _Computation:
+    name: str
+    ops: list
+    shapes: dict     # value name -> type string
+
+
+def parse_module(text: str) -> dict:
+    comps: dict[str, _Computation] = {}
+    cur = None
+    for line in text.splitlines():
+        mc = _COMP_RE.match(line)
+        if mc and ("{" in line):
+            cur = _Computation(name=mc.group(1), ops=[], shapes={})
+            comps[cur.name] = cur
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        parsed = _parse_op_line(line)
+        if parsed:
+            name, type_str, kind, rest = parsed
+            op = _Op(name=name, kind=kind, type_str=type_str, rest=rest)
+            cur.ops.append(op)
+            cur.shapes[op.name] = op.type_str
+    return comps
+
+
+def _dot_flops(op: _Op, shapes: dict) -> float:
+    _, out_dims = _shape_dims(op.type_str)
+    out_n = 1
+    for d in out_dims:
+        out_n *= d
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.rest)
+    contract = 1
+    if m:
+        # first operand name
+        ops_m = re.match(r"\s*%([\w.\-]+)", op.rest)
+        lhs_dims = ()
+        if ops_m and ops_m.group(1) in shapes:
+            _, lhs_dims = _shape_dims(shapes[ops_m.group(1)])
+        for idx in m.group(1).split(","):
+            if idx and lhs_dims and int(idx) < len(lhs_dims):
+                contract *= lhs_dims[int(idx)]
+    return 2.0 * out_n * contract
+
+
+def _operand_bytes(op: _Op, shapes: dict) -> int:
+    # operands = %refs before the closing paren of the operand list
+    depth, i, end = 1, 0, len(op.rest)
+    while i < end and depth > 0:
+        if op.rest[i] == "(":
+            depth += 1
+        elif op.rest[i] == ")":
+            depth -= 1
+        i += 1
+    operand_str = op.rest[:i]
+    total = 0
+    for ref in re.findall(r"%([\w.\-]+)", operand_str):
+        if ref in shapes:
+            total += _shape_bytes(shapes[ref])
+    return total
+
+
+def analyze(text: str) -> dict:
+    comps = parse_module(text)
+    entry = None
+    for line in text.splitlines():
+        if line.startswith("ENTRY"):
+            m = re.match(r"ENTRY\s+%?([\w.\-]+)", line)
+            if m:
+                entry = m.group(1)
+            break
+    if entry is None or entry not in comps:
+        # fall back: the computation with the most ops
+        entry = max(comps, key=lambda c: len(comps[c].ops))
+
+    memo: dict[str, dict] = {}
+
+    def comp_cost(name: str) -> dict:
+        if name in memo:
+            return memo[name]
+        memo[name] = {"flops": 0.0, "bytes": 0.0,
+                      "collectives": defaultdict(float)}  # break cycles
+        comp = comps.get(name)
+        if comp is None:
+            return memo[name]
+        out = {"flops": 0.0, "bytes": 0.0, "collectives": defaultdict(float)}
+        for op in comp.ops:
+            if op.kind == "dot":
+                out["flops"] += _dot_flops(op, comp.shapes)
+            if op.kind in _TRAFFIC_KINDS:
+                if op.kind in ("dynamic-slice", "slice", "gather"):
+                    # reads only the slice, not the whole operand
+                    out["bytes"] += 2 * _shape_bytes(op.type_str)
+                elif op.kind == "dynamic-update-slice":
+                    # in-place read-modify-write of the update region
+                    ops_m = re.findall(r"%([\w.\-]+)", op.rest)
+                    upd = next((comp.shapes[o] for o in ops_m[1:2]
+                                if o in comp.shapes), op.type_str)
+                    out["bytes"] += 2 * _shape_bytes(upd)
+                else:
+                    out["bytes"] += _shape_bytes(op.type_str) + \
+                        _operand_bytes(op, comp.shapes)
+            if op.kind in _COLLECTIVES:
+                out["collectives"][op.kind] += _shape_bytes(op.type_str)
+                out["collectives"][op.kind + "_count"] += 1
+            # called computations: while bodies run trip-count times and
+            # propagate full costs; fusions/to_apply propagate FLOPs only
+            # (their boundary traffic is already counted at the fusion op).
+            trip = 1
+            if op.kind == "while":
+                mt = _TRIP_RE.search(op.rest)
+                trip = int(mt.group(1)) if mt else 1
+            fused_call = op.kind in ("fusion", "reduce", "reduce-window",
+                                     "scatter", "sort", "map")
+            for m in _CALLED_RE.finditer(op.rest):
+                names = [m.group(1)] if m.group(1) else \
+                    re.findall(r"%([\w.\-]+)", m.group(2) or "")
+                for cn in names:
+                    if cn not in comps:
+                        continue
+                    sub = comp_cost(cn)
+                    out["flops"] += trip * sub["flops"]
+                    if not fused_call:
+                        out["bytes"] += trip * sub["bytes"]
+                    for k, v in sub["collectives"].items():
+                        out["collectives"][k] += trip * v
+        memo[name] = out
+        return out
+
+    res = comp_cost(entry)
+    return {"flops": res["flops"], "bytes": res["bytes"],
+            "collectives": dict(res["collectives"])}

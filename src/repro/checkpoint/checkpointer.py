@@ -1,0 +1,60 @@
+"""Msgpack pytree checkpointer (no orbax in the environment).
+
+Stores arrays as raw bytes with dtype/shape metadata; the tree structure is
+serialized as nested dicts/lists keyed by path. Restores onto the template's
+treedef, so NamedTuples and custom nodes round-trip.
+"""
+from __future__ import annotations
+
+import os
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+def _pack_leaf(x) -> dict:
+    arr = np.asarray(x)
+    return {b"dtype": arr.dtype.str.encode(), b"shape": list(arr.shape),
+            b"data": arr.tobytes()}
+
+
+def _unpack_leaf(d: dict) -> np.ndarray:
+    return np.frombuffer(d[b"data"], dtype=np.dtype(d[b"dtype"].decode())) \
+        .reshape(d[b"shape"])
+
+
+def save(path: str, tree: Any) -> None:
+    leaves = jax.tree.leaves(tree)
+    payload = {b"leaves": [_pack_leaf(l) for l in leaves]}
+    tmp = path + ".tmp"
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    with open(tmp, "wb") as f:
+        f.write(msgpack.packb(payload))
+    os.replace(tmp, path)
+
+
+def restore(path: str, template: Any) -> Any:
+    with open(path, "rb") as f:
+        payload = msgpack.unpackb(f.read())
+    leaves = [jnp.asarray(_unpack_leaf(d)) for d in payload[b"leaves"]]
+    treedef = jax.tree.structure(template)
+    t_leaves = jax.tree.leaves(template)
+    assert len(leaves) == len(t_leaves), (
+        f"checkpoint has {len(leaves)} leaves, template {len(t_leaves)}")
+    leaves = [l.astype(t.dtype) for l, t in zip(leaves, t_leaves)]
+    return jax.tree.unflatten(treedef, leaves)
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(f.split("_")[1].split(".")[0]) for f in os.listdir(ckpt_dir)
+             if f.startswith("step_") and f.endswith(".msgpack")]
+    return max(steps) if steps else None
+
+
+def step_path(ckpt_dir: str, step: int) -> str:
+    return os.path.join(ckpt_dir, f"step_{step}.msgpack")

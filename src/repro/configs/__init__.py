@@ -1,0 +1,32 @@
+"""Architecture registry: --arch <id> resolves here."""
+import importlib
+
+from repro.configs.base import ModelConfig, MoEConfig, SSMConfig, FrontendStub
+
+ARCHS = (
+    "yi-6b",
+    "phi3-medium-14b",
+    "command-r-35b",
+    "zamba2-2.7b",
+    "yi-34b",
+    "whisper-medium",
+    "qwen3-moe-235b-a22b",
+    "qwen3-moe-30b-a3b",
+    "rwkv6-7b",
+    "internvl2-26b",
+)
+
+
+def _module(arch: str):
+    return importlib.import_module("repro.configs." + arch.replace("-", "_").replace(".", "_"))
+
+
+def get_config(arch: str, smoke: bool = False) -> ModelConfig:
+    if arch not in ARCHS:
+        raise KeyError(f"unknown arch {arch!r}; have {ARCHS}")
+    mod = _module(arch)
+    return mod.smoke_config() if smoke else mod.config()
+
+
+__all__ = ["ARCHS", "get_config", "ModelConfig", "MoEConfig", "SSMConfig",
+           "FrontendStub"]

@@ -1,0 +1,33 @@
+"""repro.core — Bespoke Non-Stationary solvers (Shaul et al., ICML 2024).
+
+Public API:
+  schedulers:      fm_ot, fm_cs, vp, ve, scaled_sigma, get_scheduler
+  parametrization: as_velocity_field (velocity / eps-pred / x-pred)
+  solvers:         generic programs + grids;  exponential: ddim, dpm2m
+  st:              scheduler_change_st, transformed_field, precondition
+  ns_solver:       NSParams / BNSParams, ns_sample (Algorithm 1)
+  taxonomy:        to_ns / run_direct (Theorem 3.2, executable)
+  bns:             generate_pairs, train_bns / train_bst (Algorithm 2)
+"""
+from repro.core import (
+    anytime,
+    bns,
+    bst_solver,
+    cfg,
+    exponential,
+    ns_solver,
+    parametrization,
+    rk45,
+    schedulers,
+    solvers,
+    st_solvers,
+    st_transform,
+    taxonomy,
+    toy,
+)
+
+__all__ = [
+    "anytime", "bns", "bst_solver", "cfg", "exponential", "ns_solver", "parametrization",
+    "rk45", "schedulers", "solvers", "st_solvers", "st_transform", "taxonomy",
+    "toy",
+]

@@ -1,0 +1,149 @@
+"""Non-Stationary (NS) solvers — the paper's core object (Sec. 3.1).
+
+An n-step NS solver is a time grid of evaluation times ``t_0 <= ... <= t_{n-1}``
+plus per-step update rules in the canonical form of Prop. 3.1:
+
+    x_{i+1} = x0 * a_i + sum_{j<=i} b_{ij} u_j,      u_j = u_{t_j}(x_j)
+
+Algorithm 1 (sampling) is implemented with ``lax.scan`` so it is jit-able and
+reverse-mode differentiable (BNS training backprops through every model eval).
+
+Two dtype-level representations:
+  * ``NSParams``  — the solver itself (times (n,), a (n,), b (n,n) lower-tri).
+  * ``BNSParams`` — an unconstrained reparameterization used for optimization
+    (times via softmax-cumsum so the grid stays monotone in [0,1)).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+class NSParams(NamedTuple):
+    """Canonical NS solver parameters.
+
+    times: (n,) evaluation times, t_0 = 0, non-decreasing, < 1.
+    a:     (n,) coefficient of x0 per update rule.
+    b:     (n, n) velocity coefficients; row i uses entries j <= i only.
+    """
+
+    times: Array
+    a: Array
+    b: Array
+
+    @property
+    def n(self) -> int:
+        return self.a.shape[0]
+
+    def num_parameters(self) -> int:
+        """Paper's p = n(n+5)/2 + 1: grid (n+1 with both endpoints pinned ->
+        n-1 free) + n a's + n(n+1)/2 b's. We count as the paper does."""
+        n = self.n
+        return n * (n + 5) // 2 + 1
+
+
+def tril_mask(n: int) -> Array:
+    return jnp.tril(jnp.ones((n, n), dtype=bool))
+
+
+def ns_sample(
+    params: NSParams,
+    u_fn: Callable[[Array, Array], Array],
+    x0: Array,
+    *,
+    unroll: bool = False,
+    update_fn: Callable[..., Array] | None = None,
+) -> Array:
+    """Algorithm 1: sample with an NS solver.
+
+    x0: (..., d) initial noise. u_fn(t, x) -> velocity, vmapped over batch by
+    the caller's model. ``update_fn(x0, U, a_i, w_i) -> x_{i+1}`` may override
+    the weighted-sum update (e.g. the Pallas ``ns_update`` kernel).
+    """
+    n = params.n
+    mask = tril_mask(n)
+    b = jnp.where(mask, params.b, 0.0)
+
+    if update_fn is None:
+        def update_fn(x_init, U, a_i, w_i):
+            return a_i * x_init + jnp.tensordot(w_i, U, axes=(0, 0))
+
+    def step(carry, i):
+        x, U = carry
+        u = u_fn(params.times[i], x)
+        U = jax.lax.dynamic_update_index_in_dim(U, u, i, axis=0)
+        w = jnp.where(jnp.arange(n) <= i, b[i], 0.0)
+        x_next = update_fn(x0, U, params.a[i], w)
+        return (x_next, U), None
+
+    U0 = jnp.zeros((n,) + x0.shape, dtype=x0.dtype)
+    if unroll:
+        carry = (x0, U0)
+        for i in range(n):
+            carry, _ = step(carry, i)
+        return carry[0]
+    (x_final, _), _ = jax.lax.scan(step, (x0, U0), jnp.arange(n))
+    return x_final
+
+
+def ns_trajectory(
+    params: NSParams, u_fn: Callable[[Array, Array], Array], x0: Array
+) -> Array:
+    """Like ``ns_sample`` but returns all trajectory points (n+1, ...)."""
+    n = params.n
+    mask = tril_mask(n)
+    b = jnp.where(mask, params.b, 0.0)
+
+    def step(carry, i):
+        x, U = carry
+        u = u_fn(params.times[i], x)
+        U = jax.lax.dynamic_update_index_in_dim(U, u, i, axis=0)
+        w = jnp.where(jnp.arange(n) <= i, b[i], 0.0)
+        x_next = params.a[i] * x0 + jnp.tensordot(w, U, axes=(0, 0))
+        return (x_next, U), x_next
+
+    U0 = jnp.zeros((n,) + x0.shape, dtype=x0.dtype)
+    (_, _), xs = jax.lax.scan(step, (x0, U0), jnp.arange(n))
+    return jnp.concatenate([x0[None], xs], axis=0)
+
+
+# ---------------------------------------------------------------------------
+# Optimization reparameterization (BNS)
+# ---------------------------------------------------------------------------
+
+
+class BNSParams(NamedTuple):
+    """Unconstrained parameterization of NSParams for gradient optimization.
+
+    time_logits: (n,) — softmax gives n positive increments d_i summing to 1;
+        eval times are t_0 = 0, t_i = d_0 + ... + d_{i-1}  (so t_{n-1} < 1).
+    a, b: unconstrained; b is masked to lower-triangular on materialization.
+    """
+
+    time_logits: Array
+    a: Array
+    b: Array
+
+
+def materialize(p: BNSParams) -> NSParams:
+    d = jax.nn.softmax(p.time_logits)
+    t = jnp.concatenate([jnp.zeros((1,), d.dtype), jnp.cumsum(d)[:-1]])
+    return NSParams(times=t, a=p.a, b=jnp.where(tril_mask(p.a.shape[0]), p.b, 0.0))
+
+
+def from_ns(params: NSParams) -> BNSParams:
+    """Inverse of ``materialize`` (up to softmax shift): init BNS from any NS solver."""
+    t = params.times
+    n = params.n
+    gaps = jnp.diff(jnp.concatenate([t, jnp.ones((1,), t.dtype)]))
+    logits = jnp.log(jnp.maximum(gaps, 1e-8))
+    return BNSParams(time_logits=logits, a=params.a, b=params.b)
+
+
+def count_parameters(n: int) -> int:
+    """Paper's parameter count for an n-step NS solver: n(n+5)/2 + 1."""
+    return n * (n + 5) // 2 + 1

@@ -1,0 +1,164 @@
+"""Gaussian-path schedulers (alpha_t, sigma_t) and their calculus.
+
+Conventions follow the paper (Shaul et al., ICML 2024): t=0 is source/noise,
+t=1 is data, ``alpha_0 = 0 = sigma_1``, ``alpha_1 = 1``, ``sigma_0 > 0``
+(eq. 4), and the signal-to-noise ratio ``snr(t) = alpha_t / sigma_t`` is
+strictly monotonically increasing.
+
+Every scheduler exposes ``alpha``/``sigma`` plus an analytic ``snr_inverse``
+so that Scale-Time transforms (eq. 8) are exact, and all time-functions are
+differentiable (derivatives via jax.jvp), so transformed velocity fields
+(eq. 7) need no hand-written derivatives.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+# Clip away from the endpoints where snr is 0/inf.
+_EPS = 1e-6
+
+
+def _d(fn: Callable[[Array], Array], t: Array) -> Array:
+    """Scalar-function time derivative via jvp (works under jit/vmap)."""
+    _, dot = jax.jvp(fn, (t,), (jnp.ones_like(t),))
+    return dot
+
+
+@dataclasses.dataclass(frozen=True)
+class Scheduler:
+    """A Gaussian-path scheduler (alpha_t, sigma_t).
+
+    ``snr_inverse`` maps an snr value back to t: t = snr^{-1}(v). It must be
+    exact for the snr range the scheduler produces on (0, 1).
+    """
+
+    name: str
+    alpha: Callable[[Array], Array]
+    sigma: Callable[[Array], Array]
+    snr_inverse: Callable[[Array], Array]
+
+    def snr(self, t: Array) -> Array:
+        return self.alpha(t) / self.sigma(t)
+
+    def lam(self, t: Array) -> Array:
+        """Half log-SNR's big brother: lambda_t = log snr(t) (paper's eq. 22)."""
+        return jnp.log(self.snr(t))
+
+    def dalpha(self, t: Array) -> Array:
+        return _d(self.alpha, t)
+
+    def dsigma(self, t: Array) -> Array:
+        return _d(self.sigma, t)
+
+    def clip_t(self, t: Array) -> Array:
+        return jnp.clip(t, _EPS, 1.0 - _EPS)
+
+
+# ---------------------------------------------------------------------------
+# Concrete schedulers
+# ---------------------------------------------------------------------------
+
+def fm_ot() -> Scheduler:
+    """Conditional-OT / rectified-flow scheduler: alpha=t, sigma=1-t (eq. 57)."""
+
+    return Scheduler(
+        name="fm_ot",
+        alpha=lambda t: t,
+        sigma=lambda t: 1.0 - t,
+        # snr = t/(1-t)  =>  t = snr/(1+snr)
+        snr_inverse=lambda v: v / (1.0 + v),
+    )
+
+
+def fm_cs() -> Scheduler:
+    """Cosine scheduler (FM/v-CS): alpha=sin(pi t/2), sigma=cos(pi t/2) (eq. 58)."""
+
+    half_pi = jnp.pi / 2.0
+    return Scheduler(
+        name="fm_cs",
+        alpha=lambda t: jnp.sin(half_pi * t),
+        sigma=lambda t: jnp.cos(half_pi * t),
+        # snr = tan(pi t / 2)  =>  t = (2/pi) atan(snr)
+        snr_inverse=lambda v: jnp.arctan(v) / half_pi,
+    )
+
+
+def vp(big_b: float = 20.0, small_b: float = 0.1) -> Scheduler:
+    """Variance-Preserving scheduler (eq. 60).
+
+    alpha_t = xi_{1-t}, sigma_t = sqrt(1 - xi_{1-t}^2),
+    xi_s = exp(-s^2 (B - b)/4 - s b / 2), with B=20, b=0.1.
+    """
+
+    def xi(s: Array) -> Array:
+        return jnp.exp(-0.25 * s**2 * (big_b - small_b) - 0.5 * s * small_b)
+
+    def alpha(t: Array) -> Array:
+        return xi(1.0 - t)
+
+    def sigma(t: Array) -> Array:
+        return jnp.sqrt(jnp.maximum(1.0 - xi(1.0 - t) ** 2, 1e-20))
+
+    def snr_inverse(v: Array) -> Array:
+        # snr = xi / sqrt(1 - xi^2)  =>  xi = v / sqrt(1 + v^2)
+        # log xi = -(B-b)/4 s^2 - b/2 s  => quadratic in s = 1 - t.
+        log_xi = jnp.log(v) - 0.5 * jnp.log1p(v**2)
+        a_q = 0.25 * (big_b - small_b)
+        b_q = 0.5 * small_b
+        # a_q s^2 + b_q s + log_xi = 0, take the positive root.
+        disc = jnp.sqrt(jnp.maximum(b_q**2 - 4.0 * a_q * log_xi, 0.0))
+        s = (-b_q + disc) / (2.0 * a_q)
+        return 1.0 - s
+
+    return Scheduler(name="vp", alpha=alpha, sigma=sigma, snr_inverse=snr_inverse)
+
+
+def ve(sigma_max: float = 80.0) -> Scheduler:
+    """Variance-Exploding / EDM target scheduler (eq. 16).
+
+    alpha_r = 1, sigma_r = sigma_max (1 - r). Note alpha_0 != 0; this is the
+    *target* of EDM's scheduler change, valid as such (the paper, sec 3.3.2).
+    """
+
+    return Scheduler(
+        name="ve",
+        alpha=lambda t: jnp.ones_like(t),
+        sigma=lambda t: sigma_max * (1.0 - t),
+        # snr = 1 / (sigma_max (1 - r))  =>  r = 1 - 1/(sigma_max v)
+        snr_inverse=lambda v: 1.0 - 1.0 / (sigma_max * v),
+    )
+
+
+def scaled_sigma(base: Scheduler, sigma0: float) -> Scheduler:
+    """Preconditioning scheduler change of eq. 14: sigma->sigma0*sigma, alpha kept.
+
+    Corresponds to a source distribution with std sigma0.
+    """
+
+    return Scheduler(
+        name=f"{base.name}_s{sigma0:g}",
+        alpha=base.alpha,
+        sigma=lambda t: sigma0 * base.sigma(t),
+        # snr_new(t) = snr_base(t)/sigma0  =>  inverse(v) = base_inverse(v*sigma0)
+        snr_inverse=lambda v: base.snr_inverse(v * sigma0),
+    )
+
+
+_REGISTRY: dict[str, Callable[[], Scheduler]] = {
+    "fm_ot": fm_ot,
+    "fm_cs": fm_cs,
+    "vp": vp,
+    "ve": ve,
+}
+
+
+def get_scheduler(name: str) -> Scheduler:
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown scheduler {name!r}; have {sorted(_REGISTRY)}")
+    return _REGISTRY[name]()

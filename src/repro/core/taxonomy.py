@@ -1,0 +1,183 @@
+"""Solver taxonomy engine (Theorem 3.2, Figure 3).
+
+Every solver used to sample diffusion/flow models — generic RK/multistep,
+exponential integrators (DDIM/DPM++), EDM, and Scale-Time solvers — has
+update rules that are *linear* in the trajectory points and the model's
+velocity evaluations. Theorem 3.2 says they are therefore all members of the
+Non-Stationary family.
+
+This module makes that theorem executable: solver "programs" are written once
+against an abstract linear-algebra backend, and running a program under
+
+  * ``NumericBackend``  — executes the solver directly on arrays;
+  * ``SymbolicBackend`` — tracks every point as ``a * x0 + sum_j b_j u_j``
+    and emits the canonical NS parameters (Prop. 3.1) of that very solver.
+
+``to_ns(program, ...)`` is then the constructive proof of the inclusion, and
+the tests assert exact numerical agreement between the direct run and
+Algorithm 1 on the converted parameters.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Protocol, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.ns_solver import NSParams
+from repro.core.parametrization import VelocityField
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Backends
+# ---------------------------------------------------------------------------
+
+
+class Backend(Protocol):
+    def initial(self): ...
+    def eval_u(self, t, point): ...
+    def combine(self, terms: Sequence[tuple[Array, object]]): ...
+    def finalize(self, point): ...
+
+
+@dataclasses.dataclass
+class NumericBackend:
+    """Runs a solver program directly on arrays (the 'oracle' execution)."""
+
+    field: VelocityField
+    x0: Array
+    input_scale: Array | float = 1.0
+    output_scale: Array | float = 1.0
+    result: Array | None = None
+    nfe: int = 0
+
+    def initial(self):
+        return self.input_scale * self.x0
+
+    def eval_u(self, t, point):
+        self.nfe += 1
+        return self.field.fn(jnp.asarray(t), point)
+
+    def combine(self, terms):
+        out = None
+        for c, p in terms:
+            contrib = c * p
+            out = contrib if out is None else out + contrib
+        return out
+
+    def finalize(self, point):
+        self.result = self.output_scale * point
+        return self.result
+
+
+@dataclasses.dataclass(frozen=True)
+class Lin:
+    """a * x0 + sum_j b_j u_j, coefficients are (traced) scalars."""
+
+    a: Array
+    b: tuple[Array, ...]
+
+    def scaled(self, c) -> "Lin":
+        return Lin(a=c * self.a, b=tuple(c * bj for bj in self.b))
+
+
+def _lin_add(x: Lin, y: Lin) -> Lin:
+    k = max(len(x.b), len(y.b))
+    pad = lambda b: b + (jnp.asarray(0.0),) * (k - len(b))
+    xb, yb = pad(x.b), pad(y.b)
+    return Lin(a=x.a + y.a, b=tuple(xj + yj for xj, yj in zip(xb, yb)))
+
+
+@dataclasses.dataclass
+class SymbolicBackend:
+    """Tracks solver points symbolically and emits NS parameters.
+
+    NS structural invariant: every model evaluation must happen at the point
+    produced by the previous update rule (or at x0 for the first). The
+    backend enforces this by registering each eval's point as the next
+    trajectory point.
+    """
+
+    input_scale: Array | float = 1.0
+    output_scale: Array | float = 1.0
+
+    def __post_init__(self):
+        self.times: list[Array] = []
+        self.updates: list[Lin] = []  # Lin for x_1, ..., x_n
+        self._initial = Lin(a=jnp.asarray(self.input_scale, jnp.float64
+                                          if jax.config.jax_enable_x64 else jnp.float32),
+                            b=())
+        self._expected_next: Lin | None = self._initial
+
+    def initial(self) -> Lin:
+        return self._initial
+
+    def eval_u(self, t, point: Lin) -> Lin:
+        i = len(self.times)
+        if i > 0:
+            # point becomes trajectory point x_i = output of update rule i-1.
+            self.updates.append(point)
+        self.times.append(jnp.asarray(t))
+        b = (jnp.asarray(0.0),) * i + (jnp.asarray(1.0),)
+        return Lin(a=jnp.asarray(0.0), b=b)
+
+    def combine(self, terms) -> Lin:
+        out = None
+        for c, p in terms:
+            contrib = p.scaled(jnp.asarray(c))
+            out = contrib if out is None else _lin_add(out, contrib)
+        return out
+
+    def finalize(self, point: Lin) -> Lin:
+        final = point.scaled(jnp.asarray(self.output_scale))
+        self.updates.append(final)
+        return final
+
+    def ns_params(self) -> NSParams:
+        n = len(self.times)
+        assert len(self.updates) == n, (
+            f"program registered {len(self.updates)} updates for {n} evals; "
+            "every eval must consume the previous update's output"
+        )
+        times = jnp.stack(self.times)
+        a = jnp.stack([up.a for up in self.updates])
+        b = jnp.zeros((n, n))
+        for i, up in enumerate(self.updates):
+            assert len(up.b) <= i + 1, f"update {i} uses future velocities"
+            for j, bj in enumerate(up.b):
+                b = b.at[i, j].set(bj)
+        return NSParams(times=times, a=a, b=b)
+
+
+# ---------------------------------------------------------------------------
+# Conversion entry points
+# ---------------------------------------------------------------------------
+
+Program = Callable[..., None]
+
+
+def to_ns(program: Program, *args, input_scale=1.0, output_scale=1.0, **kwargs) -> NSParams:
+    """Run ``program`` symbolically; return its canonical NS parameters."""
+    be = SymbolicBackend(input_scale=input_scale, output_scale=output_scale)
+    program(be, *args, **kwargs)
+    return be.ns_params()
+
+
+def run_direct(
+    program: Program,
+    field: VelocityField,
+    x0: Array,
+    *args,
+    input_scale=1.0,
+    output_scale=1.0,
+    **kwargs,
+) -> Array:
+    """Run ``program`` numerically (the solver's direct implementation)."""
+    be = NumericBackend(field=field, x0=x0, input_scale=input_scale,
+                        output_scale=output_scale)
+    program(be, *args, **kwargs)
+    assert be.result is not None, "program did not call finalize"
+    return be.result

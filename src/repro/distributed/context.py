@@ -1,0 +1,86 @@
+"""Ambient sharding context for model-internal sharding constraints.
+
+Models are mesh-agnostic; the launcher (dryrun/train) installs a context and
+the hot layers place `constrain(x, *spec)` hints. With no context installed
+(CPU smoke tests) every helper is a no-op.
+
+Policies (set by the launcher, measured in EXPERIMENTS.md §Perf):
+  seq_parallel_attn — shard attention over QUERY POSITIONS on the `model`
+      axis instead of heads. Needed when the head counts don't divide the
+      tensor axis (e.g. yi-34b: 56 heads / 8 KV on a 16-way axis), where
+      GSPMD otherwise replicates the batch and all-reduces S x S score
+      tensors.
+  q_chunk — blockwise online-softmax attention (flash-style in XLA): bounds
+      score-tensor residency for long prefill.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass
+class ShardingContext:
+    mesh: object
+    batch_axes: tuple
+    seq_parallel_attn: bool = False
+    q_chunk: int = 0
+    flash_attention: bool = False   # interpret-mode Pallas (prefill only)
+
+
+_CTX: Optional[ShardingContext] = None
+
+
+def install(mesh, *, seq_parallel_attn: bool = False, q_chunk: int = 0,
+            flash_attention: bool = False):
+    global _CTX
+    from repro.launch.mesh import batch_axes
+    b = batch_axes(mesh)
+    _CTX = ShardingContext(mesh=mesh, batch_axes=b,
+                           seq_parallel_attn=seq_parallel_attn,
+                           q_chunk=q_chunk, flash_attention=flash_attention)
+    return _CTX
+
+
+def clear():
+    global _CTX
+    _CTX = None
+
+
+def active() -> Optional[ShardingContext]:
+    return _CTX
+
+
+def batch_axis():
+    if _CTX is None:
+        return None
+    b = _CTX.batch_axes
+    return b if len(b) > 1 else b[0]
+
+
+def constrain(x, *spec):
+    """with_sharding_constraint when a context is installed; else identity.
+
+    "?" entries mean UNCONSTRAINED — GSPMD keeps whatever it inferred for
+    that dim (used to pin the batch dim of scan carries without disturbing
+    head/model sharding)."""
+    if _CTX is None:
+        return x
+    spec = tuple(P.UNCONSTRAINED if s == "?" else s for s in spec)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(_CTX.mesh, P(*spec)))
+
+
+def seq_parallel_attn_enabled() -> bool:
+    return _CTX is not None and _CTX.seq_parallel_attn
+
+
+def q_chunk() -> int:
+    return _CTX.q_chunk if _CTX is not None else 0
+
+
+def flash_attention_enabled() -> bool:
+    return _CTX is not None and _CTX.flash_attention

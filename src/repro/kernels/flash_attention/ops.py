@@ -1,0 +1,23 @@
+"""Jit'd wrapper for flash attention with layout adaptation to the model's
+(B, L, H, hd) convention and kernel/ref dispatch."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.flash_attention.flash_attention import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+def attend(q, k, v, *, causal: bool = True, use_kernel: bool = True,
+           interpret: bool | None = None):
+    """q: (B, L, H, hd); k, v: (B, L, KV, hd) — model layout."""
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    if not use_kernel:
+        out = attention_ref(qt, kt, vt, causal=causal)
+    else:
+        if interpret is None:
+            interpret = jax.default_backend() != "tpu"
+        out = flash_attention(qt, kt, vt, causal=causal, interpret=interpret)
+    return out.transpose(0, 2, 1, 3)

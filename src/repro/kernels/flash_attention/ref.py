@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for flash attention (GQA, causal)."""
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True) -> jax.Array:
+    """q: (B, H, Lq, hd); k, v: (B, KV, Lk, hd)."""
+    B, H, Lq, hd = q.shape
+    KV, Lk = k.shape[1], k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, KV, G, Lq, hd).astype(jnp.float32) * hd**-0.5
+    s = jnp.einsum("bkgqh,bksh->bkgqs", qg, k.astype(jnp.float32))
+    if causal:
+        mask = jnp.arange(Lq)[:, None] >= jnp.arange(Lk)[None, :]
+        s = jnp.where(mask, s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bksh->bkgqh", w, v.astype(jnp.float32))
+    return o.reshape(B, H, Lq, hd).astype(q.dtype)

@@ -1,0 +1,4 @@
+"""Pure-jnp oracle: the step-by-step recurrence (models.linear_scan is itself
+validated against this same recurrence; the kernel test uses the recurrent
+form directly so the oracle is independent of the chunked math)."""
+from repro.models.linear_scan import gla_recurrent as gla_ref  # noqa: F401

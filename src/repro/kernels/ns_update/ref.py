@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the NS update kernel."""
+import jax
+import jax.numpy as jnp
+
+
+def ns_update_ref(x0: jax.Array, u: jax.Array, a: jax.Array,
+                  w: jax.Array) -> jax.Array:
+    """x0: (B, ...); u: (n, B, ...); a scalar; w: (n,)."""
+    acc = a.astype(jnp.float32) * x0.astype(jnp.float32)
+    acc = acc + jnp.tensordot(w.astype(jnp.float32),
+                              u.astype(jnp.float32), axes=(0, 0))
+    return acc.astype(x0.dtype)

@@ -1,0 +1,297 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production meshes, and extract the roofline inputs from the compiled
+artifact. The two XLA_FLAGS lines above MUST run before any jax import —
+jax locks the device count at first init.
+
+Per combo this produces experiments/dryrun/<arch>__<shape>__<mesh>.json with:
+  memory_analysis  — bytes per device (argument/output/temp/peak)
+  cost_analysis    — HLO flops / bytes accessed
+  collectives      — bytes per collective kind parsed from optimized HLO
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch yi-6b --shape decode_32k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod-only]
+"""
+import argparse
+import gzip
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.analysis import hlo as hlo_analysis
+from repro.configs import ARCHS, get_config
+from repro.configs.base import active_param_count
+from repro.core.schedulers import get_scheduler
+from repro.distributed import context, sharding
+from repro.launch.mesh import batch_axes, make_production_mesh
+from repro.models import model as M
+from repro.optim import adam_init, adam_update
+
+# ---------------------------------------------------------------------------
+# Input shapes (assignment table)
+# ---------------------------------------------------------------------------
+
+SHAPES = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode_long", seq=524_288, batch=1),
+}
+
+LONG_WINDOW = 8192   # sliding-window size for dense archs on long_500k
+
+F32, BF16, I32 = jnp.float32, jnp.bfloat16, jnp.int32
+
+
+def skip_reason(arch: str, shape: str) -> str | None:
+    cfg = get_config(arch)
+    if shape == "long_500k":
+        if cfg.family == "encdec":
+            return ("whisper decoder is full-attention with a 448-token "
+                    "practical horizon; 500k decode is not meaningful "
+                    "(noted in DESIGN.md)")
+    return None
+
+
+def input_specs(arch: str, shape: str, mesh):
+    """ShapeDtypeStructs + NamedShardings for every model input of a combo."""
+    cfg = get_config(arch)
+    info = SHAPES[shape]
+    b = batch_axes(mesh)
+    b = b if len(b) > 1 else b[0]
+    B, S = info["batch"], info["seq"]
+    sds = jax.ShapeDtypeStruct
+
+    def sh(spec):
+        return NamedSharding(mesh, spec)
+
+    batch_s = b if B >= mesh.devices.size // mesh.shape["model"] else None
+
+    if info["kind"] in ("train", "prefill"):
+        specs = {"tokens": sds((B, S), I32, sharding=sh(P(batch_s, None)))}
+        fe = cfg.frontend
+        if fe is not None:
+            key = "frames" if fe.kind == "audio_frames" else "patches"
+            specs[key] = sds((B, fe.num_tokens, fe.embed_dim), BF16,
+                             sharding=sh(P(batch_s, None, None)))
+        return cfg, specs
+
+    # decode kinds: one token + state
+    window = 0
+    slots = S
+    if info["kind"] == "decode_long":
+        window = 0 if cfg.family in ("ssm",) else LONG_WINDOW
+        slots = LONG_WINDOW if window else S
+    state_shape = jax.eval_shape(
+        lambda: M.init_decode_state(cfg, B, slots, BF16,
+                                    num_frames=(cfg.frontend.num_tokens
+                                                if cfg.frontend else 1500)))
+    state_spec = sharding.state_specs(state_shape, cfg, mesh, B)
+    state = jax.tree.map(
+        lambda s, sp: sds(s.shape, s.dtype, sharding=sh(sp)),
+        state_shape, state_spec)
+    token = sds((B,), I32, sharding=sh(P(batch_s)))
+    return cfg, {"token": token, "state": state, "window": window}
+
+
+# ---------------------------------------------------------------------------
+# Step programs
+# ---------------------------------------------------------------------------
+
+
+def build_step(cfg, kind: str, mesh, window: int = 0):
+    sched = get_scheduler("fm_ot")
+
+    if kind == "train":
+        def train_step(params, opt, batch, rng):
+            loss, grads = jax.value_and_grad(
+                lambda p: M.cfm_loss(p, cfg, batch, rng, sched, remat=True))(params)
+            params, opt = adam_update(grads, opt, params, 1e-4)
+            return params, opt, loss
+        return train_step
+
+    if kind == "prefill":
+        def prefill_step(params, batch):
+            # serving prefill: next-token logits only (§Perf: projecting all
+            # 32k positions into (B, S, V) f32 dominated prefill traffic)
+            return M.lm_apply(params, cfg, batch, last_only=True)
+        return prefill_step
+
+    def serve_step(params, token, state):
+        return M.decode_apply(params, cfg, token, state, window=window)
+    return serve_step
+
+
+def lower_combo(arch: str, shape: str, mesh, mesh_name: str):
+    cfg, specs = input_specs(arch, shape, mesh)
+    kind = SHAPES[shape]["kind"]
+    params_shape = jax.eval_shape(
+        lambda: M.init_params(jax.random.PRNGKey(0), cfg, dtype=BF16))
+    p_specs = sharding.param_specs(params_shape, cfg, mesh)
+    p_sds = jax.tree.map(
+        lambda s, sp: jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                           sharding=NamedSharding(mesh, sp)),
+        params_shape, p_specs)
+
+    if kind == "train":
+        step = build_step(cfg, "train", mesh)
+        opt_shape = jax.eval_shape(adam_init, params_shape)
+        o_specs = sharding.param_specs(opt_shape, cfg, mesh)
+        o_sds = jax.tree.map(
+            lambda s, sp: jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                               sharding=NamedSharding(mesh, sp)),
+            opt_shape, o_specs)
+        rng = jax.ShapeDtypeStruct((2,), jnp.uint32,
+                                   sharding=NamedSharding(mesh, P()))
+        with mesh:
+            lowered = jax.jit(step).lower(p_sds, o_sds, specs, rng)
+    elif kind == "prefill":
+        step = build_step(cfg, "prefill", mesh)
+        with mesh:
+            lowered = jax.jit(step).lower(p_sds, specs)
+    else:
+        step = build_step(cfg, "decode", mesh, window=specs["window"])
+        with mesh:
+            lowered = jax.jit(step).lower(p_sds, specs["token"], specs["state"])
+    return cfg, lowered
+
+
+def run_combo(arch: str, shape: str, multi_pod: bool, outdir: str,
+              *, seq_par_attn: bool = False, q_chunk: int = 0,
+              flash: bool = False, tag: str = "") -> dict:
+    mesh_name = ("pod2x16x16" if multi_pod else "pod16x16") + \
+        (f"-{tag}" if tag else "")
+    reason = skip_reason(arch, shape)
+    rec = {"arch": arch, "shape": shape, "mesh": mesh_name}
+    if reason:
+        rec.update(status="skipped", reason=reason)
+        return rec
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    # always install: batch-pinning constraints are unconditional fixes;
+    # seq-parallel attention and q-chunking stay opt-in policies.
+    context.install(mesh, seq_parallel_attn=seq_par_attn, q_chunk=q_chunk,
+                    flash_attention=flash)
+    try:
+        cfg, lowered = lower_combo(arch, shape, mesh, mesh_name)
+    finally:
+        context.clear()
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo_text = compiled.as_text()
+    # trip-count-aware per-device totals (cost_analysis counts loop bodies once)
+    deep = hlo_analysis.analyze(hlo_text)
+    rec.update(
+        status="ok",
+        lower_s=round(t_lower, 1),
+        compile_s=round(t_compile, 1),
+        devices=int(mesh.devices.size),
+        memory={k: int(getattr(mem, k, 0)) for k in
+                ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "generated_code_size_in_bytes")}
+        if mem is not None else None,
+        flops_raw=float(cost.get("flops", -1)) if cost else None,
+        bytes_raw=float(cost.get("bytes accessed", -1)) if cost else None,
+        flops=deep["flops"],
+        bytes=deep["bytes"],
+        collectives=deep["collectives"],
+        param_count=int(cfg.param_count()),
+        active_param_count=int(active_param_count(cfg)),
+    )
+    os.makedirs(outdir, exist_ok=True)
+    with open(os.path.join(outdir, f"{arch}__{shape}__{mesh_name}.json"), "w") as f:
+        json.dump(rec, f, indent=1)
+    # keep the optimized HLO so the analyzer can be iterated offline
+    hlo_dir = os.path.join(os.path.dirname(outdir.rstrip("/")), "hlo")
+    os.makedirs(hlo_dir, exist_ok=True)
+    with gzip.open(os.path.join(
+            hlo_dir, f"{arch}__{shape}__{mesh_name}.txt.gz"), "wt") as f:
+        f.write(hlo_text)
+    return rec
+
+
+def reanalyze(outdir: str):
+    """Re-run the HLO analyzer over saved modules (no recompilation)."""
+    import glob
+    hlo_dir = os.path.join(os.path.dirname(outdir.rstrip("/")), "hlo")
+    for path in sorted(glob.glob(os.path.join(hlo_dir, "*.txt.gz"))):
+        combo = os.path.basename(path)[:-len(".txt.gz")]
+        json_path = os.path.join(outdir, combo + ".json")
+        if not os.path.exists(json_path):
+            continue
+        with gzip.open(path, "rt") as f:
+            deep = hlo_analysis.analyze(f.read())
+        with open(json_path) as f:
+            rec = json.load(f)
+        rec.update(flops=deep["flops"], bytes=deep["bytes"],
+                   collectives=deep["collectives"])
+        with open(json_path, "w") as f:
+            json.dump(rec, f, indent=1)
+        print(f"reanalyzed {combo}: flops={deep['flops']:.3g} "
+              f"bytes={deep['bytes']:.3g}", flush=True)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--single-pod", action="store_true")
+    ap.add_argument("--outdir", default="experiments/dryrun")
+    ap.add_argument("--reanalyze", action="store_true")
+    ap.add_argument("--seq-par-attn", action="store_true")
+    ap.add_argument("--q-chunk", type=int, default=0)
+    ap.add_argument("--flash", action="store_true")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+    if args.reanalyze:
+        reanalyze(args.outdir)
+        return
+
+    archs = [args.arch] if args.arch else list(ARCHS)
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = []
+    if args.single_pod or not args.multi_pod:
+        meshes.append(False)
+    if args.multi_pod or args.all:
+        meshes.append(True)
+
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                try:
+                    rec = run_combo(arch, shape, mp, args.outdir,
+                                    seq_par_attn=args.seq_par_attn,
+                                    q_chunk=args.q_chunk, flash=args.flash,
+                                    tag=args.tag)
+                    status = rec["status"]
+                    extra = (f"compile={rec.get('compile_s')}s "
+                             f"flops={rec.get('flops'):.3g}"
+                             if status == "ok" else rec.get("reason", ""))
+                    print(f"[{status:7s}] {arch} x {shape} x "
+                          f"{'multi' if mp else 'single'}: {extra}", flush=True)
+                except Exception as e:
+                    failures += 1
+                    print(f"[FAIL   ] {arch} x {shape} x "
+                          f"{'multi' if mp else 'single'}: {e}", flush=True)
+                    traceback.print_exc()
+    if failures:
+        raise SystemExit(f"{failures} combos failed")
+
+
+if __name__ == "__main__":
+    main()

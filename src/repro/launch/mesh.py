@@ -1,0 +1,31 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so that
+importing this module never touches jax device state; the dry-run sets
+XLA_FLAGS for 512 host devices before any jax import.
+
+Single pod: (16, 16) = 256 chips, axes ("data", "model").
+Multi-pod:  (2, 16, 16) = 512 chips, axes ("pod", "data", "model") — "pod"
+composes with "data" as the batch/FSDP axis; "model" stays intra-pod (tensor
+parallelism needs the fast ICI domain, the pod axis crosses DCI).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Degenerate 1-device mesh for CPU smoke runs of the sharded code path."""
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def batch_axes(mesh) -> tuple[str, ...]:
+    """The composed batch/FSDP axis: ("pod","data") on multi-pod meshes."""
+    names = mesh.axis_names
+    return tuple(n for n in names if n in ("pod", "data"))

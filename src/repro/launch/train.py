@@ -1,0 +1,92 @@
+"""Flow-matching trainer (the paper's training substrate, eq. 56).
+
+Runs on one CPU device with smoke configs and under pjit on the production
+mesh with full configs (the dry-run lowers exactly this ``train_step``).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.train --arch yi-6b --smoke \
+      --steps 50 --batch 8 --seq 64 --ckpt-dir /tmp/ckpt
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import checkpointer
+from repro.configs import get_config
+from repro.core.schedulers import get_scheduler
+from repro.data.synthetic import DataConfig, SyntheticTokens
+from repro.models import model as M
+from repro.optim import adam_init, adam_update, warmup_cosine
+
+
+def make_train_step(cfg, sched, lr_fn, *, grad_clip: float = 1.0):
+    def train_step(params, opt, batch, rng):
+        def loss_fn(p):
+            return M.cfm_loss(p, cfg, batch, rng, sched)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params, opt = adam_update(grads, opt, params, lr_fn(opt.step),
+                                  weight_decay=0.01, grad_clip_norm=grad_clip)
+        return params, opt, loss
+
+    return train_step
+
+
+def train(arch: str, *, smoke: bool = True, steps: int = 50, batch: int = 8,
+          seq: int = 64, lr: float = 3e-4, scheduler: str = "fm_ot",
+          ckpt_dir: str | None = None, ckpt_every: int = 50, seed: int = 0,
+          log=print):
+    cfg = get_config(arch, smoke=smoke)
+    sched = get_scheduler(scheduler)
+    key = jax.random.PRNGKey(seed)
+    params = M.init_params(key, cfg)
+    opt = adam_init(params)
+    data = SyntheticTokens(cfg, DataConfig(batch_size=batch, seq_len=seq,
+                                           seed=seed))
+    lr_fn = warmup_cosine(lr, warmup_steps=max(steps // 10, 1), total_steps=steps)
+    step_fn = jax.jit(make_train_step(cfg, sched, lr_fn))
+
+    start = 0
+    if ckpt_dir and (latest := checkpointer.latest_step(ckpt_dir)) is not None:
+        params = checkpointer.restore(checkpointer.step_path(ckpt_dir, latest),
+                                      params)
+        start = latest
+        log(f"restored step {latest} from {ckpt_dir}")
+
+    losses = []
+    t0 = time.time()
+    for step in range(start, steps):
+        key, sub = jax.random.split(key)
+        params, opt, loss = step_fn(params, opt, data.batch(step), sub)
+        losses.append(float(loss))
+        if (step + 1) % 10 == 0 or step == steps - 1:
+            log(f"step {step+1}/{steps} loss={float(loss):.4f} "
+                f"({(time.time()-t0)/(step-start+1):.2f}s/step)")
+        if ckpt_dir and (step + 1) % ckpt_every == 0:
+            checkpointer.save(checkpointer.step_path(ckpt_dir, step + 1), params)
+    return params, losses
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--scheduler", default="fm_ot")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    train(args.arch, smoke=args.smoke, steps=args.steps, batch=args.batch,
+          seq=args.seq, lr=args.lr, scheduler=args.scheduler,
+          ckpt_dir=args.ckpt_dir, seed=args.seed)
+
+
+if __name__ == "__main__":
+    main()

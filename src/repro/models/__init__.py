@@ -1,0 +1,15 @@
+from repro.models import (
+    attention,
+    layers,
+    linear_scan,
+    mamba2,
+    model,
+    moe,
+    rwkv6,
+    transformer,
+    vlm,
+    whisper,
+)
+
+__all__ = ["attention", "layers", "linear_scan", "mamba2", "model", "moe",
+           "rwkv6", "transformer", "vlm", "whisper"]

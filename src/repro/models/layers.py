@@ -1,0 +1,59 @@
+"""Shared neural building blocks (pure-JAX, pytree params).
+
+Parameter trees are plain nested dicts of jnp arrays; every initializer takes
+an explicit PRNG key. Layer stacks store params with a leading layer axis so
+the forward pass can ``lax.scan`` over layers (keeps HLO small for the
+dry-run of 40-90 layer architectures).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def dense_init(key: Array, d_in: int, d_out: int, scale: float | None = None) -> Array:
+    scale = scale if scale is not None else d_in ** -0.5
+    return scale * jax.random.normal(key, (d_in, d_out), dtype=jnp.float32)
+
+
+def rms_norm(x: Array, weight: Array, eps: float = 1e-5) -> Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * weight).astype(dtype)
+
+
+def swiglu(x: Array, w_gate: Array, w_up: Array, w_down: Array) -> Array:
+    return (jax.nn.silu(x @ w_gate) * (x @ w_up)) @ w_down
+
+
+def rope_frequencies(head_dim: int, theta: float) -> Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: Array, positions: Array, theta: float) -> Array:
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)                       # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., seq, hd/2)
+    cos = jnp.cos(angles)[..., None, :]                        # (..., seq, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def timestep_embedding(t: Array, dim: int, max_period: float = 10_000.0) -> Array:
+    """Sinusoidal flow-time embedding; t scalar or (batch,)."""
+    t = jnp.atleast_1d(jnp.asarray(t, jnp.float32))
+    half = dim // 2
+    freqs = jnp.exp(-jnp.log(max_period) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = t[..., None] * freqs * 1000.0
+    return jnp.concatenate([jnp.cos(ang), jnp.sin(ang)], axis=-1)
+
+
+def stack_layer_params(params_list):
+    """Stack per-layer param dicts along a new leading axis for lax.scan."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *params_list)

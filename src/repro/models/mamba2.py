@@ -1,0 +1,254 @@
+"""Mamba2 (SSD) blocks and the Zamba2 hybrid [arXiv:2411.15242].
+
+Zamba2-2.7b: a backbone of Mamba2 blocks with ONE weight-shared GQA attention
+block applied every ``hybrid_attn_every`` layers (the paper's
+'shared attention' — parameters are reused at every application site, but
+each site keeps its own KV cache).
+
+Mamba2 block: in_proj -> (z, xBC, dt); depthwise causal conv over xBC; SSD
+recurrence via the shared chunked GLA primitive (decay = dt * -exp(A_log) per
+head, state (d_state, head_dim)); D skip; gated RMSNorm; out_proj.
+
+Simplification vs. reference (DESIGN.md): single B/C group (ngroups=1).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.attention import KVCache, attention_forward, decode_attention, init_attention
+from repro.models.layers import dense_init, rms_norm, stack_layer_params, swiglu
+from repro.models.linear_scan import gla_chunked, gla_step
+from repro.models.transformer import cast_params, init_flow_head
+
+Array = jax.Array
+
+
+class HybridState(NamedTuple):
+    conv: Array      # (L, B, d_conv-1, conv_dim) conv tail buffer
+    ssm: Array       # (L, B, nheads, d_state, head_dim)
+    kv: Array        # (sites, B, slots, n_kv, hd) shared-attn K cache
+    vv: Array        # same for V
+    index: Array
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.head_dim
+    conv_dim = d_inner + 2 * s.d_state
+    return d_inner, n_heads, conv_dim
+
+
+def init_mamba_block(key: Array, cfg: ModelConfig) -> dict:
+    s = cfg.ssm
+    d_inner, n_heads, conv_dim = _dims(cfg)
+    ks = jax.random.split(key, 3)
+    d_in_proj = 2 * d_inner + 2 * s.d_state + n_heads
+    return {
+        "in_proj": dense_init(ks[0], cfg.d_model, d_in_proj),
+        "conv_w": 0.1 * jax.random.normal(ks[1], (s.d_conv, conv_dim)),
+        "A_log": jnp.zeros((n_heads,), jnp.float32),          # A = -1
+        "D": jnp.ones((n_heads,), jnp.float32),
+        "dt_bias": jnp.full((n_heads,), -2.0, jnp.float32),   # softplus ~ 0.12
+        "gate_norm": jnp.ones((d_inner,), jnp.float32),
+        "out_proj": dense_init(ks[2], d_inner, cfg.d_model),
+        "norm": jnp.ones((cfg.d_model,), jnp.float32),
+    }
+
+
+def _ssd(cfg: ModelConfig, x: Array, B_: Array, C_: Array, dt: Array,
+         p: dict, s0=None, chunk=None):
+    """x: (B,L,d_inner); B_,C_: (B,L,d_state); dt: (B,L,nheads)."""
+    s = cfg.ssm
+    d_inner, n_heads, _ = _dims(cfg)
+    Bsz, L, _ = x.shape
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    ld = dt * (-jnp.exp(p["A_log"]))                          # (B,L,nh)
+    xh = x.reshape(Bsz, L, n_heads, s.head_dim)
+    v = xh * dt[..., None].astype(xh.dtype)
+    k = jnp.broadcast_to(B_[:, :, None, :], (Bsz, L, n_heads, s.d_state))
+    q = jnp.broadcast_to(C_[:, :, None, :], (Bsz, L, n_heads, s.d_state))
+    # scalar decay per (head, step): trailing dim 1 triggers the (c, c)
+    # decay-matrix specialization in gla_chunked (SSD structure)
+    o, S = gla_chunked(q, k, v, ld[..., None], s0, inclusive=True,
+                       chunk=chunk or s.chunk)
+    y = o + p["D"][:, None].astype(o.dtype) * xh
+    return y.reshape(Bsz, L, d_inner), S
+
+
+def mamba_block_seq(p: dict, cfg: ModelConfig, h: Array, chunk=None) -> Array:
+    s = cfg.ssm
+    d_inner, n_heads, conv_dim = _dims(cfg)
+    hn = rms_norm(h, p["norm"], cfg.norm_eps)
+    zxbcdt = hn @ p["in_proj"]
+    z, xBC, dt = jnp.split(zxbcdt, [d_inner, d_inner + conv_dim], axis=-1)
+    # depthwise causal conv, width d_conv
+    pad = jnp.zeros(xBC.shape[:1] + (s.d_conv - 1,) + xBC.shape[2:], xBC.dtype)
+    xp = jnp.concatenate([pad, xBC], axis=1)
+    conv = sum(xp[:, i:i + xBC.shape[1]] * p["conv_w"][i].astype(xBC.dtype)
+               for i in range(s.d_conv))
+    xBC = jax.nn.silu(conv)
+    x, B_, C_ = jnp.split(xBC, [d_inner, d_inner + s.d_state], axis=-1)
+    y, _ = _ssd(cfg, x, B_, C_, dt, p, chunk=chunk)
+    y = rms_norm(y * jax.nn.silu(z), p["gate_norm"], cfg.norm_eps)
+    return h + y @ p["out_proj"]
+
+
+def mamba_block_step(p: dict, cfg: ModelConfig, h: Array, conv_state: Array,
+                     S: Array) -> tuple[Array, Array, Array]:
+    """h: (B, d); conv_state: (B, d_conv-1, conv_dim); S: (B,nh,ds,hd)."""
+    s = cfg.ssm
+    d_inner, n_heads, conv_dim = _dims(cfg)
+    hn = rms_norm(h, p["norm"], cfg.norm_eps)
+    zxbcdt = hn @ p["in_proj"]
+    z, xBC, dt = jnp.split(zxbcdt, [d_inner, d_inner + conv_dim], axis=-1)
+    window = jnp.concatenate([conv_state.astype(xBC.dtype), xBC[:, None]], axis=1)
+    conv = jnp.einsum("bkc,kc->bc", window, p["conv_w"].astype(xBC.dtype))
+    xBC_c = jax.nn.silu(conv)
+    x, B_, C_ = jnp.split(xBC_c, [d_inner, d_inner + s.d_state], axis=-1)
+    dtf = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    ld = dtf * (-jnp.exp(p["A_log"]))
+    xh = x.reshape(-1, n_heads, s.head_dim)
+    v = xh * dtf[..., None].astype(xh.dtype)
+    k = jnp.broadcast_to(B_[:, None, :], xh.shape[:2] + (s.d_state,))
+    q = jnp.broadcast_to(C_[:, None, :], xh.shape[:2] + (s.d_state,))
+    ldk = jnp.broadcast_to(ld[..., None], xh.shape[:2] + (s.d_state,))
+    o, S = gla_step(q, k, v, ldk, S, inclusive=True)
+    y = (o + p["D"][:, None].astype(o.dtype) * xh).reshape(-1, d_inner)
+    y = rms_norm(y * jax.nn.silu(z), p["gate_norm"], cfg.norm_eps)
+    return h + y @ p["out_proj"], window[:, 1:], S
+
+
+def init_shared_attn(key: Array, cfg: ModelConfig) -> dict:
+    hd = cfg.resolved_head_dim
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "attn": init_attention(k1, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, hd),
+        "mlp": {
+            "w_gate": dense_init(k2, cfg.d_model, cfg.d_ff),
+            "w_up": dense_init(k3, cfg.d_model, cfg.d_ff),
+            "w_down": dense_init(k4, cfg.d_ff, cfg.d_model),
+        },
+        "norm1": jnp.ones((cfg.d_model,), jnp.float32),
+        "norm2": jnp.ones((cfg.d_model,), jnp.float32),
+    }
+
+
+def init_hybrid_params(key: Array, cfg: ModelConfig, dtype=None) -> dict:
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    assert cfg.n_layers % cfg.hybrid_attn_every == 0
+    keys = jax.random.split(key, cfg.n_layers + 4)
+    params = {
+        "embed": dense_init(keys[-4], cfg.vocab, cfg.d_model, scale=1.0),
+        "layers": stack_layer_params([init_mamba_block(keys[i], cfg)
+                                      for i in range(cfg.n_layers)]),
+        "shared_attn": init_shared_attn(keys[-3], cfg),
+        "final_norm": jnp.ones((cfg.d_model,), jnp.float32),
+        "lm_head": dense_init(keys[-2], cfg.d_model, cfg.vocab),
+        "flow": init_flow_head(keys[-1], cfg),
+    }
+    return cast_params(params, dtype)
+
+
+def _shared_attn_seq(p: dict, cfg: ModelConfig, h: Array, positions: Array,
+                     window: int = 0) -> Array:
+    hd = cfg.resolved_head_dim
+    h = h + attention_forward(p["attn"], rms_norm(h, p["norm1"], cfg.norm_eps),
+                              positions, n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+                              head_dim=hd, rope_theta=cfg.rope_theta, causal=True,
+                              window=window, norm_eps=cfg.norm_eps)
+    return h + swiglu(rms_norm(h, p["norm2"], cfg.norm_eps), **p["mlp"])
+
+
+def hybrid_hidden(params: dict, cfg: ModelConfig, h: Array, positions=None,
+                  *, window: int = 0, remat: bool = False) -> Array:
+    """Scan over superblocks: [shared attention] + k mamba layers."""
+    k = cfg.hybrid_attn_every
+    n_super = cfg.n_layers // k
+    if positions is None:
+        positions = jnp.arange(h.shape[1])
+    grouped = jax.tree.map(
+        lambda x: x.reshape((n_super, k) + x.shape[1:]), params["layers"])
+
+    def super_body(h, layer_group):
+        h = _shared_attn_seq(params["shared_attn"], cfg, h, positions, window)
+
+        def inner(h, lp):
+            return mamba_block_seq(lp, cfg, h), None
+
+        h, _ = jax.lax.scan(inner, h, layer_group)
+        return h, None
+
+    if remat:
+        super_body = jax.checkpoint(super_body)
+    h, _ = jax.lax.scan(super_body, h, grouped)
+    return rms_norm(h, params["final_norm"], cfg.norm_eps)
+
+
+def lm_forward(params: dict, cfg: ModelConfig, tokens: Array, positions=None,
+               *, window: int = 0, last_only: bool = False) -> Array:
+    h = hybrid_hidden(params, cfg, params["embed"][tokens], positions, window=window)
+    if last_only:
+        h = h[:, -1:, :]
+    return h @ params["lm_head"]
+
+
+def init_state(cfg: ModelConfig, batch: int, slots: int,
+               dtype=jnp.bfloat16) -> HybridState:
+    s = cfg.ssm
+    d_inner, n_heads, conv_dim = _dims(cfg)
+    sites = cfg.n_layers // cfg.hybrid_attn_every
+    hd = cfg.resolved_head_dim
+    return HybridState(
+        conv=jnp.zeros((cfg.n_layers, batch, s.d_conv - 1, conv_dim), dtype),
+        ssm=jnp.zeros((cfg.n_layers, batch, n_heads, s.d_state, s.head_dim),
+                      jnp.float32),
+        kv=jnp.zeros((sites, batch, slots, cfg.n_kv_heads, hd), dtype),
+        vv=jnp.zeros((sites, batch, slots, cfg.n_kv_heads, hd), dtype),
+        index=jnp.zeros((), jnp.int32),
+    )
+
+
+def decode_step(params: dict, cfg: ModelConfig, token: Array,
+                state: HybridState, *, window: int = 0
+                ) -> tuple[Array, HybridState]:
+    h = params["embed"][token]                                # (B, d)
+    k = cfg.hybrid_attn_every
+    n_super = cfg.n_layers // k
+    hd = cfg.resolved_head_dim
+    grouped = jax.tree.map(
+        lambda x: x.reshape((n_super, k) + x.shape[1:]), params["layers"])
+    conv_g = state.conv.reshape((n_super, k) + state.conv.shape[1:])
+    ssm_g = state.ssm.reshape((n_super, k) + state.ssm.shape[1:])
+    sp = params["shared_attn"]
+
+    def super_body(h, xs):
+        layer_group, conv_s, ssm_s, k_c, v_c = xs
+        cache = KVCache(k=k_c, v=v_c, index=state.index)
+        hn = rms_norm(h[:, None], sp["norm1"], cfg.norm_eps)
+        attn_out, cache = decode_attention(
+            sp["attn"], hn, cache, n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+            head_dim=hd, rope_theta=cfg.rope_theta, window=window,
+            norm_eps=cfg.norm_eps)
+        h = h + attn_out[:, 0]
+        h = h + swiglu(rms_norm(h, sp["norm2"], cfg.norm_eps), **sp["mlp"])
+
+        def inner(h, xs_in):
+            lp, cs, ss = xs_in
+            h, cs, ss = mamba_block_step(lp, cfg, h, cs, ss)
+            return h, (cs, ss)
+
+        h, (conv_new, ssm_new) = jax.lax.scan(inner, h, (layer_group, conv_s, ssm_s))
+        return h, (conv_new, ssm_new, cache.k, cache.v)
+
+    h, (conv_n, ssm_n, kn, vn) = jax.lax.scan(
+        super_body, h, (grouped, conv_g, ssm_g, state.kv, state.vv))
+    logits = rms_norm(h, params["final_norm"], cfg.norm_eps) @ params["lm_head"]
+    new_state = HybridState(
+        conv=conv_n.reshape(state.conv.shape), ssm=ssm_n.reshape(state.ssm.shape),
+        kv=kn, vv=vn, index=state.index + 1)
+    return logits, new_state

@@ -1,0 +1,229 @@
+"""Mixture-of-Experts transformer (qwen3-moe family: 128 experts, top-8)
+[hf:Qwen/Qwen3-30B-A3B].
+
+Two dispatch strategies, selectable via ``MoEConfig.router_impl``:
+
+  * ``scatter`` (default for big configs): capacity-based token routing via
+    scatter-add into an (E, C, d) expert buffer and gather-combine. Memory is
+    O(T k d) — no (T, E, C) one-hot tensor — and under pjit with experts
+    sharded on the ``model`` axis the resharding of the (E, C, d) buffer is
+    the expert-parallel all-to-all.
+  * ``onehot`` (reference): the classic GShard/Switch einsum formulation;
+    numerically transparent, used as the oracle in tests.
+
+Both drop tokens over capacity C = ceil(group/E * k * capacity_factor) —
+the scatter path groups per sequence (GShard groups), the onehot reference
+per global batch — like the production systems this mirrors (GShard,
+Switch, MaxText "dropping").
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.attention import KVCache, attention_forward, decode_attention, init_attention
+from repro.models.layers import dense_init, rms_norm, stack_layer_params
+from repro.models.transformer import cast_params, init_flow_head
+
+Array = jax.Array
+
+
+def init_moe_mlp(key: Array, cfg: ModelConfig) -> dict:
+    m = cfg.moe
+    k0, k1, k2, k3 = jax.random.split(key, 4)
+    return {
+        "router": dense_init(k0, cfg.d_model, m.num_experts),
+        "w_gate": jax.random.normal(k1, (m.num_experts, cfg.d_model, m.d_expert)) * cfg.d_model**-0.5,
+        "w_up": jax.random.normal(k2, (m.num_experts, cfg.d_model, m.d_expert)) * cfg.d_model**-0.5,
+        "w_down": jax.random.normal(k3, (m.num_experts, m.d_expert, cfg.d_model)) * m.d_expert**-0.5,
+    }
+
+
+def _routing(p: dict, x2d: Array, cfg: ModelConfig):
+    """x2d: (T, d) -> (gates (T,k), expert_idx (T,k), aux_loss)."""
+    m = cfg.moe
+    logits = (x2d.astype(jnp.float32) @ p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                   # (T, E)
+    gates, idx = jax.lax.top_k(probs, m.top_k)                # (T, k)
+    gates = gates / jnp.maximum(jnp.sum(gates, -1, keepdims=True), 1e-9)
+    # Switch-style load-balance auxiliary loss.
+    density = jnp.mean(jax.nn.one_hot(idx[:, 0], m.num_experts), axis=0)
+    density_proxy = jnp.mean(probs, axis=0)
+    aux = m.num_experts * jnp.sum(density * density_proxy)
+    return gates.astype(x2d.dtype), idx, aux
+
+
+def _capacity(T: int, cfg: ModelConfig) -> int:
+    m = cfg.moe
+    return max(int(T * m.top_k * m.capacity_factor / m.num_experts), m.top_k)
+
+
+def moe_mlp_scatter(p: dict, x: Array, cfg: ModelConfig):
+    """(B, S, d) -> (B, S, d), aux. Scatter/gather dispatch with
+    PER-SEQUENCE groups (GShard-style).
+
+    Capacity and position-in-expert are computed within each sequence, so
+    the routing cumsum has no cross-batch-shard dependency — with the batch
+    dim sharded, dispatch stays collective-free and the only expert-parallel
+    communication is the canonical (B-shard -> E-shard) all-to-all of the
+    (B, E, C, d) buffers. (The earlier global-cumsum variant all-gathered
+    (T_global*k, E) routing tensors: ~1.2 TB wire per step on qwen3-30b
+    train — see EXPERIMENTS.md §Perf.)"""
+    m = cfg.moe
+    B, S, d = x.shape
+    C = _capacity(S, cfg)                                          # per group
+    gates, idx, aux = _routing(p, x.reshape(B * S, d), cfg)
+    gates = gates.reshape(B, S, m.top_k)
+    idx = idx.reshape(B, S, m.top_k)
+
+    # position of each (token, k) inside its expert, within this sequence
+    onehot = jax.nn.one_hot(idx, m.num_experts, dtype=jnp.int32)   # (B,S,k,E)
+    flat = onehot.reshape(B, S * m.top_k, m.num_experts)
+    pos = jnp.cumsum(flat, axis=1) - flat                          # (B,S*k,E)
+    pos_in_e = jnp.sum(pos * flat, axis=-1).reshape(B, S, m.top_k)
+    keep = pos_in_e < C
+    dest = jnp.where(keep, idx * C + pos_in_e, m.num_experts * C)  # drop slot
+
+    # NOTE: constraining this zeros buffer to batch sharding was tried and
+    # REFUTED (collective 79.6 -> 434.6 s): it fights the expert-parallel
+    # resharding GSPMD wants for the (B, E, C, d) -> expert-sharded einsums.
+    # See EXPERIMENTS.md §Perf (MoE follow-up).
+    buf = jnp.zeros((B, m.num_experts * C + 1, d), x.dtype)
+    src = jnp.repeat(x[:, :, None, :], m.top_k, axis=2) \
+        .reshape(B, S * m.top_k, d)
+    rows = jnp.arange(B)[:, None]
+    buf = buf.at[rows, dest.reshape(B, S * m.top_k)].add(src)      # scatter-add
+    expert_in = buf[:, :-1].reshape(B, m.num_experts, C, d)
+
+    h = jax.nn.silu(jnp.einsum("becd,edf->becf", expert_in, p["w_gate"])) \
+        * jnp.einsum("becd,edf->becf", expert_in, p["w_up"])
+    expert_out = jnp.einsum("becf,efd->becd", h, p["w_down"])
+
+    flat_out = jnp.concatenate(
+        [expert_out.reshape(B, m.num_experts * C, d),
+         jnp.zeros((B, 1, d), x.dtype)], axis=1)
+    picked = flat_out[rows[:, :, None], dest]                      # (B,S,k,d)
+    out = jnp.sum(picked * (gates * keep)[..., None], axis=2)
+    return out, aux
+
+
+def moe_mlp_onehot(p: dict, x: Array, cfg: ModelConfig):
+    """Reference GShard-style einsum dispatch (small shapes only)."""
+    m = cfg.moe
+    B, S, d = x.shape
+    T = B * S
+    C = _capacity(T, cfg)
+    x2d = x.reshape(T, d)
+    gates, idx, aux = _routing(p, x2d, cfg)
+
+    onehot = jax.nn.one_hot(idx, m.num_experts, dtype=jnp.float32)  # (T, k, E)
+    pos = jnp.cumsum(onehot.reshape(T * m.top_k, -1), axis=0).reshape(
+        T, m.top_k, m.num_experts) * onehot - 1.0
+    keep = (pos < C) & (pos >= 0)
+    cap_onehot = jax.nn.one_hot(pos.astype(jnp.int32), C) * keep[..., None]
+    dispatch = jnp.einsum("tke,tkec->tec", onehot, cap_onehot)      # (T, E, C)
+    combine = jnp.einsum("tk,tke,tkec->tec", gates.astype(jnp.float32), onehot,
+                         cap_onehot)
+
+    expert_in = jnp.einsum("tec,td->ecd", dispatch.astype(x.dtype), x2d)
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", expert_in, p["w_gate"])) \
+        * jnp.einsum("ecd,edf->ecf", expert_in, p["w_up"])
+    expert_out = jnp.einsum("ecf,efd->ecd", h, p["w_down"])
+    out = jnp.einsum("tec,ecd->td", combine.astype(x.dtype), expert_out)
+    return out.reshape(B, S, d), aux
+
+
+def moe_mlp(p: dict, x: Array, cfg: ModelConfig):
+    impl = cfg.moe.router_impl
+    return (moe_mlp_scatter if impl == "scatter" else moe_mlp_onehot)(p, x, cfg)
+
+
+# ---------------------------------------------------------------------------
+# Full MoE model (attention blocks shared with the dense family)
+# ---------------------------------------------------------------------------
+
+
+def _layer_init(key: Array, cfg: ModelConfig) -> dict:
+    hd = cfg.resolved_head_dim
+    k_attn, k_moe = jax.random.split(key)
+    return {
+        "attn": init_attention(k_attn, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                               hd, cfg.qk_norm),
+        "moe": init_moe_mlp(k_moe, cfg),
+        "norm1": jnp.ones((cfg.d_model,), jnp.float32),
+        "norm2": jnp.ones((cfg.d_model,), jnp.float32),
+    }
+
+
+def init_moe_params(key: Array, cfg: ModelConfig, dtype=None) -> dict:
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    keys = jax.random.split(key, cfg.n_layers + 3)
+    params = {
+        "embed": dense_init(keys[-3], cfg.vocab, cfg.d_model, scale=1.0),
+        "layers": stack_layer_params([_layer_init(keys[i], cfg)
+                                      for i in range(cfg.n_layers)]),
+        "final_norm": jnp.ones((cfg.d_model,), jnp.float32),
+        "lm_head": dense_init(keys[-2], cfg.d_model, cfg.vocab),
+        "flow": init_flow_head(keys[-1], cfg),
+    }
+    return cast_params(params, dtype)
+
+
+def moe_hidden(params: dict, cfg: ModelConfig, h: Array, positions: Array,
+               *, causal: bool = True, window: int = 0,
+               remat: bool = False) -> tuple[Array, Array]:
+    hd = cfg.resolved_head_dim
+    attn_kw = dict(n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, head_dim=hd,
+                   rope_theta=cfg.rope_theta, causal=causal, window=window,
+                   norm_eps=cfg.norm_eps)
+
+    def body(carry, layer_p):
+        h, aux = carry
+        h = h + attention_forward(layer_p["attn"],
+                                  rms_norm(h, layer_p["norm1"], cfg.norm_eps),
+                                  positions, **attn_kw)
+        mlp_out, a = moe_mlp(layer_p["moe"], rms_norm(h, layer_p["norm2"],
+                                                      cfg.norm_eps), cfg)
+        return (h + mlp_out, aux + a), None
+
+    if remat:
+        body = jax.checkpoint(body)
+    (h, aux), _ = jax.lax.scan(body, (h, jnp.zeros((), jnp.float32)),
+                               params["layers"])
+    return rms_norm(h, params["final_norm"], cfg.norm_eps), aux / cfg.n_layers
+
+
+def lm_forward(params: dict, cfg: ModelConfig, tokens: Array,
+               positions=None, *, window: int = 0, last_only: bool = False):
+    h = params["embed"][tokens]
+    if positions is None:
+        positions = jnp.arange(h.shape[1])
+    h, aux = moe_hidden(params, cfg, h, positions, causal=True, window=window)
+    if last_only:
+        h = h[:, -1:, :]
+    return h @ params["lm_head"], aux
+
+
+def decode_step(params: dict, cfg: ModelConfig, token: Array, caches: KVCache,
+                *, window: int = 0) -> tuple[Array, KVCache]:
+    h = params["embed"][token][:, None, :]
+    hd = cfg.resolved_head_dim
+    attn_kw = dict(n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, head_dim=hd,
+                   rope_theta=cfg.rope_theta, window=window, norm_eps=cfg.norm_eps)
+
+    def body(carry, xs):
+        h = carry
+        layer_p, k_c, v_c = xs
+        cache = KVCache(k=k_c, v=v_c, index=caches.index)
+        attn_out, cache = decode_attention(
+            layer_p["attn"], rms_norm(h, layer_p["norm1"], cfg.norm_eps),
+            cache, **attn_kw)
+        h = h + attn_out
+        mlp_out, _ = moe_mlp(layer_p["moe"],
+                             rms_norm(h, layer_p["norm2"], cfg.norm_eps), cfg)
+        return h + mlp_out, (cache.k, cache.v)
+
+    h, (ks, vs) = jax.lax.scan(body, h, (params["layers"], caches.k, caches.v))
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)[:, 0, :]
+    return h @ params["lm_head"], KVCache(k=ks, v=vs, index=caches.index + 1)

@@ -1,0 +1,200 @@
+"""RWKV6 "Finch" — attention-free RNN with data-dependent decay
+[arXiv:2404.05892].
+
+Per-layer: a time-mix block (the wkv6 linear recurrence with per-channel
+data-dependent decay w_t produced by a LoRA on the token-shifted input, plus
+the 'bonus' u term) and a channel-mix block (squared-ReLU FFN with receptance
+gating). Token shift is the RWKV 1-step convolution.
+
+Simplifications vs. the reference (noted in DESIGN.md): the five DDLerp
+token-shift mixes use static per-channel mu (the decay LoRA — the paper's
+defining feature — is kept); GroupNorm on wkv output is per-head RMSNorm.
+
+State for decode: (shift_tm, shift_cm, wkv state) — no KV cache, O(1) memory
+in sequence length, which is why long_500k runs natively on this arch.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init, rms_norm, stack_layer_params
+from repro.models.linear_scan import gla_chunked, gla_step
+from repro.models.transformer import cast_params, init_flow_head
+
+Array = jax.Array
+
+HEAD_DIM = 64
+LORA_DIM = 64
+
+
+class RWKVState(NamedTuple):
+    shift_tm: Array   # (layers, B, d) last token's input to time-mix
+    shift_cm: Array   # (layers, B, d) last token's input to channel-mix
+    wkv: Array        # (layers, B, H, dk, dv) recurrence state
+    index: Array      # scalar int32
+
+
+def _layer_init(key: Array, cfg: ModelConfig) -> dict:
+    d, ff = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 12)
+    H = d // HEAD_DIM
+    return {
+        "tm": {
+            "mu": 0.5 * jnp.ones((5, d), jnp.float32),   # r,k,v,w,g mixes
+            "w0": -6.0 + jnp.zeros((d,), jnp.float32),    # decay bias (slow)
+            "w_lora_a": dense_init(ks[0], d, LORA_DIM, scale=0.01),
+            "w_lora_b": dense_init(ks[1], LORA_DIM, d, scale=0.01),
+            "u": jnp.zeros((H, HEAD_DIM), jnp.float32),   # bonus
+            "wr": dense_init(ks[2], d, d),
+            "wk": dense_init(ks[3], d, d),
+            "wv": dense_init(ks[4], d, d),
+            "wg": dense_init(ks[5], d, d),
+            "wo": dense_init(ks[6], d, d),
+            "ln_x": jnp.ones((H, HEAD_DIM), jnp.float32),
+        },
+        "cm": {
+            "mu": 0.5 * jnp.ones((2, d), jnp.float32),   # k,r mixes
+            "wk": dense_init(ks[7], d, ff),
+            "wv": dense_init(ks[8], ff, d),
+            "wr": dense_init(ks[9], d, d),
+        },
+        "norm1": jnp.ones((d,), jnp.float32),
+        "norm2": jnp.ones((d,), jnp.float32),
+    }
+
+
+def init_rwkv_params(key: Array, cfg: ModelConfig, dtype=None) -> dict:
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    keys = jax.random.split(key, cfg.n_layers + 3)
+    params = {
+        "embed": dense_init(keys[-3], cfg.vocab, cfg.d_model, scale=1.0),
+        "layers": stack_layer_params([_layer_init(keys[i], cfg)
+                                      for i in range(cfg.n_layers)]),
+        "final_norm": jnp.ones((cfg.d_model,), jnp.float32),
+        "lm_head": dense_init(keys[-2], cfg.d_model, cfg.vocab),
+        "flow": init_flow_head(keys[-1], cfg),
+    }
+    return cast_params(params, dtype)
+
+
+def _decay(p: dict, m_w: Array) -> Array:
+    """Data-dependent log-decay: ld = -exp(w0 + lora(m_w)), <= 0."""
+    lora = jnp.tanh(m_w @ p["w_lora_a"]) @ p["w_lora_b"]
+    return -jnp.exp(p["w0"].astype(jnp.float32) + lora.astype(jnp.float32))
+
+
+def _time_mix_seq(p: dict, x: Array, shift_in: Array, chunk: int
+                  ) -> tuple[Array, Array, Array]:
+    """x: (B, L, d). Returns (out, last_x, final wkv state)."""
+    B, L, d = x.shape
+    H = d // HEAD_DIM
+    x_prev = jnp.concatenate([shift_in[:, None, :], x[:, :-1, :]], axis=1)
+    xx = x_prev - x
+    m = x[None] + xx[None] * p["mu"][:, None, None, :]        # (5, B, L, d)
+    m_r, m_k, m_v, m_w, m_g = m
+    r = (m_r @ p["wr"]).reshape(B, L, H, HEAD_DIM)
+    k = (m_k @ p["wk"]).reshape(B, L, H, HEAD_DIM)
+    v = (m_v @ p["wv"]).reshape(B, L, H, HEAD_DIM)
+    g = jax.nn.silu(m_g @ p["wg"])
+    ld = _decay(p, m_w).reshape(B, L, H, HEAD_DIM)
+
+    o_hist, S = gla_chunked(r, k, v, ld, inclusive=False, chunk=chunk)
+    bonus = jnp.sum(r * p["u"] * k, axis=-1, keepdims=True) * v
+    o = o_hist + bonus.astype(o_hist.dtype)
+    o = rms_norm(o, p["ln_x"]).reshape(B, L, d)
+    return (o * g) @ p["wo"], x[:, -1, :], S
+
+
+def _time_mix_step(p: dict, x: Array, shift_in: Array, S: Array
+                   ) -> tuple[Array, Array, Array]:
+    """x: (B, d) single token."""
+    B, d = x.shape
+    H = d // HEAD_DIM
+    xx = shift_in - x
+    m = x[None] + xx[None] * p["mu"][:, None, :]
+    m_r, m_k, m_v, m_w, m_g = m
+    r = (m_r @ p["wr"]).reshape(B, H, HEAD_DIM)
+    k = (m_k @ p["wk"]).reshape(B, H, HEAD_DIM)
+    v = (m_v @ p["wv"]).reshape(B, H, HEAD_DIM)
+    g = jax.nn.silu(m_g @ p["wg"])
+    ld = _decay(p, m_w).reshape(B, H, HEAD_DIM)
+    o_hist, S = gla_step(r, k, v, ld, S, inclusive=False)
+    bonus = jnp.sum(r * p["u"] * k, axis=-1, keepdims=True) * v
+    o = rms_norm(o_hist + bonus.astype(o_hist.dtype), p["ln_x"]).reshape(B, d)
+    return (o * g) @ p["wo"], x, S
+
+
+def _channel_mix(p: dict, x: Array, x_prev: Array) -> Array:
+    """Works for (B, L, d) with shifted x_prev, or (B, d) single step."""
+    xx = x_prev - x
+    m_k = x + xx * p["mu"][0]
+    m_r = x + xx * p["mu"][1]
+    k = jnp.square(jax.nn.relu(m_k @ p["wk"]))
+    return jax.nn.sigmoid(m_r @ p["wr"]) * (k @ p["wv"])
+
+
+def rwkv_hidden(params: dict, cfg: ModelConfig, h: Array, positions=None,
+                *, chunk: int = 0, remat: bool = False) -> Array:
+    """Full-sequence forward (training / prefill / flow)."""
+    chunk = chunk or (cfg.ssm.chunk if cfg.ssm else 64)
+    B, L, d = h.shape
+
+    def body(h, layer_p):
+        zero = jnp.zeros((B, d), h.dtype)
+        tm_out, _, _ = _time_mix_seq(layer_p["tm"],
+                                     rms_norm(h, layer_p["norm1"], cfg.norm_eps),
+                                     zero, chunk)
+        h = h + tm_out
+        hn = rms_norm(h, layer_p["norm2"], cfg.norm_eps)
+        hn_prev = jnp.concatenate([zero[:, None], hn[:, :-1]], axis=1)
+        h = h + _channel_mix(layer_p["cm"], hn, hn_prev)
+        return h, None
+
+    if remat:
+        body = jax.checkpoint(body)
+    h, _ = jax.lax.scan(body, h, params["layers"])
+    return rms_norm(h, params["final_norm"], cfg.norm_eps)
+
+
+def lm_forward(params: dict, cfg: ModelConfig, tokens: Array, positions=None,
+               last_only: bool = False, **_) -> Array:
+    h = rwkv_hidden(params, cfg, params["embed"][tokens])
+    if last_only:
+        h = h[:, -1:, :]
+    return h @ params["lm_head"]
+
+
+def init_state(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> RWKVState:
+    H = cfg.d_model // HEAD_DIM
+    L = cfg.n_layers
+    return RWKVState(
+        shift_tm=jnp.zeros((L, batch, cfg.d_model), dtype),
+        shift_cm=jnp.zeros((L, batch, cfg.d_model), dtype),
+        wkv=jnp.zeros((L, batch, H, HEAD_DIM, HEAD_DIM), jnp.float32),
+        index=jnp.zeros((), jnp.int32),
+    )
+
+
+def decode_step(params: dict, cfg: ModelConfig, token: Array, state: RWKVState,
+                **_) -> tuple[Array, RWKVState]:
+    h = params["embed"][token]                                # (B, d)
+
+    def body(h, xs):
+        layer_p, sh_tm, sh_cm, S = xs
+        hn = rms_norm(h, layer_p["norm1"], cfg.norm_eps)
+        tm_out, sh_tm, S = _time_mix_step(layer_p["tm"], hn, sh_tm.astype(hn.dtype), S)
+        h = h + tm_out
+        hn2 = rms_norm(h, layer_p["norm2"], cfg.norm_eps)
+        h = h + _channel_mix(layer_p["cm"], hn2, sh_cm.astype(hn2.dtype))
+        return h, (sh_tm, hn2, S)
+
+    h, (sh_tm, sh_cm, wkv) = jax.lax.scan(
+        body, h, (params["layers"], state.shift_tm, state.shift_cm, state.wkv))
+    logits = rms_norm(h, params["final_norm"], cfg.norm_eps) @ params["lm_head"]
+    return logits, RWKVState(shift_tm=sh_tm.astype(state.shift_tm.dtype),
+                             shift_cm=sh_cm.astype(state.shift_cm.dtype),
+                             wkv=wkv, index=state.index + 1)

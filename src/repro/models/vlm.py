@@ -1,0 +1,57 @@
+"""InternVL2-26b backbone: InternLM2-style dense LM consuming stubbed vision
+patch embeddings [arXiv:2404.16821].
+
+Per the assignment, the InternViT encoder is a STUB — ``input_specs()``
+provides patch embeddings (B, n_patches, vit_dim); only the trainable MLP
+projector (vit_dim -> d_model) and the language model are implemented. Patch
+tokens are prepended to the text sequence (cross-modal token interleave),
+giving the LM a multimodal prefix.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.attention import KVCache
+from repro.models.layers import dense_init
+from repro.models import transformer
+
+Array = jax.Array
+
+
+def init_vlm_params(key: Array, cfg: ModelConfig, dtype=None) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    params = transformer.init_dense_params(k1, cfg, dtype)
+    vit_dim = cfg.frontend.embed_dim
+    params["projector"] = {
+        "w1": dense_init(k2, vit_dim, cfg.d_model).astype(dtype or jnp.dtype(cfg.dtype)),
+        "w2": dense_init(k3, cfg.d_model, cfg.d_model).astype(dtype or jnp.dtype(cfg.dtype)),
+    }
+    return params
+
+
+def project_patches(params: dict, patches: Array) -> Array:
+    p = params["projector"]
+    return jax.nn.gelu(patches.astype(p["w1"].dtype) @ p["w1"]) @ p["w2"]
+
+
+def lm_forward(params: dict, cfg: ModelConfig, tokens: Array, patches: Array,
+               positions=None, *, window: int = 0,
+               last_only: bool = False) -> Array:
+    """Multimodal prefill: logits over [patch tokens; text tokens]."""
+    embeds = project_patches(params, patches)
+    return transformer.lm_forward(params, cfg, tokens, positions,
+                                  window=window, extra_embeds=embeds,
+                                  last_only=last_only)
+
+
+def init_state(cfg: ModelConfig, batch: int, slots: int,
+               dtype=jnp.bfloat16) -> KVCache:
+    return transformer.init_caches(cfg, batch, slots, dtype)
+
+
+def decode_step(params: dict, cfg: ModelConfig, token: Array, caches: KVCache,
+                *, window: int = 0):
+    """Text decode after the multimodal prefix is already in the cache."""
+    return transformer.decode_step(params, cfg, token, caches, window=window)

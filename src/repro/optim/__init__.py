@@ -1,0 +1,12 @@
+from repro.optim.adam import AdamState, adam_init, adam_update, adamw
+from repro.optim.schedule import (
+    constant_schedule,
+    cosine_annealing,
+    poly_decay,
+    warmup_cosine,
+)
+
+__all__ = [
+    "AdamState", "adam_init", "adam_update", "adamw",
+    "constant_schedule", "cosine_annealing", "poly_decay", "warmup_cosine",
+]

@@ -1,0 +1,78 @@
+"""Pure-JAX Adam/AdamW over arbitrary pytrees (Kingma & Ba 2017).
+
+The paper optimizes BNS solvers with Adam; the model trainer uses AdamW.
+State is a pytree-of-pytrees so it shards exactly like the params under pjit.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+PyTree = object
+
+
+class AdamState(NamedTuple):
+    step: Array
+    mu: PyTree
+    nu: PyTree
+
+
+def adam_init(params: PyTree, dtype=jnp.float32) -> AdamState:
+    zeros = lambda p: jnp.zeros_like(p, dtype=dtype)
+    return AdamState(
+        step=jnp.zeros((), jnp.int32),
+        mu=jax.tree.map(zeros, params),
+        nu=jax.tree.map(zeros, params),
+    )
+
+
+def adam_update(
+    grads: PyTree,
+    state: AdamState,
+    params: PyTree,
+    lr: Array | float,
+    *,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+    grad_clip_norm: float | None = None,
+) -> tuple[PyTree, AdamState]:
+    """One AdamW step; returns (new_params, new_state)."""
+    step = state.step + 1
+    if grad_clip_norm is not None:
+        leaves = jax.tree.leaves(grads)
+        gnorm = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in leaves))
+        scale = jnp.minimum(1.0, grad_clip_norm / jnp.maximum(gnorm, 1e-12))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+
+    mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(m.dtype), state.mu, grads)
+    nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(v.dtype)),
+                      state.nu, grads)
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, m, v):
+        update = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+        if weight_decay:
+            update = update + weight_decay * p.astype(update.dtype)
+        return (p.astype(jnp.float32) - lr * update).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, mu, nu)
+    return new_params, AdamState(step=step, mu=mu, nu=nu)
+
+
+def adamw(lr_fn: Callable[[Array], Array], **kwargs):
+    """Closure-style API: returns (init_fn, update_fn) with a LR schedule."""
+
+    def init(params):
+        return adam_init(params)
+
+    def update(grads, state, params):
+        lr = lr_fn(state.step)
+        return adam_update(grads, state, params, lr, **kwargs)
+
+    return init, update

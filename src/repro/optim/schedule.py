@@ -1,0 +1,39 @@
+"""Learning-rate schedules used in the paper's training recipes.
+
+Class-conditional BNS: lr 5e-4 with polynomial decay; T2I/audio BNS: lr 1e-4
+with cosine annealing; backbone pretraining: constant or poly-decay + warmup.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant_schedule(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def poly_decay(lr: float, total_steps: int, power: float = 1.0, end_lr: float = 0.0):
+    def fn(step):
+        frac = jnp.clip(step.astype(jnp.float32) / total_steps, 0.0, 1.0)
+        return (lr - end_lr) * (1.0 - frac) ** power + end_lr
+
+    return fn
+
+
+def cosine_annealing(lr: float, total_steps: int, end_lr: float = 0.0):
+    def fn(step):
+        frac = jnp.clip(step.astype(jnp.float32) / total_steps, 0.0, 1.0)
+        return end_lr + 0.5 * (lr - end_lr) * (1.0 + jnp.cos(jnp.pi * frac))
+
+    return fn
+
+
+def warmup_cosine(lr: float, warmup_steps: int, total_steps: int, end_lr: float = 0.0):
+    cos = cosine_annealing(lr, max(total_steps - warmup_steps, 1), end_lr)
+
+    def fn(step):
+        step_f = step.astype(jnp.float32)
+        warm = lr * step_f / max(warmup_steps, 1)
+        return jnp.where(step < warmup_steps, warm, cos(step - warmup_steps))
+
+    return fn

@@ -1,0 +1,82 @@
+"""Serving engines.
+
+``FlowSampler`` — the paper's product: BNS-accelerated batched sampling of a
+flow model (any backbone in the zoo). Given a trained (or baseline-converted)
+NS solver, each request batch costs exactly ``n`` backbone forwards.
+
+``DecodeEngine`` — batched autoregressive decode with KV cache / recurrent
+state (the ``serve_step`` the decode dry-run shapes lower).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import ns_solver
+from repro.core.ns_solver import NSParams
+from repro.core.schedulers import Scheduler
+from repro.models import model as M
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class FlowSampler:
+    params: dict
+    cfg: ModelConfig
+    sched: Scheduler
+    solver: NSParams
+    cfg_scale: float = 0.0
+
+    def __post_init__(self):
+        def _sample(params, solver, batch, x0):
+            field = M.velocity_field(params, self.cfg, self.sched, batch,
+                                     cfg_scale=self.cfg_scale)
+            return ns_solver.ns_sample(solver, field.fn, x0)
+
+        self._sample = jax.jit(_sample)
+
+    def sample(self, batch: dict, key: Array, seq_len: Optional[int] = None) -> Array:
+        """Generate latent sequences conditioned on ``batch`` tokens."""
+        B, S = batch["tokens"].shape
+        x0 = jax.random.normal(key, (B, S, self.cfg.latent_dim))
+        return self._sample(self.params, self.solver, batch, x0)
+
+    def nearest_tokens(self, latents: Array) -> Array:
+        """Decode sampled latents to tokens by nearest latent embedding."""
+        table = self.params["flow"]["latent_embed"].astype(jnp.float32)
+        d2 = (jnp.sum(latents.astype(jnp.float32) ** 2, -1, keepdims=True)
+              - 2.0 * latents.astype(jnp.float32) @ table.T
+              + jnp.sum(table**2, -1))
+        return jnp.argmin(d2, axis=-1)
+
+
+@dataclasses.dataclass
+class DecodeEngine:
+    params: dict
+    cfg: ModelConfig
+    window: int = 0
+
+    def __post_init__(self):
+        def _step(params, token, state):
+            return M.decode_apply(params, self.cfg, token, state,
+                                  window=self.window)
+
+        self._step = jax.jit(_step)
+
+    def init_state(self, batch: int, slots: int, dtype=jnp.float32):
+        return M.init_decode_state(self.cfg, batch, slots, dtype)
+
+    def greedy(self, prompt: Array, state, num_steps: int) -> tuple[Array, object]:
+        """prompt: (B,) last prompt token. Returns (B, num_steps) tokens."""
+        outs = []
+        token = prompt
+        for _ in range(num_steps):
+            logits, state = self._step(self.params, token, state)
+            token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            outs.append(token)
+        return jnp.stack(outs, axis=1), state

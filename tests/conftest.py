@@ -1,0 +1,9 @@
+import os
+
+# Tests run on the single real CPU device; the 512-device fake platform is
+# used ONLY by launch/dryrun.py (which sets XLA_FLAGS before importing jax).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_threefry_partitionable", True)

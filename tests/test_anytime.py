@@ -1,0 +1,72 @@
+"""Anytime-BNS (beyond-paper): one solver, multiple NFE budgets."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ns_solver, schedulers, toy
+from repro.core.anytime import (
+    anytime_sample, evaluate_anytime, init_anytime, nested_grid, train_anytime,
+)
+from repro.core.bns import BNSTrainConfig, generate_pairs, psnr, solver_to_ns
+
+
+@pytest.fixture(scope="module")
+def setup():
+    sched = schedulers.fm_ot()
+    field = toy.mixture_field(sched, toy.two_moons_means(),
+                              jnp.full((16,), 0.15), jnp.ones((16,)))
+    train = generate_pairs(field, jax.random.PRNGKey(0), 128, (2,))
+    val = generate_pairs(field, jax.random.PRNGKey(1), 128, (2,))
+    return field, train, val
+
+
+def test_nested_grid_prefixes_spread():
+    g = nested_grid([4, 8, 16])
+    assert len(g) == 16 and len(set(g.tolist())) == 16
+    # the first m evals of each budget must span [0, 1)
+    for m in (4, 8, 16):
+        assert g[:m].max() >= 1.0 - 1.0 / m - 1e-9
+        assert g[:m].min() == 0.0
+
+
+def test_prefix_init_matches_generic_solver(setup):
+    """mode='prefix' untrained == the initializing generic solver at n=max."""
+    field, _, val = setup
+    theta = init_anytime(field, [4, 8], "prefix", "midpoint")
+    outs = anytime_sample(theta, [4, 8], field.fn, val[0])
+    ref8 = ns_solver.ns_sample(solver_to_ns("midpoint", 8, field), field.fn,
+                               val[0])
+    # time clipping (t=0 -> 0.02) perturbs the first eval slightly
+    np.testing.assert_allclose(np.asarray(outs[8]), np.asarray(ref8),
+                               atol=2e-2)
+    ref4 = ns_solver.ns_sample(solver_to_ns("midpoint", 4, field), field.fn,
+                               val[0])
+    # NOTE the m=4 exit evaluates on the 8-grid's first 4 times, not the
+    # dedicated 4-grid — only the coefficients match, so just check sanity.
+    assert bool(jnp.isfinite(outs[4]).all())
+    del ref4
+
+
+def test_anytime_nested_beats_prefix_at_small_budgets(setup):
+    field, train, val = setup
+    cfg = BNSTrainConfig(nfe=8, init_solver="midpoint", iterations=800,
+                         lr=1.5e-3, val_every=200, batch_size=64)
+    nested = train_anytime(field, [4, 8], train, val, cfg, mode="nested")
+    prefix = train_anytime(field, [4, 8], train, val, cfg, mode="prefix")
+    s_nested = evaluate_anytime(nested.params, [4, 8], field, val)
+    s_prefix = evaluate_anytime(prefix.params, [4, 8], field, val)
+    assert s_nested[4] > s_prefix[4] + 3.0, (s_nested, s_prefix)
+
+
+def test_anytime_all_budgets_beat_generic_baseline(setup):
+    field, train, val = setup
+    cfg = BNSTrainConfig(nfe=8, init_solver="midpoint", iterations=3000,
+                         lr=2e-3, val_every=300, batch_size=64)
+    res = train_anytime(field, [4, 8], train, val, cfg, mode="nested")
+    scores = evaluate_anytime(res.params, [4, 8], field, val)
+    for m in (4, 8):
+        base = solver_to_ns("midpoint", m, field)
+        bp = float(jnp.mean(psnr(ns_solver.ns_sample(base, field.fn, val[0]),
+                                 val[1])))
+        assert scores[m] > bp, (m, scores[m], bp)

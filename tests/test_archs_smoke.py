@@ -1,0 +1,142 @@
+"""Per-architecture smoke tests (assignment requirement).
+
+For each of the 10 assigned architectures: instantiate the REDUCED variant
+(<=2-4 layers, d_model<=512, <=4 experts), run one forward + one flow-matching
+train step on CPU, assert output shapes and no NaNs; additionally check that
+the decode path (KV cache / recurrent state) is consistent with the prefill
+path — the invariant the serving engine relies on.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config
+from repro.core.schedulers import fm_ot
+from repro.data.synthetic import DataConfig, SyntheticTokens
+from repro.models import model as M
+from repro.models import whisper
+from repro.optim import adam_init, adam_update
+
+SEQ = 16
+BATCH = 2
+
+
+def make_batch(cfg, seq=SEQ, batch=BATCH, seed=0):
+    data = SyntheticTokens(cfg, DataConfig(batch_size=batch, seq_len=seq,
+                                           seed=seed))
+    return data.batch(0)
+
+
+@pytest.fixture(params=ARCHS)
+def arch(request):
+    return request.param
+
+
+def test_full_config_matches_assignment(arch):
+    cfg = get_config(arch)
+    spec = {
+        "yi-6b": (32, 4096, 32, 4, 11008, 64000),
+        "phi3-medium-14b": (40, 5120, 40, 10, 17920, 100352),
+        "command-r-35b": (40, 8192, 64, 8, 22528, 256000),
+        "zamba2-2.7b": (54, 2560, 32, 32, 10240, 32000),
+        "yi-34b": (60, 7168, 56, 8, 20480, 64000),
+        "whisper-medium": (24, 1024, 16, 16, 4096, 51865),
+        "qwen3-moe-235b-a22b": (94, 4096, 64, 4, 1536, 151936),
+        "qwen3-moe-30b-a3b": (48, 2048, 32, 4, 768, 151936),
+        "rwkv6-7b": (32, 4096, 64, 64, 14336, 65536),
+        "internvl2-26b": (48, 6144, 48, 8, 16384, 92553),
+    }[arch]
+    assert (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_ff,
+            cfg.vocab) == spec
+    if arch.startswith("qwen3-moe"):
+        assert cfg.moe.num_experts == 128 and cfg.moe.top_k == 8
+    if arch == "zamba2-2.7b":
+        assert cfg.ssm.d_state == 64
+
+
+def test_smoke_forward_and_shapes(arch):
+    cfg = get_config(arch, smoke=True)
+    assert cfg.n_layers <= 4 and cfg.d_model <= 512
+    if cfg.moe:
+        assert cfg.moe.num_experts <= 4
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    batch = make_batch(cfg)
+    logits = M.lm_apply(params, cfg, batch)
+    expected_len = SEQ + (cfg.frontend.num_tokens if cfg.family == "vlm" else 0)
+    assert logits.shape == (BATCH, expected_len, cfg.vocab), logits.shape
+    assert bool(jnp.isfinite(logits).all()), f"{arch}: non-finite logits"
+
+
+def test_smoke_flow_train_step(arch):
+    """One CFM train step: finite loss, finite grads, params update."""
+    cfg = get_config(arch, smoke=True)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    opt = adam_init(params)
+    batch = make_batch(cfg)
+
+    @jax.jit
+    def step(params, opt, batch, rng):
+        loss, grads = jax.value_and_grad(
+            lambda p: M.cfm_loss(p, cfg, batch, rng, fm_ot()))(params)
+        params, opt = adam_update(grads, opt, params, 1e-3)
+        return params, opt, loss, grads
+
+    new_params, opt, loss, grads = step(params, opt, batch, jax.random.PRNGKey(1))
+    assert bool(jnp.isfinite(loss)), f"{arch}: loss={loss}"
+    for p, g in zip(jax.tree.leaves(params), jax.tree.leaves(grads)):
+        assert bool(jnp.isfinite(g).all())
+    # something moved
+    moved = any(bool(jnp.any(a != b)) for a, b in
+                zip(jax.tree.leaves(params), jax.tree.leaves(new_params)))
+    assert moved
+
+
+def test_decode_matches_prefill(arch):
+    """Token-by-token decode must reproduce the prefill logits."""
+    import dataclasses
+    cfg = get_config(arch, smoke=True)
+    if cfg.moe is not None:
+        # capacity-dropping differs between prefill (T=B*S) and decode (T=B);
+        # equivalence holds exactly in the no-drop regime.
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    batch = make_batch(cfg, seq=8)
+    tokens = batch["tokens"]
+
+    if cfg.family == "vlm":
+        pytest.skip("vlm decode starts after a multimodal prefix; covered by "
+                    "the dense path it delegates to")
+
+    ref = M.lm_apply(params, cfg, batch)                       # (B, 8, V)
+
+    state = M.init_decode_state(cfg, BATCH, slots=8, dtype=jnp.float32)
+    if cfg.family == "encdec":
+        memory = whisper.encode(params, cfg, batch["frames"])
+        state = state._replace(memory=memory)
+
+    step = jax.jit(lambda p, t, s: M.decode_apply(p, cfg, t, s))
+    outs = []
+    for i in range(8):
+        logits, state = step(params, tokens[:, i], state)
+        outs.append(logits)
+    dec = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(ref),
+                               atol=2e-2, rtol=2e-2)
+
+
+def test_decode_long_window(arch):
+    """Sliding-window decode path lowers and runs (long_500k mechanism)."""
+    cfg = get_config(arch, smoke=True)
+    if cfg.family in ("ssm",) or cfg.sliding_window == 0:
+        pytest.skip("attention-free or no windowed variant")
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    window = 4
+    state = M.init_decode_state(cfg, BATCH, slots=window, dtype=jnp.float32)
+    step = jax.jit(lambda p, t, s: M.decode_apply(p, cfg, t, s, window=window))
+    tok = jnp.zeros((BATCH,), jnp.int32)
+    for _ in range(6):  # exceed the window: ring buffer must wrap
+        logits, state = step(params, tok, state)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    assert bool(jnp.isfinite(logits).all())

@@ -1,0 +1,83 @@
+"""BNS optimization (Algorithm 2): training improves the initial solver,
+and the paper's qualitative orderings hold on the analytic toy model."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import ns_solver, schedulers, toy
+from repro.core.bns import (
+    BNSTrainConfig,
+    generate_pairs,
+    psnr,
+    solver_to_ns,
+    train_bns,
+    train_bst,
+)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    sched = schedulers.fm_ot()
+    field = toy.mixture_field(sched, toy.two_moons_means(),
+                              jnp.full((16,), 0.15), jnp.ones((16,)))
+    train = generate_pairs(field, jax.random.PRNGKey(0), 128, (2,))
+    val = generate_pairs(field, jax.random.PRNGKey(1), 128, (2,))
+    return field, train, val
+
+
+def baseline_psnr(field, name, nfe, val):
+    ns = solver_to_ns(name, nfe, field)
+    xh = ns_solver.ns_sample(ns, field.fn, val[0])
+    return float(jnp.mean(psnr(xh, val[1])))
+
+
+def test_bns_beats_all_baselines(setup):
+    field, train, val = setup
+    cfg = BNSTrainConfig(nfe=8, init_solver="midpoint", iterations=500,
+                         val_every=50, batch_size=64, seed=0)
+    res = train_bns(field, train, val, cfg)
+    baselines = {n: baseline_psnr(field, n, 8, val)
+                 for n in ["euler", "midpoint", "ddim", "dpm2m"]}
+    assert res.val_psnr > max(baselines.values()) + 1.0, (res.val_psnr, baselines)
+    assert res.num_parameters == ns_solver.count_parameters(8)
+
+
+def test_bns_init_matches_init_solver(setup):
+    """Before training, theta0 must reproduce the initial solver exactly."""
+    field, _, val = setup
+    ns0 = solver_to_ns("midpoint", 8, field)
+    theta0 = ns_solver.from_ns(ns0)
+    xh = ns_solver.ns_sample(ns_solver.materialize(theta0), field.fn, val[0])
+    xh_ref = ns_solver.ns_sample(ns0, field.fn, val[0])
+    assert float(jnp.max(jnp.abs(xh - xh_ref))) < 1e-4
+
+
+def test_bst_improves_base_and_bns_beats_bst(setup):
+    """Fig. 11 ablation: NS family (BNS) > ST family (BST), both trained."""
+    field, train, val = setup
+    cfg = BNSTrainConfig(nfe=8, init_solver="euler", iterations=500,
+                         val_every=50, batch_size=64, seed=0)
+    bst = train_bst(field, train, val, cfg, base="euler")
+    euler = baseline_psnr(field, "euler", 8, val)
+    assert bst.val_psnr > euler + 0.5, (bst.val_psnr, euler)
+    bns = train_bns(field, train, val, cfg)
+    assert bns.val_psnr > bst.val_psnr, (bns.val_psnr, bst.val_psnr)
+
+
+def test_psnr_increases_with_nfe(setup):
+    field, train, val = setup
+    scores = []
+    for nfe in [4, 8]:
+        cfg = BNSTrainConfig(nfe=nfe, init_solver="midpoint", iterations=400,
+                             val_every=50, batch_size=64)
+        scores.append(train_bns(field, train, val, cfg).val_psnr)
+    assert scores[1] > scores[0]
+
+
+def test_preconditioned_init(setup):
+    """sigma0 != 1 initialization still reproduces a valid solver and trains."""
+    field, train, val = setup
+    cfg = BNSTrainConfig(nfe=8, init_solver="euler", sigma0=2.0, iterations=300,
+                         val_every=50, batch_size=64)
+    res = train_bns(field, train, val, cfg)
+    assert res.val_psnr > baseline_psnr(field, "euler", 8, val)

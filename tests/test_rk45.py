@@ -1,0 +1,38 @@
+"""Adaptive RK45 ground-truth generator."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import schedulers, toy
+from repro.core.rk45 import rk45_solve
+
+
+def test_exact_on_linear_field():
+    field = toy.linear_field(schedulers.fm_ot())
+    x0 = jax.random.normal(jax.random.PRNGKey(0), (5, 3))
+    res = rk45_solve(field.fn, x0, rtol=1e-8, atol=1e-8)
+    exact = toy.linear_field_solution(x0, 1.0)
+    # fp32 end-to-end: tolerance reflects accumulation roundoff, not method error
+    np.testing.assert_allclose(np.asarray(res.x1), np.asarray(exact), atol=5e-4)
+    assert int(res.accepted) > 0
+
+
+def test_tolerance_controls_error():
+    sched = schedulers.fm_ot()
+    field = toy.mixture_field(sched, toy.two_moons_means(),
+                              jnp.full((16,), 0.15), jnp.ones((16,)))
+    x0 = jax.random.normal(jax.random.PRNGKey(0), (8, 2))
+    fine = rk45_solve(field.fn, x0, rtol=1e-8, atol=1e-8).x1
+    coarse = rk45_solve(field.fn, x0, rtol=1e-3, atol=1e-3)
+    # multimodal flows amplify integration error near basin boundaries;
+    # the bound reflects ODE conditioning, not solver accuracy.
+    err = float(jnp.max(jnp.abs(coarse.x1 - fine)))
+    assert err < 0.15
+    assert int(coarse.nfe) < 10_000
+
+
+def test_nfe_counts_evals():
+    field = toy.linear_field(schedulers.fm_ot())
+    x0 = jnp.ones((2, 2))
+    res = rk45_solve(field.fn, x0, rtol=1e-5, atol=1e-5)
+    assert int(res.nfe) == 7 * (int(res.accepted) + int(res.rejected))

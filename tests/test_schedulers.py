@@ -1,0 +1,59 @@
+"""Scheduler invariants (paper eq. 4) and snr-inverse exactness."""
+import hypothesis
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import schedulers
+
+ALL = ["fm_ot", "fm_cs", "vp"]
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_endpoint_conditions(name):
+    s = schedulers.get_scheduler(name)
+    # VP satisfies alpha_0 = 0 only approximately (xi_1 = e^{-5.025} ~ 0.0066).
+    assert float(s.alpha(jnp.asarray(0.0))) == pytest.approx(0.0, abs=1e-2)
+    assert float(s.alpha(jnp.asarray(1.0))) == pytest.approx(1.0, abs=1e-5)
+    assert float(s.sigma(jnp.asarray(1.0))) == pytest.approx(0.0, abs=1e-4)
+    assert float(s.sigma(jnp.asarray(0.0))) > 0.0
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_snr_strictly_increasing(name):
+    s = schedulers.get_scheduler(name)
+    t = jnp.linspace(0.01, 0.99, 197)
+    snr = np.asarray(s.snr(t))
+    assert np.all(np.diff(snr) > 0)
+
+
+@pytest.mark.parametrize("name", ALL + ["ve"])
+@hypothesis.given(t=st.floats(0.05, 0.95))
+@hypothesis.settings(max_examples=25, deadline=None)
+def test_snr_inverse_roundtrip(name, t):
+    s = schedulers.get_scheduler(name)
+    t_arr = jnp.asarray(t, jnp.float32)
+    back = float(s.snr_inverse(s.snr(t_arr)))
+    assert back == pytest.approx(t, abs=2e-3)
+
+
+def test_scaled_sigma_preconditioning():
+    base = schedulers.fm_ot()
+    s = schedulers.scaled_sigma(base, 5.0)
+    t = jnp.asarray(0.3)
+    assert float(s.sigma(t)) == pytest.approx(5.0 * float(base.sigma(t)), rel=1e-6)
+    assert float(s.alpha(t)) == pytest.approx(float(base.alpha(t)), rel=1e-6)
+    # snr_inverse consistency
+    assert float(s.snr_inverse(s.snr(t))) == pytest.approx(0.3, abs=1e-4)
+
+
+def test_derivatives_match_finite_difference():
+    for name in ALL:
+        s = schedulers.get_scheduler(name)
+        t = jnp.asarray(0.37)
+        eps = 1e-4
+        fd = (float(s.alpha(t + eps)) - float(s.alpha(t - eps))) / (2 * eps)
+        assert float(s.dalpha(t)) == pytest.approx(fd, rel=1e-2)
+        fd = (float(s.sigma(t + eps)) - float(s.sigma(t - eps))) / (2 * eps)
+        assert float(s.dsigma(t)) == pytest.approx(fd, rel=1e-2)

@@ -1,0 +1,62 @@
+"""ST transformations: scheduler-change correctness (eqs. 6-8) and the
+sample-recovery property x(1) = x_bar(1) / s_1."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import schedulers, st_transform, toy
+from repro.core.rk45 import rk45_solve
+
+
+@pytest.mark.parametrize("sname,tname", [("fm_ot", "fm_cs"), ("fm_cs", "fm_ot"),
+                                          ("vp", "fm_ot")])
+def test_scheduler_change_identities(sname, tname):
+    """eq. 8: alpha_bar_r = s_r alpha_{t_r}, sigma_bar_r = s_r sigma_{t_r}."""
+    src, tgt = schedulers.get_scheduler(sname), schedulers.get_scheduler(tname)
+    st = st_transform.scheduler_change_st(src, tgt)
+    for r in [0.1, 0.33, 0.5, 0.77, 0.9]:
+        r_ = jnp.asarray(r)
+        t, s = st.t(r_), st.s(r_)
+        np.testing.assert_allclose(float(s * src.alpha(t)), float(tgt.alpha(r_)),
+                                   atol=2e-3)
+        np.testing.assert_allclose(float(s * src.sigma(t)), float(tgt.sigma(r_)),
+                                   atol=2e-3)
+
+
+def test_identity_transform_is_identity():
+    st = st_transform.identity_st()
+    r = jnp.asarray(0.4)
+    assert float(st.t(r)) == pytest.approx(0.4)
+    assert float(st.s(r)) == pytest.approx(1.0)
+    assert float(st.dt(r)) == pytest.approx(1.0)
+    assert float(st.ds(r)) == pytest.approx(0.0, abs=1e-6)
+
+
+def test_transformed_field_recovers_samples():
+    """Integrate u_bar from s_0 x0, unscale by s_1 -> same sample as u from x0."""
+    sched = schedulers.fm_ot()
+    field = toy.mixture_field(sched, toy.two_moons_means(),
+                              jnp.full((16,), 0.15), jnp.ones((16,)))
+    ubar, st = st_transform.precondition(field, sigma0=2.5)
+    x0 = jax.random.normal(jax.random.PRNGKey(0), (4, 2))
+    direct = rk45_solve(field.fn, x0, rtol=1e-7, atol=1e-7).x1
+    xbar0 = st.s(jnp.asarray(0.0)) * x0
+    bar = rk45_solve(ubar.fn, xbar0, rtol=1e-7, atol=1e-7).x1 / st.s(jnp.asarray(1.0))
+    # trajectory-sensitivity (not transform error) dominates: bound is loose on
+    # max, tight on median.
+    err = np.abs(np.asarray(bar) - np.asarray(direct))
+    assert err.max() < 0.05 and np.median(err) < 0.01
+
+
+def test_precondition_source_std():
+    """eq. 14: preconditioning sigma0 means the transformed source has std
+    sigma0 (s_0 = sigma0 when sigma(0)=1)."""
+    sched = schedulers.fm_ot()
+    field = toy.mixture_field(sched, toy.two_moons_means(),
+                              jnp.full((16,), 0.15), jnp.ones((16,)))
+    _, st = st_transform.precondition(field, sigma0=5.0)
+    assert float(st.s(jnp.asarray(0.0))) == pytest.approx(5.0, rel=1e-3)
+    assert float(st.s(jnp.asarray(1.0))) == pytest.approx(1.0, rel=1e-2)
+    assert float(st.t(jnp.asarray(0.0))) == pytest.approx(0.0, abs=1e-4)
+    assert float(st.t(jnp.asarray(1.0))) == pytest.approx(1.0, abs=1e-4)
