@@ -10,11 +10,12 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core import ns_solver, schedulers, toy
-from repro.core.anytime import evaluate_anytime, train_anytime
-from repro.core.bns import BNSTrainConfig, generate_pairs, psnr, solver_to_ns, train_bns
+from repro.core import schedulers, toy
+from repro.core.anytime import evaluate_anytime
+from repro.core.bns import BNSTrainConfig, generate_pairs
+from repro.solvers import SolverSpec
 
-BUDGETS = [4, 8, 16]
+BUDGETS = (4, 8, 16)
 
 
 def run(iterations: int = 10_000, dedicated_iters: int = 3000, log=print):
@@ -24,20 +25,19 @@ def run(iterations: int = 10_000, dedicated_iters: int = 3000, log=print):
     train = generate_pairs(field, jax.random.PRNGKey(0), 256, (2,))
     val = generate_pairs(field, jax.random.PRNGKey(1), 256, (2,))
 
-    cfg = BNSTrainConfig(nfe=16, init_solver="midpoint", iterations=iterations,
-                         lr=1.5e-3, val_every=500, batch_size=64)
-    res = train_anytime(field, BUDGETS, train, val, cfg, mode="nested")
+    cfg = BNSTrainConfig(iterations=iterations, lr=1.5e-3, val_every=500,
+                         batch_size=64)
+    res = SolverSpec("midpoint", mode="anytime", budgets=BUDGETS) \
+        .distill(field, train, val, cfg)
     anytime_scores = evaluate_anytime(res.params, BUDGETS, field, val)
 
     rows = []
     for m in BUDGETS:
-        ded = train_bns(field, train, val,
-                        BNSTrainConfig(nfe=m, init_solver="midpoint",
-                                       iterations=dedicated_iters, lr=1e-3,
-                                       val_every=300, batch_size=64))
-        base = solver_to_ns("midpoint", m, field)
-        bp = float(jnp.mean(psnr(ns_solver.ns_sample(base, field.fn, val[0]),
-                                 val[1])))
+        ded = SolverSpec("midpoint", m, mode="bns").distill(
+            field, train, val,
+            BNSTrainConfig(iterations=dedicated_iters, lr=1e-3,
+                           val_every=300, batch_size=64))
+        bp = SolverSpec("midpoint", m).sampler(field).psnr(val)
         rows.append({"nfe": m, "anytime": anytime_scores[m],
                      "dedicated": ded.val_psnr, "midpoint": bp})
         log(f"anytime NFE={m}: shared={anytime_scores[m]:.2f} "

@@ -9,20 +9,20 @@ runner-up across all 8 datasets).
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import get_config
-from repro.core import ns_solver
-from repro.core.bns import BNSTrainConfig, psnr, solver_to_ns, train_bns
+from repro.core.bns import BNSTrainConfig
 from repro.core.rk45 import rk45_solve
 from repro.core.schedulers import fm_ot
 from repro.data.synthetic import DataConfig, SyntheticTokens
 from repro.launch.train import train
 from repro.models import model as M
+from repro.solvers import SolverSpec, solver_names
 
 ARCH = "whisper-medium"
 SEQ, BATCH = 16, 24
 NFES = [8, 16]
+BASELINES = solver_names(family="generic", baseline=True)  # euler, midpoint
 
 
 def run(train_steps: int = 200, bns_iters: int = 300, log=print):
@@ -42,15 +42,14 @@ def run(train_steps: int = 200, bns_iters: int = 300, log=print):
     rows = []
     for nfe in NFES:
         row = {"nfe": nfe}
-        for name in ["euler", "midpoint"]:
-            ns = solver_to_ns(name, nfe, field)
-            xh = ns_solver.ns_sample(ns, field.fn, x0v)
+        for name in BASELINES:
             # SNR(dB) wrt RK45 ground truth == PSNR with max_val = rms(signal)
-            row[name] = float(jnp.mean(psnr(xh, x1v)))
-        cfg_bns = BNSTrainConfig(nfe=nfe, init_solver="midpoint", lr=1e-3,
-                                 lr_schedule="cosine", iterations=bns_iters,
-                                 val_every=50, batch_size=BATCH)
-        row["bns"] = train_bns(field, (x0, x1), (x0v, x1v), cfg_bns).val_psnr
+            row[name] = SolverSpec(name, nfe).sampler(field).psnr((x0v, x1v))
+        cfg_bns = BNSTrainConfig(lr=1e-3, lr_schedule="cosine",
+                                 iterations=bns_iters, val_every=50,
+                                 batch_size=BATCH)
+        row["bns"] = SolverSpec("midpoint", nfe, mode="bns") \
+            .distill(field, (x0, x1), (x0v, x1v), cfg_bns).val_psnr
         rows.append(row)
         log(f"audio NFE={nfe}: euler={row['euler']:.2f} "
             f"midpoint={row['midpoint']:.2f} BNS={row['bns']:.2f}")

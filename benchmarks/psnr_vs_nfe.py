@@ -14,14 +14,13 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.core import ns_solver, schedulers, toy
-from repro.core.bns import (
-    BNSTrainConfig, generate_pairs, psnr, solver_to_ns, train_bns, train_bst,
-)
+from repro.core import schedulers, toy
+from repro.core.bns import BNSTrainConfig, generate_pairs
+from repro.solvers import SolverSpec, solver_names
 
 SCHEDS = ["fm_ot", "fm_cs", "vp"]
 NFES = [4, 8, 16]
-BASELINES = ["euler", "midpoint", "ddim", "dpm2m"]
+BASELINES = solver_names(baseline=True)  # euler, midpoint, ddim, dpm2m
 
 
 def make_field(sname: str):
@@ -39,19 +38,15 @@ def run(iterations: int = 3000, lr: float = 1e-3, log=print) -> list[dict]:
         for nfe in NFES:
             row = {"scheduler": sname, "nfe": nfe}
             for name in BASELINES:
-                ns = solver_to_ns(name, nfe, field)
-                xh = ns_solver.ns_sample(ns, field.fn, val[0])
-                row[name] = float(jnp.mean(psnr(xh, val[1])))
-            cfg = BNSTrainConfig(nfe=nfe, init_solver="midpoint", lr=lr,
-                                 iterations=iterations, val_every=100,
+                row[name] = SolverSpec(name, nfe).sampler(field).psnr(val)
+            cfg = BNSTrainConfig(lr=lr, iterations=iterations, val_every=100,
                                  batch_size=64)
             t0 = time.time()
-            row["bns"] = train_bns(field, train, val, cfg).val_psnr
+            row["bns"] = SolverSpec("midpoint", nfe, mode="bns") \
+                .distill(field, train, val, cfg).val_psnr
             row["bns_train_s"] = round(time.time() - t0, 1)
-            cfg_bst = BNSTrainConfig(nfe=nfe, init_solver="euler", lr=lr,
-                                     iterations=iterations, val_every=100,
-                                     batch_size=64)
-            row["bst"] = train_bst(field, train, val, cfg_bst).val_psnr
+            row["bst"] = SolverSpec("euler", nfe, mode="bst") \
+                .distill(field, train, val, cfg).val_psnr
             rows.append(row)
             log(f"{sname} NFE={nfe}: " + " ".join(
                 f"{k}={v:.2f}" for k, v in row.items()

@@ -14,20 +14,20 @@ Pipeline (the paper's, end to end):
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import get_config
-from repro.core import ns_solver
-from repro.core.bns import BNSTrainConfig, psnr, solver_to_ns, train_bns
+from repro.core.bns import BNSTrainConfig
 from repro.core.rk45 import rk45_solve
 from repro.core.schedulers import fm_ot
 from repro.data.synthetic import DataConfig, SyntheticTokens
 from repro.launch.train import train
 from repro.models import model as M
+from repro.solvers import SolverSpec, solver_names
 
 ARCH = "yi-6b"
 SEQ, BATCH = 16, 32
 NFES = [8, 12]
+BASELINES = solver_names(family="generic", baseline=True)  # euler, midpoint
 
 
 def build_field(params, cfg, batch, w):
@@ -59,20 +59,17 @@ def run(w: float = 2.0, train_steps: int = 250, bns_iters: int = 400,
     rows = []
     for nfe in NFES:
         row = {"w": w, "nfe": nfe}
-        for name in ["euler", "midpoint"]:
-            ns = solver_to_ns(name, nfe, field)
-            xh = ns_solver.ns_sample(ns, field.fn, val_pairs[0])
-            row[name] = float(jnp.mean(psnr(xh, val_pairs[1])))
+        for name in BASELINES:
+            row[name] = SolverSpec(name, nfe).sampler(field).psnr(val_pairs)
         # initial solver = preconditioned Euler (Table 5's 'Initial Solver')
         sigma0 = 1.0 if w == 0.0 else 2.0
-        ns0 = solver_to_ns("euler", nfe, field, sigma0=sigma0)
-        xh0 = ns_solver.ns_sample(ns0, field.fn, val_pairs[0])
-        row["initial_solver"] = float(jnp.mean(psnr(xh0, val_pairs[1])))
-        cfg_bns = BNSTrainConfig(nfe=nfe, init_solver="euler", sigma0=sigma0,
-                                 lr=1e-3, lr_schedule="cosine",
+        spec = SolverSpec("euler", nfe, sigma0=sigma0, cfg_scale=w, mode="bns")
+        row["initial_solver"] = spec.sampler(field).psnr(val_pairs)
+        cfg_bns = BNSTrainConfig(lr=1e-3, lr_schedule="cosine",
                                  iterations=bns_iters, val_every=50,
                                  batch_size=BATCH)
-        row["bns"] = train_bns(field, train_pairs, val_pairs, cfg_bns).val_psnr
+        row["bns"] = spec.distill(field, train_pairs, val_pairs,
+                                  cfg_bns).val_psnr
         rows.append(row)
         log(f"w={w} NFE={nfe}: euler={row['euler']:.2f} "
             f"midpoint={row['midpoint']:.2f} init={row['initial_solver']:.2f} "

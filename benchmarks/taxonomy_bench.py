@@ -8,12 +8,11 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import ns_solver, schedulers, solvers, st_solvers, st_transform, taxonomy, toy
-from repro.core.bns import solver_to_ns
 from repro.core.bst_solver import bst_euler_program, identity_bst, materialize_bst
-from repro.core.exponential import ddim_program, dpm2m_program, exp_grid
+from repro.core.exponential import ddim_program, dpm2m_program
+from repro.solvers import build_ns, get_solver
 
 
 def run(log=print):
@@ -23,23 +22,28 @@ def run(log=print):
     x0 = jax.random.normal(jax.random.PRNGKey(0), (64, 2))
     rows = []
 
+    # registered solvers: direct program run vs the registry's NS build
     cases = []
     for name in ["euler", "midpoint", "heun", "rk4", "ab2", "ab4"]:
-        grid = solvers.grid_for_nfe(name, 8)
-        cases.append((name, solvers.solver_program(name), (grid,)))
+        grid = get_solver(name).default_grid(8, field)
+        cases.append((name, solvers.solver_program(name), (grid,),
+                      build_ns(name, 8, field)))
     for name, prog in [("ddim", ddim_program), ("dpm2m", dpm2m_program)]:
-        cases.append((name, prog, (exp_grid(sched, 8), sched)))
+        cases.append((name, prog, (get_solver(name).default_grid(8, field),
+                                   sched), build_ns(name, 8, field)))
+    # bespoke constructions outside the registry: convert via taxonomy directly
     st = st_transform.scheduler_change_st(sched, st_transform.scaled_sigma(sched, 3.0))
     cases.append(("st_euler_sigma3", st_solvers.st_program(solvers.euler_program, st),
-                  (solvers.uniform_grid(8),)))
+                  (solvers.uniform_grid(8),), None))
     cases.append(("edm_heun", st_solvers.edm_program(solvers.heun_program, sched, 20.0),
-                  (solvers.power_grid(4, 3.0),)))
+                  (solvers.power_grid(4, 3.0),), None))
     cases.append(("bst_euler", bst_euler_program,
-                  (materialize_bst(identity_bst(8)),)))
+                  (materialize_bst(identity_bst(8)),), None))
 
-    for name, prog, args in cases:
+    for name, prog, args, ns in cases:
         direct = taxonomy.run_direct(prog, field, x0, *args)
-        ns = taxonomy.to_ns(prog, *args)
+        if ns is None:
+            ns = taxonomy.to_ns(prog, *args)
         sample = jax.jit(lambda x, p=ns: ns_solver.ns_sample(p, field.fn, x))
         out = sample(x0)
         err = float(jnp.max(jnp.abs(out - direct)))

@@ -5,7 +5,7 @@
 Steps (the whole paper in miniature):
   1. take a 'pre-trained' flow model — the exact mixture velocity field;
   2. generate (noise, sample) pairs with adaptive RK45 (the GT sampler);
-  3. convert baselines (Euler/Midpoint/DDIM/DPM++) to NS form and score them;
+  3. score every registered baseline solver (list_solvers) in NS form;
   4. optimize a Bespoke Non-Stationary solver (Algorithm 2) at NFE=8;
   5. print the PSNR leaderboard — BNS should win by several dB.
 """
@@ -13,9 +13,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import ns_solver, schedulers, toy
-from repro.core.bns import (
-    BNSTrainConfig, generate_pairs, psnr, solver_to_ns, train_bns,
-)
+from repro.core.bns import BNSTrainConfig, generate_pairs
+from repro.solvers import SolverSpec, list_solvers
 
 NFE = 8
 
@@ -30,17 +29,16 @@ def main():
     val = generate_pairs(field, jax.random.PRNGKey(1), 256, (2,))
 
     scores = {}
-    for name in ["euler", "midpoint", "ddim", "dpm2m"]:
-        ns = solver_to_ns(name, NFE, field)
-        xh = ns_solver.ns_sample(ns, field.fn, val[0])
-        scores[name] = float(jnp.mean(psnr(xh, val[1])))
+    for info in list_solvers(baseline=True):
+        scores[info.name] = SolverSpec(info.name, NFE).sampler(field).psnr(val)
 
     print(f"training BNS solver (NFE={NFE}, "
           f"{ns_solver.count_parameters(NFE)} parameters)...")
-    cfg = BNSTrainConfig(nfe=NFE, init_solver="midpoint", iterations=800,
-                         val_every=100, batch_size=64)
-    res = train_bns(field, train, val, cfg,
-                    log=lambda m: print("  " + m))
+    spec = SolverSpec("midpoint", NFE, mode="bns")
+    res = spec.distill(field, train, val,
+                       BNSTrainConfig(iterations=800, val_every=100,
+                                      batch_size=64),
+                       log=lambda m: print("  " + m))
     scores["BNS (ours)"] = res.val_psnr
 
     print(f"\nPSNR @ {NFE} NFE (vs RK45 ground truth):")

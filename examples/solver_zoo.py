@@ -9,9 +9,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import ns_solver, schedulers, solvers, st_solvers, st_transform, taxonomy, toy
-from repro.core.bns import solver_to_ns
 from repro.core.bst_solver import bst_euler_program, identity_bst, materialize_bst
 from repro.core.exponential import ddim_program, dpm2m_program, exp_grid
+from repro.solvers import list_solvers
 
 
 def main():
@@ -49,6 +49,13 @@ def main():
         print(f"{name:20s} {family:22s} {ns.n:3d} {err:16.2e}")
     print("\nEvery family is a point in the Non-Stationary space (Fig. 3) — "
           "BNS optimizes over all of them at once.")
+
+    print(f"\nregistry ({len(list_solvers())} solvers): "
+          f"{'name':12s} {'family':14s} sigma0  grid")
+    for info in list_solvers():
+        print(f"  {info.name:12s} {info.family:14s} "
+              f"{'yes' if info.supports_sigma0 else 'no ':3s}    "
+              f"{info.grid_family}")
 
 
 if __name__ == "__main__":

@@ -5,24 +5,25 @@ batched generation requests.
   PYTHONPATH=src python examples/train_flow_lm.py [--arch yi-6b] [--steps 300]
 
 This is the production path in miniature: launch.train (CFM, checkpoints) ->
-RK45 GT generation -> Algorithm 2 -> serving.FlowSampler (batched requests,
-exactly NFE backbone forwards per batch).
+RK45 GT generation -> SolverSpec.distill (Algorithm 2) -> SolverArtifact
+save/load -> serving.FlowSampler.from_artifact (batched requests, exactly
+NFE backbone forwards per batch).
 """
 import argparse
+import os
 import tempfile
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import get_config
-from repro.core.bns import BNSTrainConfig, psnr, solver_to_ns, train_bns
-from repro.core.ns_solver import materialize
+from repro.core.bns import BNSTrainConfig
 from repro.core.rk45 import rk45_solve
 from repro.core.schedulers import fm_ot
 from repro.data.synthetic import DataConfig, SyntheticTokens
 from repro.launch.train import train
 from repro.models import model as M
 from repro.serving.engine import FlowSampler
+from repro.solvers import SolverArtifact, SolverSpec
 
 
 def main():
@@ -51,20 +52,23 @@ def main():
     x1v = rk45_solve(field.fn, x0v, rtol=1e-5, atol=1e-5).x1
 
     print(f"[3/4] BNS distillation at NFE={args.nfe} (Algorithm 2)...")
-    bns_cfg = BNSTrainConfig(nfe=args.nfe, init_solver="euler", lr=1e-3,
-                             lr_schedule="cosine", iterations=300,
-                             val_every=50, batch_size=24)
-    res = train_bns(field, (x0, x1), (x0v, x1v), bns_cfg,
-                    log=lambda m: print("      " + m))
-    base = solver_to_ns("euler", args.nfe, field)
-    from repro.core.ns_solver import ns_sample
-    base_psnr = float(jnp.mean(psnr(ns_sample(base, field.fn, x0v), x1v)))
+    spec = SolverSpec("euler", args.nfe, mode="bns")
+    res = spec.distill(field, (x0, x1), (x0v, x1v),
+                       BNSTrainConfig(lr=1e-3, lr_schedule="cosine",
+                                      iterations=300, val_every=50,
+                                      batch_size=24),
+                       log=lambda m: print("      " + m))
+    base_psnr = SolverSpec("euler", args.nfe).sampler(field).psnr((x0v, x1v))
     print(f"      Euler {base_psnr:.2f} dB -> BNS {res.val_psnr:.2f} dB "
           f"({res.num_parameters} params, {res.wall_seconds:.0f}s)")
 
-    print("[4/4] serving batched requests with the distilled sampler...")
-    sampler = FlowSampler(params=params, cfg=cfg, sched=fm_ot(),
-                          solver=materialize(res.params))
+    print("[4/4] serving from the saved solver artifact...")
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "solver.msgpack")
+        res.artifact(provenance={"arch": args.arch}).save(path)
+        artifact = SolverArtifact.load(path)
+    sampler = FlowSampler.from_artifact(artifact, params=params, cfg=cfg,
+                                        sched=fm_ot())
     latents = sampler.sample(cond, jax.random.PRNGKey(7))
     tokens = sampler.nearest_tokens(latents)
     print(f"      sampled latents {latents.shape} -> tokens {tokens.shape}; "

@@ -6,6 +6,7 @@ treedef, so NamedTuples and custom nodes round-trip.
 """
 from __future__ import annotations
 
+import json
 import os
 from typing import Any
 
@@ -26,9 +27,12 @@ def _unpack_leaf(d: dict) -> np.ndarray:
         .reshape(d[b"shape"])
 
 
-def save(path: str, tree: Any) -> None:
+def save(path: str, tree: Any, meta: dict | None = None) -> None:
+    """Save a pytree; ``meta`` (JSON-serializable) rides along if given."""
     leaves = jax.tree.leaves(tree)
     payload = {b"leaves": [_pack_leaf(l) for l in leaves]}
+    if meta is not None:
+        payload[b"meta"] = json.dumps(meta).encode()
     tmp = path + ".tmp"
     os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
     with open(tmp, "wb") as f:
@@ -46,6 +50,14 @@ def restore(path: str, template: Any) -> Any:
         f"checkpoint has {len(leaves)} leaves, template {len(t_leaves)}")
     leaves = [l.astype(t.dtype) for l, t in zip(leaves, t_leaves)]
     return jax.tree.unflatten(treedef, leaves)
+
+
+def load_meta(path: str) -> dict | None:
+    """Read only the JSON metadata written by ``save(..., meta=...)``."""
+    with open(path, "rb") as f:
+        payload = msgpack.unpackb(f.read())
+    raw = payload.get(b"meta")
+    return None if raw is None else json.loads(raw.decode())
 
 
 def latest_step(ckpt_dir: str) -> int | None:

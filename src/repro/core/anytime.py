@@ -33,8 +33,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import ns_solver
-from repro.core.bns import BNSTrainConfig, TrainResult, psnr, solver_to_ns  # noqa: F401
+from repro.core.bns import BNSTrainConfig, TrainResult, psnr
 from repro.core.parametrization import VelocityField
 from repro.optim import adam_init, adam_update, cosine_annealing, poly_decay
 
@@ -74,16 +73,19 @@ def nested_grid(budgets: Sequence[int]) -> np.ndarray:
 def init_anytime(field: VelocityField, budgets: Sequence[int],
                  mode: str = "nested", init_solver: str = "midpoint",
                  sigma0: float = 1.0) -> AnytimeParams:
+    # function-level import: repro.solvers.spec imports this module back
+    from repro.solvers.registry import build_ns
+
     budgets = sorted(budgets)
     n = budgets[-1]
     if mode == "prefix":
         # the paper-natural (monotone, generic-solver) init — kept for the
         # ablation; it is a local-optimum trap for the small budgets.
-        ns0 = solver_to_ns(init_solver, n, field, sigma0=sigma0)
+        ns0 = build_ns(init_solver, n, field, sigma0=sigma0)
         time_raw, a, b = _logit(ns0.times), ns0.a, ns0.b
         exits_a, exits_b = [], []
         for m in budgets[:-1]:
-            ns_m = solver_to_ns(init_solver, m, field, sigma0=sigma0)
+            ns_m = build_ns(init_solver, m, field, sigma0=sigma0)
             exits_a.append(ns_m.a[-1])
             exits_b.append(jnp.pad(ns_m.b[-1], (0, n - m)))
         return AnytimeParams(time_raw=time_raw, a=a, b=b,

@@ -20,12 +20,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import bst_solver, ns_solver, solvers, st_solvers, st_transform
-from repro.core.exponential import exp_grid, exponential_program
+from repro.core import bst_solver, ns_solver, st_transform
 from repro.core.ns_solver import BNSParams, NSParams
 from repro.core.parametrization import VelocityField
 from repro.core.rk45 import rk45_solve
-from repro.core.taxonomy import run_direct, to_ns
+from repro.core.taxonomy import run_direct
 from repro.optim import adam_init, adam_update, cosine_annealing, poly_decay
 
 Array = jax.Array
@@ -63,9 +62,6 @@ def generate_pairs(
 # Initialization (generic solver -> NS params, with preconditioning)
 # ---------------------------------------------------------------------------
 
-_GENERIC = {"euler", "midpoint", "heun", "rk4", "ab2", "ab4"}
-_EXP = {"ddim", "dpm2m"}
-
 
 def solver_to_ns(
     name: str,
@@ -75,30 +71,19 @@ def solver_to_ns(
     sigma0: float = 1.0,
     grid=None,
 ) -> NSParams:
-    """Convert any named solver (optionally sigma0-preconditioned) to NS params.
+    """DEPRECATED shim over ``repro.solvers.registry.build_ns``.
 
-    The returned parameters sample the ORIGINAL field via Algorithm 1 — the
-    preconditioning ST transform is absorbed into the coefficients.
+    The string-dispatch ladder that used to live here is now the solver
+    registry; use ``repro.solvers.build_ns`` (or ``SolverSpec.build``)
+    directly. Kept so existing call sites and tests keep working.
     """
-    if name in _GENERIC:
-        grid = solvers.grid_for_nfe(name, nfe) if grid is None else grid
-        prog = solvers.solver_program(name)
-        if sigma0 != 1.0:
-            target = st_transform.scaled_sigma(field.scheduler, sigma0)
-            st = st_transform.scheduler_change_st(field.scheduler, target)
-            return to_ns(st_solvers.st_program(prog, st), grid)
-        return to_ns(prog, grid)
-    if name in _EXP:
-        if grid is None:
-            grid = exp_grid(field.scheduler, nfe)
-        if sigma0 != 1.0:
-            raise ValueError("precondition exponential solvers via their own scheduler")
-        return to_ns(exponential_program(name), grid, field.scheduler)
-    if name == "edm_heun":
-        grid = solvers.grid_for_nfe("heun", nfe) if grid is None else grid
-        prog = st_solvers.edm_program(solvers.heun_program, field.scheduler)
-        return to_ns(prog, grid)
-    raise KeyError(f"unknown solver {name!r}")
+    import warnings
+
+    from repro.solvers.registry import build_ns
+
+    warnings.warn("solver_to_ns is deprecated; use repro.solvers.build_ns "
+                  "or SolverSpec.build", DeprecationWarning, stacklevel=2)
+    return build_ns(name, nfe, field, sigma0=sigma0, grid=grid)
 
 
 def ns_sampler(field: VelocityField) -> Callable[[BNSParams, Array], Array]:
@@ -220,7 +205,9 @@ def train_bns(
     *,
     log=None,
 ) -> TrainResult:
-    ns0 = solver_to_ns(cfg.init_solver, cfg.nfe, field, sigma0=cfg.sigma0)
+    from repro.solvers.registry import build_ns
+
+    ns0 = build_ns(cfg.init_solver, cfg.nfe, field, sigma0=cfg.sigma0)
     theta0 = ns_solver.from_ns(ns0)
     res = train_solver(ns_sampler(field), theta0, train_pairs, val_pairs, cfg, log=log)
     # Report the paper's parameter count (canonical dimension of the family).
@@ -240,6 +227,7 @@ def make_distributed_bns_step(field: VelocityField, cfg: BNSTrainConfig, mesh):
     from jax.sharding import NamedSharding, PartitionSpec as P
 
     from repro.launch.mesh import batch_axes
+    from repro.solvers.registry import build_ns
 
     b = batch_axes(mesh)
     b = b if len(b) > 1 else b[0]
@@ -253,7 +241,7 @@ def make_distributed_bns_step(field: VelocityField, cfg: BNSTrainConfig, mesh):
         theta, opt = adam_update(grads, opt, theta, lr_fn(it))
         return theta, opt, loss
 
-    ns0 = solver_to_ns(cfg.init_solver, cfg.nfe, field, sigma0=cfg.sigma0)
+    ns0 = build_ns(cfg.init_solver, cfg.nfe, field, sigma0=cfg.sigma0)
     theta0 = ns_solver.from_ns(ns0)
     opt0 = adam_init(theta0)
     repl = NamedSharding(mesh, P())

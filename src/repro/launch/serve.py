@@ -1,17 +1,22 @@
 """Serving launcher: BNS-accelerated flow sampling or autoregressive decode.
 
   PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --mode flow \
-      --nfe 8 --batch 8 --seq 16 [--ckpt /path/step_N.msgpack]
+      --nfe 8 --batch 8 --seq 16 [--ckpt /path/step_N.msgpack] \
+      [--solver-artifact /path/solver.msgpack]
   PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-7b --mode decode \
       --batch 4 --steps 32
 
-Flow mode distills a BNS solver on the fly if no solver checkpoint is given
-(Algorithm 2 on freshly generated RK45 pairs), then serves batched requests
-at exactly --nfe backbone forwards per batch.
+Flow mode serves from a saved ``SolverArtifact`` when --solver-artifact
+points at an existing file (no retraining on boot); otherwise it distills a
+BNS solver (Algorithm 2 on freshly generated RK45 pairs), saves the artifact
+(to --solver-artifact or a temp file), and serves from the reloaded copy —
+so every serving session exercises the artifact round-trip.
 """
 from __future__ import annotations
 
 import argparse
+import os
+import tempfile
 import time
 
 import jax
@@ -19,13 +24,38 @@ import jax.numpy as jnp
 
 from repro.checkpoint import checkpointer
 from repro.configs import get_config
-from repro.core.bns import BNSTrainConfig, psnr, solver_to_ns, train_bns
-from repro.core.ns_solver import materialize
+from repro.core.bns import BNSTrainConfig
 from repro.core.rk45 import rk45_solve
 from repro.core.schedulers import get_scheduler
 from repro.data.synthetic import DataConfig, SyntheticTokens
 from repro.models import model as M
 from repro.serving.engine import DecodeEngine, FlowSampler
+from repro.solvers import SolverArtifact, SolverSpec
+
+
+def _distill_artifact(args, field, cfg) -> SolverArtifact:
+    """Algorithm 2 on fresh RK45 pairs; returns the saved-and-reloaded artifact."""
+    print(f"distilling BNS solver (NFE={args.nfe}) ...")
+    spec = SolverSpec(name="euler", nfe=args.nfe, cfg_scale=args.cfg_scale,
+                      mode="bns")
+    solve = jax.jit(lambda x: rk45_solve(field.fn, x, rtol=1e-5, atol=1e-5).x1)
+    k_tr, k_val = jax.random.split(jax.random.PRNGKey(args.seed + 1))
+    shape = (args.batch, args.seq, cfg.latent_dim)
+    x0 = jax.random.normal(k_tr, shape)
+    x0v = jax.random.normal(k_val, shape)  # held-out: no train/val leak
+    res = spec.distill(field, (x0, solve(x0)), (x0v, solve(x0v)),
+                       BNSTrainConfig(lr=1e-3, lr_schedule="cosine",
+                                      iterations=args.bns_iters, val_every=100,
+                                      batch_size=args.batch))
+    print(f"solver ready: {res.num_parameters} params, "
+          f"val PSNR {res.val_psnr:.2f} dB, {res.wall_seconds:.0f}s")
+    path = args.solver_artifact or os.path.join(
+        tempfile.mkdtemp(prefix="bns_solver_"), "solver.msgpack")
+    res.artifact(provenance={"arch": args.arch, "scheduler": args.scheduler,
+                             "seed": args.seed,
+                             "bns_iters": args.bns_iters}).save(path)
+    print(f"solver artifact saved to {path}")
+    return SolverArtifact.load(path)
 
 
 def serve_flow(args) -> None:
@@ -41,27 +71,31 @@ def serve_flow(args) -> None:
     cond = data.batch(0)
     field = M.velocity_field(params, cfg, sched, cond, cfg_scale=args.cfg_scale)
 
-    print(f"distilling BNS solver (NFE={args.nfe}) ...")
-    key = jax.random.PRNGKey(args.seed + 1)
-    x0 = jax.random.normal(key, (args.batch, args.seq, cfg.latent_dim))
-    x1 = rk45_solve(field.fn, x0, rtol=1e-5, atol=1e-5).x1
-    res = train_bns(field, (x0, x1), (x0, x1),
-                    BNSTrainConfig(nfe=args.nfe, init_solver="euler", lr=1e-3,
-                                   lr_schedule="cosine",
-                                   iterations=args.bns_iters, val_every=100,
-                                   batch_size=args.batch))
-    print(f"solver ready: {res.num_parameters} params, "
-          f"val PSNR {res.val_psnr:.2f} dB, {res.wall_seconds:.0f}s")
+    if args.solver_artifact and os.path.exists(args.solver_artifact):
+        artifact = SolverArtifact.load(args.solver_artifact)
+        print(f"loaded solver artifact {args.solver_artifact}: "
+              f"{artifact.spec.mode}/{artifact.spec.name} "
+              f"NFE={artifact.spec.nfe}, val PSNR {artifact.val_psnr:.2f} dB "
+              f"(no retraining)")
+        for key, want in [("arch", args.arch), ("scheduler", args.scheduler)]:
+            have = artifact.provenance.get(key)
+            if have is not None and have != want:
+                print(f"WARNING: artifact was distilled for {key}={have!r} "
+                      f"but serving {key}={want!r} — samples will be degraded")
+        if artifact.spec.nfe != args.nfe:
+            print(f"WARNING: --nfe {args.nfe} ignored; artifact serves at "
+                  f"NFE={artifact.spec.nfe}")
+    else:
+        artifact = _distill_artifact(args, field, cfg)
 
-    sampler = FlowSampler(params=params, cfg=cfg, sched=sched,
-                          solver=materialize(res.params),
-                          cfg_scale=args.cfg_scale)
+    sampler = FlowSampler.from_artifact(artifact, params=params, cfg=cfg,
+                                        sched=sched)
     for req in range(args.requests):
         t0 = time.time()
         latents = sampler.sample(cond, jax.random.PRNGKey(1000 + req))
         tokens = sampler.nearest_tokens(latents)
         print(f"request {req}: sampled {tokens.shape} in "
-              f"{(time.time()-t0)*1e3:.0f} ms ({args.nfe} NFE)")
+              f"{(time.time()-t0)*1e3:.0f} ms ({artifact.spec.nfe} NFE)")
 
 
 def serve_decode(args) -> None:
@@ -87,6 +121,9 @@ def main() -> None:
     ap.add_argument("--full", dest="smoke", action="store_false")
     ap.add_argument("--scheduler", default="fm_ot")
     ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--solver-artifact", default=None,
+                    help="load the solver from this artifact if it exists; "
+                         "otherwise distill and save it here")
     ap.add_argument("--nfe", type=int, default=8)
     ap.add_argument("--cfg-scale", type=float, default=0.0)
     ap.add_argument("--bns-iters", type=int, default=300)

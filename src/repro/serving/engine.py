@@ -1,8 +1,9 @@
 """Serving engines.
 
 ``FlowSampler`` — the paper's product: BNS-accelerated batched sampling of a
-flow model (any backbone in the zoo). Given a trained (or baseline-converted)
-NS solver, each request batch costs exactly ``n`` backbone forwards.
+flow model (any backbone in the zoo). A thin jit'd session over Algorithm 1:
+construct it from a serialized ``SolverArtifact`` (``from_artifact``) or any
+NS solver, and each request batch costs exactly ``n`` backbone forwards.
 
 ``DecodeEngine`` — batched autoregressive decode with KV cache / recurrent
 state (the ``serve_step`` the decode dry-run shapes lower).
@@ -10,7 +11,6 @@ state (the ``serve_step`` the decode dry-run shapes lower).
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -40,8 +40,25 @@ class FlowSampler:
 
         self._sample = jax.jit(_sample)
 
-    def sample(self, batch: dict, key: Array, seq_len: Optional[int] = None) -> Array:
-        """Generate latent sequences conditioned on ``batch`` tokens."""
+    @classmethod
+    def from_artifact(cls, artifact, *, params: dict, cfg: ModelConfig,
+                      sched: Scheduler) -> "FlowSampler":
+        """Serving session from a loaded ``repro.solvers.SolverArtifact``.
+
+        The artifact carries the solver parameters and the CFG scale it was
+        distilled under; the backbone (params/cfg/sched) is supplied by the
+        launcher.
+        """
+        return cls(params=params, cfg=cfg, sched=sched,
+                   solver=artifact.ns_params,
+                   cfg_scale=artifact.spec.cfg_scale)
+
+    def sample(self, batch: dict, key: Array) -> Array:
+        """Generate latent sequences conditioned on ``batch`` tokens.
+
+        The latent length equals the conditioning token length — the backbone
+        adds conditioning embeddings position-wise, so they cannot differ.
+        """
         B, S = batch["tokens"].shape
         x0 = jax.random.normal(key, (B, S, self.cfg.latent_dim))
         return self._sample(self.params, self.solver, batch, x0)

@@ -1,0 +1,30 @@
+"""repro.solvers — unified solver API (registry / spec / artifact / pipeline).
+
+The solver lifecycle in three lines:
+
+    spec = SolverSpec("midpoint", nfe=8, mode="bns")
+    art = spec.distill(field, train_pairs, val_pairs, cfg).artifact()
+    art.save("solver.msgpack")   # serve: SolverArtifact.load(...).sampler(field)
+
+``registry``  — ``@register_solver`` + capability-filtered ``list_solvers()``;
+``spec``      — ``SolverSpec.build/distill`` unifying baseline/BNS/BST/anytime;
+``artifact``  — serializable solver product (spec + params + PSNR + provenance);
+``pipeline``  — ``Sampler``, the thin jit'd Algorithm-1 session.
+"""
+from repro.solvers.artifact import SolverArtifact, save_artifact
+from repro.solvers.pipeline import Sampler, evaluate_psnr
+from repro.solvers.registry import (
+    SolverInfo,
+    build_ns,
+    get_solver,
+    list_solvers,
+    register_solver,
+    solver_names,
+)
+from repro.solvers.spec import MODES, SolverSpec, TrainedSolver
+
+__all__ = [
+    "MODES", "Sampler", "SolverArtifact", "SolverInfo", "SolverSpec",
+    "TrainedSolver", "build_ns", "evaluate_psnr", "get_solver",
+    "list_solvers", "register_solver", "save_artifact", "solver_names",
+]

@@ -1,0 +1,111 @@
+"""SolverArtifact — the <200-parameter solver as a serializable product.
+
+The paper's solver is trained once and served everywhere; this is its wire
+format: the ``SolverSpec``, the trained parameter pytree, the validation
+PSNR it earned, and free-form provenance (arch, scheduler, git rev, ...).
+Storage goes through ``repro.checkpoint.checkpointer`` (msgpack leaves +
+JSON meta), so an artifact is a single ``.msgpack`` file that round-trips
+bit-exactly — ``launch/serve.py`` loads one instead of re-distilling.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax.numpy as jnp
+
+from repro.checkpoint import checkpointer
+from repro.core import anytime as anytime_mod
+from repro.core import bst_solver, ns_solver
+from repro.core.ns_solver import NSParams
+from repro.core.parametrization import VelocityField
+from repro.solvers.pipeline import Sampler
+from repro.solvers.spec import SolverSpec, reduce_to_ns
+
+FORMAT = "bns-solver-artifact"
+FORMAT_VERSION = 1
+
+_KINDS = {
+    NSParams: "ns",
+    ns_solver.BNSParams: "bns",
+    bst_solver.BSTParams: "bst",
+    anytime_mod.AnytimeParams: "anytime",
+}
+
+
+def _param_template(kind: str, spec: SolverSpec):
+    """Zero pytree with the shapes ``spec`` implies, for checkpoint restore."""
+    n = spec.nfe
+    if kind == "ns":
+        return NSParams(times=jnp.zeros((n,)), a=jnp.zeros((n,)),
+                        b=jnp.zeros((n, n)))
+    if kind == "bns":
+        return ns_solver.BNSParams(time_logits=jnp.zeros((n,)),
+                                   a=jnp.zeros((n,)), b=jnp.zeros((n, n)))
+    if kind == "bst":
+        k = bst_solver.knot_positions(n, spec.name).shape[0]
+        return bst_solver.BSTParams(time_logits=jnp.zeros((k - 1,)),
+                                    log_s=jnp.zeros((k,)),
+                                    log_dt=jnp.zeros((k,)),
+                                    ds=jnp.zeros((k,)))
+    if kind == "anytime":
+        m = len(spec.budgets) - 1
+        return anytime_mod.AnytimeParams(time_raw=jnp.zeros((n,)),
+                                         a=jnp.zeros((n,)),
+                                         b=jnp.zeros((n, n)),
+                                         exit_a=jnp.zeros((m,)),
+                                         exit_b=jnp.zeros((m, n)))
+    raise ValueError(f"unknown artifact param kind {kind!r}")
+
+
+@dataclasses.dataclass
+class SolverArtifact:
+    """spec + trained params + val PSNR + provenance, in one file."""
+
+    spec: SolverSpec
+    params: Any
+    val_psnr: float
+    provenance: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def kind(self) -> str:
+        try:
+            return _KINDS[type(self.params)]
+        except KeyError:
+            raise TypeError(
+                f"unsupported artifact params {type(self.params).__name__}")
+
+    @property
+    def ns_params(self) -> NSParams:
+        """Canonical NS parameters for Algorithm-1 serving."""
+        return reduce_to_ns(self.params)
+
+    def sampler(self, field: VelocityField, update_fn=None) -> Sampler:
+        """Thin jit'd session sampling the artifact's solver on ``field``."""
+        return Sampler(self.ns_params, field, update_fn=update_fn)
+
+    def save(self, path: str) -> None:
+        meta = {"format": FORMAT, "version": FORMAT_VERSION,
+                "kind": self.kind, "spec": self.spec.to_dict(),
+                "val_psnr": float(self.val_psnr),
+                "provenance": self.provenance}
+        checkpointer.save(path, self.params, meta=meta)
+
+    @classmethod
+    def load(cls, path: str) -> "SolverArtifact":
+        meta = checkpointer.load_meta(path)
+        if meta is None or meta.get("format") != FORMAT:
+            raise ValueError(f"{path} is not a solver artifact")
+        spec = SolverSpec.from_dict(meta["spec"])
+        template = _param_template(meta["kind"], spec)
+        params = checkpointer.restore(path, template)
+        return cls(spec=spec, params=params,
+                   val_psnr=float(meta["val_psnr"]),
+                   provenance=dict(meta.get("provenance", {})))
+
+
+def save_artifact(path: str, trained, provenance: Optional[dict] = None) -> "SolverArtifact":
+    """Convenience: wrap a ``TrainedSolver`` and write it in one call."""
+    art = trained.artifact(provenance)
+    art.save(path)
+    return art

@@ -1,0 +1,54 @@
+"""Sampling pipeline — thin jit'd sessions around Algorithm 1.
+
+``Sampler`` binds NS parameters to a velocity field behind one ``jax.jit``
+boundary; it is the object serving constructs from a ``SolverArtifact``
+(see ``repro.serving.engine.FlowSampler``) and the helper benchmarks use to
+score solvers without re-spelling the ``ns_sample``-then-``psnr`` dance.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ns_solver
+from repro.core.bns import psnr
+from repro.core.ns_solver import NSParams
+from repro.core.parametrization import VelocityField
+
+Array = jax.Array
+
+
+class Sampler:
+    """A jit'd sampling session: ``sampler(x0) -> x1`` at exactly n NFE.
+
+    ``update_fn`` may override the weighted-sum update (e.g. the Pallas
+    ``ns_update`` kernel); it is closed over, so it stays static under jit.
+    """
+
+    def __init__(self, params: NSParams, field: VelocityField,
+                 update_fn: Optional[Callable] = None):
+        self.params = params
+        self.field = field
+        self._sample = jax.jit(
+            lambda p, x0: ns_solver.ns_sample(p, field.fn, x0,
+                                              update_fn=update_fn))
+
+    @property
+    def nfe(self) -> int:
+        return self.params.n
+
+    def __call__(self, x0: Array) -> Array:
+        return self._sample(self.params, x0)
+
+    def psnr(self, pairs: tuple[Array, Array], max_val: float = 1.0) -> float:
+        """Mean PSNR of this sampler against (x0, x1) reference pairs."""
+        x0, x1 = pairs
+        return float(jnp.mean(psnr(self(x0), x1, max_val)))
+
+
+def evaluate_psnr(params: NSParams, field: VelocityField,
+                  pairs: tuple[Array, Array], max_val: float = 1.0) -> float:
+    """One-shot: build a session for ``params`` and score it on ``pairs``."""
+    return Sampler(params, field).psnr(pairs, max_val)

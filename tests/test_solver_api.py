@@ -1,0 +1,217 @@
+"""Unified solver API: registry parity with the legacy solver_to_ns path,
+SolverSpec build/distill, and SolverArtifact save/load bit-exactness."""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import ns_solver, schedulers, toy
+from repro.core.bns import BNSTrainConfig, generate_pairs, solver_to_ns
+from repro.solvers import (
+    SolverArtifact,
+    SolverSpec,
+    build_ns,
+    get_solver,
+    list_solvers,
+    solver_names,
+)
+
+NFE = 8
+
+
+@pytest.fixture(scope="module")
+def field():
+    sched = schedulers.fm_ot()
+    return toy.mixture_field(sched, toy.two_moons_means(),
+                             jnp.full((16,), 0.15), jnp.ones((16,)))
+
+
+@pytest.fixture(scope="module")
+def pairs(field):
+    train = generate_pairs(field, jax.random.PRNGKey(0), 64, (2,))
+    val = generate_pairs(field, jax.random.PRNGKey(1), 64, (2,))
+    return train, val
+
+
+def _legacy_solver_to_ns(name, nfe, f, **kw):
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        return solver_to_ns(name, nfe, f, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", solver_names())
+def test_registry_matches_solver_to_ns(field, name):
+    """spec.build under jit == the old solver_to_ns path (atol 1e-6, NFE 8)."""
+    spec = SolverSpec(name, NFE)
+    new = spec.build(field)
+    old = _legacy_solver_to_ns(name, NFE, field)
+    for a, b in zip(jax.tree.leaves(new), jax.tree.leaves(old)):
+        assert jnp.array_equal(a, b), name          # identical NS parameters
+    x0 = jax.random.normal(jax.random.PRNGKey(0), (16, 2))
+    s_new = jax.jit(lambda x: ns_solver.ns_sample(new, field.fn, x))(x0)
+    s_old = ns_solver.ns_sample(old, field.fn, x0)
+    assert float(jnp.max(jnp.abs(s_new - s_old))) < 1e-6
+
+
+def test_registry_contents_and_capabilities():
+    assert set(solver_names()) == {"euler", "midpoint", "heun", "rk4", "ab2",
+                                   "ab4", "ddim", "dpm2m", "edm_heun"}
+    assert solver_names(baseline=True) == ["euler", "midpoint", "ddim", "dpm2m"]
+    assert solver_names(family="generic", baseline=True) == ["euler", "midpoint"]
+    assert get_solver("ddim").needs_scheduler
+    assert not get_solver("ddim").supports_sigma0
+    assert get_solver("euler").supports_sigma0
+    assert get_solver("rk4").evals_per_interval == 4
+    assert not get_solver("rk4").valid_nfe(6)
+
+
+def test_registry_unknown_and_bad_sigma0(field):
+    with pytest.raises(KeyError):
+        build_ns("nonexistent", NFE, field)
+    with pytest.raises(ValueError):
+        build_ns("ddim", NFE, field, sigma0=2.0)
+
+
+def test_solver_to_ns_shim_warns(field):
+    with pytest.warns(DeprecationWarning):
+        solver_to_ns("euler", NFE, field)
+
+
+def test_sigma0_preconditioned_build_matches_legacy(field):
+    new = SolverSpec("euler", NFE, sigma0=3.0).build(field)
+    old = _legacy_solver_to_ns("euler", NFE, field, sigma0=3.0)
+    for a, b in zip(jax.tree.leaves(new), jax.tree.leaves(old)):
+        assert jnp.array_equal(a, b)
+
+
+def test_grid_override(field):
+    import numpy as np
+
+    grid = np.linspace(0.0, 1.0, NFE + 1) ** 2.0
+    spec = SolverSpec("euler", NFE, grid=tuple(grid))
+    ns = spec.build(field)
+    assert float(jnp.max(jnp.abs(ns.times - jnp.asarray(grid[:-1])))) < 1e-6
+
+
+# ---------------------------------------------------------------------------
+# SolverSpec.distill
+# ---------------------------------------------------------------------------
+
+
+def test_spec_distill_bns_smoke(field, pairs):
+    train, val = pairs
+    spec = SolverSpec("midpoint", 4, mode="bns")
+    cfg = BNSTrainConfig(iterations=80, val_every=20, batch_size=32)
+    res = spec.distill(field, train, val, cfg)
+    assert res.spec is spec
+    assert res.history                      # validation happened
+    assert res.num_parameters == ns_solver.count_parameters(4)
+    baseline = SolverSpec("midpoint", 4).sampler(field).psnr(val)
+    assert res.val_psnr > baseline          # training improved the init
+    assert bool(jnp.isfinite(res.ns_params.b).all())
+
+
+def test_spec_distill_baseline_mode(field, pairs):
+    _, val = pairs
+    res = SolverSpec("euler", NFE).distill(field, None, val)
+    assert res.val_psnr == pytest.approx(
+        SolverSpec("euler", NFE).sampler(field).psnr(val))
+    assert isinstance(res.ns_params, ns_solver.NSParams)
+
+
+def test_spec_anytime_normalizes_budgets():
+    spec = SolverSpec("midpoint", mode="anytime", budgets=(8, 4))
+    assert spec.budgets == (4, 8)
+    assert spec.nfe == 8
+    with pytest.raises(ValueError):
+        SolverSpec("midpoint", mode="anytime")
+
+
+def test_spec_dict_roundtrip():
+    for spec in [SolverSpec("euler", 8),
+                 SolverSpec("midpoint", 4, sigma0=2.0, cfg_scale=1.5,
+                            mode="bns"),
+                 SolverSpec("midpoint", mode="anytime", budgets=(4, 8)),
+                 SolverSpec("euler", 8, grid=tuple(i / 8 for i in range(9)))]:
+        assert SolverSpec.from_dict(spec.to_dict()) == spec
+
+
+# ---------------------------------------------------------------------------
+# SolverArtifact
+# ---------------------------------------------------------------------------
+
+
+def test_artifact_roundtrip_bit_exact(field, pairs, tmp_path):
+    train, val = pairs
+    spec = SolverSpec("midpoint", 4, mode="bns")
+    res = spec.distill(field, train, val,
+                       BNSTrainConfig(iterations=40, val_every=20,
+                                      batch_size=32))
+    art = res.artifact(provenance={"source": "test"})
+    path = str(tmp_path / "solver.msgpack")
+    art.save(path)
+    art2 = SolverArtifact.load(path)
+    assert art2.spec == spec
+    assert art2.val_psnr == pytest.approx(res.val_psnr)
+    assert art2.provenance == {"source": "test"}
+    for a, b in zip(jax.tree.leaves(art.params), jax.tree.leaves(art2.params)):
+        assert jnp.array_equal(a, b)
+    # sample bit-exactness: the same jit'd program on identical params
+    x0 = val[0]
+    assert jnp.array_equal(art.sampler(field)(x0), art2.sampler(field)(x0))
+
+
+def test_artifact_baseline_roundtrip(field, pairs, tmp_path):
+    _, val = pairs
+    res = SolverSpec("ddim", NFE).distill(field, None, val)
+    path = str(tmp_path / "ddim.msgpack")
+    res.artifact().save(path)
+    art = SolverArtifact.load(path)
+    assert art.kind == "ns"
+    x0 = val[0]
+    assert jnp.array_equal(art.sampler(field)(x0),
+                           res.sampler(field)(x0))
+
+
+def test_artifact_rejects_non_artifact(tmp_path):
+    from repro.checkpoint import checkpointer
+
+    path = str(tmp_path / "raw.msgpack")
+    checkpointer.save(path, {"w": jnp.zeros((2,))})
+    with pytest.raises(ValueError):
+        SolverArtifact.load(path)
+
+
+def test_flow_sampler_from_artifact(tmp_path):
+    from repro.configs import get_config
+    from repro.data.synthetic import DataConfig, SyntheticTokens
+    from repro.models import model as M
+    from repro.serving.engine import FlowSampler
+
+    cfg = get_config("yi-6b", smoke=True)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    data = SyntheticTokens(cfg, DataConfig(batch_size=2, seq_len=8))
+    batch = data.batch(0)
+    field = M.velocity_field(params, cfg, schedulers.fm_ot(), batch)
+
+    res = SolverSpec("midpoint", 4, mode="baseline").distill(
+        field, None, (jax.random.normal(jax.random.PRNGKey(1),
+                                        (2, 8, cfg.latent_dim)),
+                      jnp.zeros((2, 8, cfg.latent_dim))))
+    path = str(tmp_path / "serve.msgpack")
+    res.artifact().save(path)
+    art = SolverArtifact.load(path)
+
+    sampler = FlowSampler.from_artifact(art, params=params, cfg=cfg,
+                                        sched=schedulers.fm_ot())
+    direct = FlowSampler(params=params, cfg=cfg, sched=schedulers.fm_ot(),
+                         solver=res.ns_params)
+    key = jax.random.PRNGKey(2)
+    assert jnp.array_equal(sampler.sample(batch, key),
+                           direct.sample(batch, key))
