@@ -55,7 +55,61 @@ def check_claims(rows):
     return notes
 
 
+def serve_bench(iterations: int = 600, log=print):
+    """Anytime SERVING: one zoo-cached artifact, every budget via its
+    extracted m-step solver.
+
+    Measures (a) the cold zoo ``get`` (distills once) against the warm one
+    (memory hit — must perform zero distillation), and (b) per-budget
+    sampling latency of the extracted solvers. Returns csv-ready rows.
+    """
+    import time
+
+    from repro.serving import SolverZoo
+    from repro.solvers import Sampler
+
+    sched = schedulers.fm_ot()
+    field = toy.mixture_field(sched, toy.two_moons_means(),
+                              jnp.full((16,), 0.15), jnp.ones((16,)))
+    train = generate_pairs(field, jax.random.PRNGKey(0), 128, (2,))
+    val = generate_pairs(field, jax.random.PRNGKey(1), 128, (2,))
+    spec = SolverSpec("midpoint", mode="anytime", budgets=BUDGETS)
+    cfg = BNSTrainConfig(iterations=iterations, lr=1.5e-3, val_every=200,
+                         batch_size=64)
+
+    zoo = SolverZoo(capacity=4)
+    t0 = time.time()
+    art = zoo.get(spec, field=field, train_pairs=train, val_pairs=val,
+                  train_cfg=cfg)
+    cold_s = time.time() - t0
+    t0 = time.time()
+    assert zoo.get(spec) is art
+    warm_s = time.time() - t0
+    assert zoo.stats.distills == 1 and zoo.stats.hits == 1
+    log(f"zoo: cold get (distill) {cold_s:.1f}s, warm get (hit) "
+        f"{warm_s*1e6:.0f}us — a cache hit skips distillation entirely")
+
+    rows = [{"name": "zoo_hit", "us": warm_s * 1e6,
+             "derived": f"cold_s={cold_s:.1f};distills={zoo.stats.distills}"}]
+    x0 = val[0]
+    for m in BUDGETS:
+        sampler = Sampler(art.ns_at_budget(m), field)
+        sampler(x0)                      # compile
+        t0 = time.time()
+        reps = 20
+        for _ in range(reps):
+            sampler(x0).block_until_ready()
+        us = (time.time() - t0) / reps * 1e6
+        log(f"serve NFE={m}: {us:.0f}us per batch of {x0.shape[0]} "
+            f"(extracted {m}-step solver)")
+        rows.append({"name": f"nfe{m}", "us": us,
+                     "derived": f"psnr={art.val_psnr:.2f}"})
+    return rows
+
+
 if __name__ == "__main__":
     rows, _ = run()
     for n in check_claims(rows):
         print(n)
+    for r in serve_bench():
+        print(f"anytime_serving/{r['name']},{r['us']:.1f},{r['derived']}")

@@ -87,6 +87,9 @@ def main() -> None:
         csv.append((f"anytime/nfe{r['nfe']}", 0.0,
                     f"shared={r['anytime']:.2f};dedicated={r['dedicated']:.2f};"
                     f"params={nparams}"))
+    for r in anytime_bench.serve_bench(iterations=200 if quick else 600,
+                                       log=log):
+        csv.append((f"anytime_serving/{r['name']}", r["us"], r["derived"]))
     log(f"anytime_bench done in {time.time()-t0:.0f}s")
 
     try:

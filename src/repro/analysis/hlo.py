@@ -157,8 +157,9 @@ def _dot_flops(op: _Op, shapes: dict) -> float:
     m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.rest)
     contract = 1
     if m:
-        # first operand name
-        ops_m = re.match(r"\s*%([\w.\-]+)", op.rest)
+        # first operand name (older HLO prints `f32[...] %ref`, newer `%ref`
+        # — search, don't anchor)
+        ops_m = re.search(r"%([\w.\-]+)", op.rest)
         lhs_dims = ()
         if ops_m and ops_m.group(1) in shapes:
             _, lhs_dims = _shape_dims(shapes[ops_m.group(1)])

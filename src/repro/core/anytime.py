@@ -34,6 +34,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.bns import BNSTrainConfig, TrainResult, psnr
+from repro.core.ns_solver import NSParams
 from repro.core.parametrization import VelocityField
 from repro.optim import adam_init, adam_update, cosine_annealing, poly_decay
 
@@ -112,7 +113,12 @@ def init_anytime(field: VelocityField, budgets: Sequence[int],
 def anytime_sample(params: AnytimeParams, budgets: Sequence[int],
                    u_fn: Callable, x0: Array) -> dict[int, Array]:
     """Run the shared trajectory once; emit one sample per budget.
-    Stopping after m evaluations costs exactly m NFE."""
+    Stopping after m evaluations costs exactly m NFE.
+
+    Every update (intermediate and exit) is the same weighted-sum tensordot
+    Algorithm 1 uses, so each budget's output agrees with running the
+    extracted m-step solver (``extract_ns``) through ``ns_solver.ns_sample``.
+    """
     budgets = sorted(budgets)
     n = budgets[-1]
     times = jax.nn.sigmoid(params.time_raw)
@@ -122,14 +128,39 @@ def anytime_sample(params: AnytimeParams, budgets: Sequence[int],
     for i in range(n):
         u = u_fn(times[i], x)
         traj_u.append(u)
-        x = params.a[i] * x0 + sum(params.b[i, j] * traj_u[j]
-                                   for j in range(i + 1))
+        U = jnp.stack(traj_u)                       # (i+1, ...)
+        x = params.a[i] * x0 + jnp.tensordot(params.b[i, :i + 1], U,
+                                             axes=(0, 0))
         for bi, m in enumerate(budgets[:-1]):
             if i + 1 == m:
                 outs[m] = params.exit_a[bi] * x0 + \
-                    sum(params.exit_b[bi, j] * traj_u[j] for j in range(m))
+                    jnp.tensordot(params.exit_b[bi, :m], U, axes=(0, 0))
     outs[n] = x
     return outs
+
+
+def extract_ns(params: AnytimeParams, budgets: Sequence[int],
+               m: int) -> NSParams:
+    """The bona-fide m-step NS solver embedded in an anytime solver.
+
+    Rows 0..m-2 are the shared intermediate update rules; row m-1 is budget
+    m's OUTPUT rule — the early exit for a small budget, or the final shared
+    rule for the top one. Each exit is a valid NS rule by construction, so
+    running Algorithm 1 on the result reproduces ``anytime_sample``'s output
+    for that budget at exactly m NFE.
+    """
+    budgets = sorted(budgets)
+    n = budgets[-1]
+    if m not in budgets:
+        raise ValueError(f"budget {m} not served; have {tuple(budgets)}")
+    times = jax.nn.sigmoid(params.time_raw)[:m]
+    if m == n:
+        return NSParams(times=times, a=params.a, b=params.b)
+    bi = budgets.index(m)
+    a = jnp.concatenate([params.a[:m - 1], params.exit_a[bi][None]])
+    b = jnp.concatenate([params.b[:m - 1, :m],
+                         params.exit_b[bi, :m][None]], axis=0)
+    return NSParams(times=times, a=a, b=b)
 
 
 def train_anytime(field: VelocityField, budgets: Sequence[int], train_pairs,

@@ -3,14 +3,22 @@
   PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --mode flow \
       --nfe 8 --batch 8 --seq 16 [--ckpt /path/step_N.msgpack] \
       [--solver-artifact /path/solver.msgpack]
+  PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --mode flow \
+      --budgets 4,8,16 --request-budgets 4,16,8   # anytime: one artifact
   PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-7b --mode decode \
       --batch 4 --steps 32
 
-Flow mode serves from a saved ``SolverArtifact`` when --solver-artifact
-points at an existing file (no retraining on boot); otherwise it distills a
-BNS solver (Algorithm 2 on freshly generated RK45 pairs), saves the artifact
-(to --solver-artifact or a temp file), and serves from the reloaded copy —
-so every serving session exercises the artifact round-trip.
+Flow mode routes solver acquisition through a ``SolverZoo``: a saved
+``SolverArtifact`` (--solver-artifact, or anything indexed by --zoo-dir) is
+loaded without retraining; a miss distills lazily (Algorithm 2 on freshly
+generated RK45 pairs), saves the artifact, and serves from the reloaded copy
+— so every serving session exercises the artifact round-trip.
+
+With --budgets the solver is a single anytime artifact whose early exits
+serve every listed NFE; each request's budget (--request-budgets, cycled)
+routes to the matching exit. A requested --nfe / request budget the artifact
+does not serve is resolved to the nearest served budget with a WARNING, or
+rejected when --strict-nfe is set — never silently ignored.
 """
 from __future__ import annotations
 
@@ -29,15 +37,26 @@ from repro.core.rk45 import rk45_solve
 from repro.core.schedulers import get_scheduler
 from repro.data.synthetic import DataConfig, SyntheticTokens
 from repro.models import model as M
-from repro.serving.engine import DecodeEngine, FlowSampler
+from repro.serving import AnytimeFlowSampler, DecodeEngine, FlowSampler, SolverZoo
 from repro.solvers import SolverArtifact, SolverSpec
 
+DEFAULT_NFE = 8
 
-def _distill_artifact(args, field, cfg) -> SolverArtifact:
+
+def _requested_spec(args) -> SolverSpec:
+    """The solver the CLI asks for: anytime over --budgets, else fixed-NFE BNS."""
+    if args.budgets:
+        return SolverSpec(name="midpoint", mode="anytime",
+                          budgets=args.budgets, cfg_scale=args.cfg_scale)
+    return SolverSpec(name="euler", nfe=args.nfe or DEFAULT_NFE,
+                      cfg_scale=args.cfg_scale, mode="bns")
+
+
+def _distill_artifact(args, field, cfg, spec: SolverSpec) -> SolverArtifact:
     """Algorithm 2 on fresh RK45 pairs; returns the saved-and-reloaded artifact."""
-    print(f"distilling BNS solver (NFE={args.nfe}) ...")
-    spec = SolverSpec(name="euler", nfe=args.nfe, cfg_scale=args.cfg_scale,
-                      mode="bns")
+    what = (f"anytime solver (budgets={spec.budgets})" if spec.budgets
+            else f"BNS solver (NFE={spec.nfe})")
+    print(f"distilling {what} ...")
     solve = jax.jit(lambda x: rk45_solve(field.fn, x, rtol=1e-5, atol=1e-5).x1)
     k_tr, k_val = jax.random.split(jax.random.PRNGKey(args.seed + 1))
     shape = (args.batch, args.seq, cfg.latent_dim)
@@ -58,6 +77,27 @@ def _distill_artifact(args, field, cfg) -> SolverArtifact:
     return SolverArtifact.load(path)
 
 
+def _resolve_budget(artifact: SolverArtifact, nfe: int, strict: bool,
+                    warned: set) -> int:
+    """Route a requested NFE to a budget the artifact serves.
+
+    Exact match passes through; otherwise --strict-nfe rejects, and the
+    default picks the nearest served budget with a one-time WARNING per
+    distinct mismatch (the old behavior silently ignored --nfe).
+    """
+    if nfe in artifact.budgets:
+        return nfe
+    if strict:
+        raise SystemExit(f"--strict-nfe: requested NFE {nfe} but the "
+                         f"artifact serves {artifact.budgets}")
+    near = artifact.nearest_budget(nfe)
+    if nfe not in warned:
+        warned.add(nfe)
+        print(f"WARNING: requested NFE {nfe} not served by the artifact "
+              f"(budgets {artifact.budgets}); using nearest budget {near}")
+    return near
+
+
 def serve_flow(args) -> None:
     cfg = get_config(args.arch, smoke=args.smoke)
     sched = get_scheduler(args.scheduler)
@@ -71,31 +111,58 @@ def serve_flow(args) -> None:
     cond = data.batch(0)
     field = M.velocity_field(params, cfg, sched, cond, cfg_scale=args.cfg_scale)
 
+    scan_dirs = [d for d in (args.zoo_dir,
+                             os.path.dirname(args.solver_artifact)
+                             if args.solver_artifact else None) if d]
+    zoo = SolverZoo(capacity=args.zoo_capacity,
+                    distill_fn=lambda spec: _distill_artifact(args, field,
+                                                              cfg, spec),
+                    scan_dirs=scan_dirs)
     if args.solver_artifact and os.path.exists(args.solver_artifact):
-        artifact = SolverArtifact.load(args.solver_artifact)
+        artifact = zoo.put(SolverArtifact.load(args.solver_artifact))
         print(f"loaded solver artifact {args.solver_artifact}: "
               f"{artifact.spec.mode}/{artifact.spec.name} "
-              f"NFE={artifact.spec.nfe}, val PSNR {artifact.val_psnr:.2f} dB "
-              f"(no retraining)")
+              f"budgets={artifact.budgets}, "
+              f"val PSNR {artifact.val_psnr:.2f} dB (no retraining)")
         for key, want in [("arch", args.arch), ("scheduler", args.scheduler)]:
             have = artifact.provenance.get(key)
             if have is not None and have != want:
                 print(f"WARNING: artifact was distilled for {key}={have!r} "
                       f"but serving {key}={want!r} — samples will be degraded")
-        if artifact.spec.nfe != args.nfe:
-            print(f"WARNING: --nfe {args.nfe} ignored; artifact serves at "
-                  f"NFE={artifact.spec.nfe}")
+        if args.budgets and tuple(sorted(args.budgets)) != artifact.budgets:
+            print(f"WARNING: --budgets {','.join(map(str, args.budgets))} "
+                  f"ignored; the loaded artifact serves {artifact.budgets}")
     else:
-        artifact = _distill_artifact(args, field, cfg)
+        artifact = zoo.get(_requested_spec(args), log=print)
 
-    sampler = FlowSampler.from_artifact(artifact, params=params, cfg=cfg,
-                                        sched=sched)
+    anytime = artifact.kind == "anytime"
+    if anytime:
+        sampler = AnytimeFlowSampler.from_artifact(artifact, params=params,
+                                                   cfg=cfg, sched=sched)
+    else:
+        sampler = FlowSampler.from_artifact(artifact, params=params,
+                                            cfg=cfg, sched=sched)
+    warned: set = set()
+    if args.request_budgets:
+        request_budgets = args.request_budgets
+    elif args.nfe is not None:
+        # an explicit --nfe is a request, never silently ignored: it routes
+        # through _resolve_budget (nearest-with-warning or --strict-nfe)
+        request_budgets = (args.nfe,)
+    else:
+        request_budgets = artifact.budgets
     for req in range(args.requests):
+        nfe = _resolve_budget(artifact, request_budgets[req % len(request_budgets)],
+                              args.strict_nfe, warned)
         t0 = time.time()
-        latents = sampler.sample(cond, jax.random.PRNGKey(1000 + req))
+        key = jax.random.PRNGKey(1000 + req)
+        latents = (sampler.sample(cond, key, budget=nfe) if anytime
+                   else sampler.sample(cond, key))
         tokens = sampler.nearest_tokens(latents)
         print(f"request {req}: sampled {tokens.shape} in "
-              f"{(time.time()-t0)*1e3:.0f} ms ({artifact.spec.nfe} NFE)")
+              f"{(time.time()-t0)*1e3:.0f} ms ({nfe} NFE)")
+    print(f"zoo stats: hits={zoo.stats.hits} misses={zoo.stats.misses} "
+          f"loads={zoo.stats.loads} distills={zoo.stats.distills}")
 
 
 def serve_decode(args) -> None:
@@ -113,6 +180,16 @@ def serve_decode(args) -> None:
           f"({dt:.1f} ms/token); first row: {tokens[0, :8].tolist()}")
 
 
+def _budget_list(text: str) -> tuple[int, ...]:
+    try:
+        budgets = tuple(int(tok) for tok in text.split(",") if tok.strip())
+    except ValueError:
+        raise argparse.ArgumentTypeError(f"bad budget list {text!r}")
+    if not budgets or any(b < 1 for b in budgets):
+        raise argparse.ArgumentTypeError(f"bad budget list {text!r}")
+    return budgets
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -124,7 +201,22 @@ def main() -> None:
     ap.add_argument("--solver-artifact", default=None,
                     help="load the solver from this artifact if it exists; "
                          "otherwise distill and save it here")
-    ap.add_argument("--nfe", type=int, default=8)
+    ap.add_argument("--nfe", type=int, default=None,
+                    help="requested NFE budget (default: the artifact's own; "
+                         f"distillation defaults to {DEFAULT_NFE})")
+    ap.add_argument("--budgets", type=_budget_list, default=None,
+                    help="serve an anytime solver at these NFE budgets, "
+                         "e.g. 4,8,16 (one shared artifact, per-request "
+                         "budget routing)")
+    ap.add_argument("--request-budgets", type=_budget_list, default=None,
+                    help="per-request NFE budgets, cycled over --requests "
+                         "(default: cycle the artifact's budgets)")
+    ap.add_argument("--strict-nfe", action="store_true",
+                    help="reject budgets the artifact does not serve instead "
+                         "of routing to the nearest one")
+    ap.add_argument("--zoo-dir", default=None,
+                    help="scan this directory for saved solver artifacts")
+    ap.add_argument("--zoo-capacity", type=int, default=4)
     ap.add_argument("--cfg-scale", type=float, default=0.0)
     ap.add_argument("--bns-iters", type=int, default=300)
     ap.add_argument("--batch", type=int, default=8)

@@ -1,0 +1,17 @@
+"""repro.serving — serving engines and the solver-zoo cache.
+
+``engine``  — ``FlowSampler`` (one budget), ``AnytimeFlowSampler`` (budget-
+              routed multi-NFE serving from one artifact), ``DecodeEngine``;
+``zoo``     — ``SolverZoo``, the LRU SolverSpec -> SolverArtifact cache with
+              directory scan and lazy distill-on-miss.
+"""
+from repro.serving.engine import (
+    AnytimeFlowSampler,
+    DecodeEngine,
+    FlowSampler,
+    nearest_latent_tokens,
+)
+from repro.serving.zoo import SolverZoo, ZooStats
+
+__all__ = ["AnytimeFlowSampler", "DecodeEngine", "FlowSampler", "SolverZoo",
+           "ZooStats", "nearest_latent_tokens"]

@@ -5,23 +5,51 @@ flow model (any backbone in the zoo). A thin jit'd session over Algorithm 1:
 construct it from a serialized ``SolverArtifact`` (``from_artifact``) or any
 NS solver, and each request batch costs exactly ``n`` backbone forwards.
 
+``AnytimeFlowSampler`` — multi-NFE anytime serving from ONE artifact.
+
+Budget-routing contract: the sampler owns the anytime solver's served
+``budgets``; a request asks for an NFE budget and is routed as follows.
+
+  * ``sample(batch, key, budget=m)`` with ``m`` in ``budgets`` runs the
+    extracted m-step early-exit solver (``core.anytime.extract_ns``) — a
+    batch of requests at budget m costs exactly m backbone forwards, and the
+    jit'd program for each budget is compiled once and cached.
+  * ``m`` not in ``budgets``: ``resolve_budget(m)`` picks the nearest served
+    budget (ties to the smaller, i.e. cheaper); ``strict=True`` raises
+    instead. Callers that must not silently change NFE (``launch/serve.py
+    --strict-nfe``) pass strict.
+  * ``sample_all(batch, key)`` runs the one shared trajectory to the top
+    budget and emits every early exit — max(budgets) forwards total for all
+    budgets at once (mixed-budget batches, evaluation).
+
 ``DecodeEngine`` — batched autoregressive decode with KV cache / recurrent
 state (the ``serve_step`` the decode dry-run shapes lower).
 """
 from __future__ import annotations
 
 import dataclasses
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.core import anytime as anytime_mod
 from repro.core import ns_solver
 from repro.core.ns_solver import NSParams
 from repro.core.schedulers import Scheduler
 from repro.models import model as M
 
 Array = jax.Array
+
+
+def nearest_latent_tokens(params: dict, latents: Array) -> Array:
+    """Decode sampled latents to tokens by nearest latent embedding."""
+    table = params["flow"]["latent_embed"].astype(jnp.float32)
+    d2 = (jnp.sum(latents.astype(jnp.float32) ** 2, -1, keepdims=True)
+          - 2.0 * latents.astype(jnp.float32) @ table.T
+          + jnp.sum(table**2, -1))
+    return jnp.argmin(d2, axis=-1)
 
 
 @dataclasses.dataclass
@@ -42,15 +70,22 @@ class FlowSampler:
 
     @classmethod
     def from_artifact(cls, artifact, *, params: dict, cfg: ModelConfig,
-                      sched: Scheduler) -> "FlowSampler":
+                      sched: Scheduler,
+                      budget: Optional[int] = None) -> "FlowSampler":
         """Serving session from a loaded ``repro.solvers.SolverArtifact``.
 
         The artifact carries the solver parameters and the CFG scale it was
         distilled under; the backbone (params/cfg/sched) is supplied by the
-        launcher.
+        launcher. ``budget`` selects one early exit of an anytime artifact
+        (required there — use ``AnytimeFlowSampler`` to serve them all).
         """
-        return cls(params=params, cfg=cfg, sched=sched,
-                   solver=artifact.ns_params,
+        if budget is None and artifact.kind == "anytime":
+            raise TypeError(
+                "anytime artifacts serve several budgets; pass budget=m for "
+                "a fixed-NFE session or use AnytimeFlowSampler.from_artifact")
+        solver = (artifact.ns_params if budget is None
+                  else artifact.ns_at_budget(budget))
+        return cls(params=params, cfg=cfg, sched=sched, solver=solver,
                    cfg_scale=artifact.spec.cfg_scale)
 
     def sample(self, batch: dict, key: Array) -> Array:
@@ -65,11 +100,99 @@ class FlowSampler:
 
     def nearest_tokens(self, latents: Array) -> Array:
         """Decode sampled latents to tokens by nearest latent embedding."""
-        table = self.params["flow"]["latent_embed"].astype(jnp.float32)
-        d2 = (jnp.sum(latents.astype(jnp.float32) ** 2, -1, keepdims=True)
-              - 2.0 * latents.astype(jnp.float32) @ table.T
-              + jnp.sum(table**2, -1))
-        return jnp.argmin(d2, axis=-1)
+        return nearest_latent_tokens(self.params, latents)
+
+
+@dataclasses.dataclass
+class AnytimeFlowSampler:
+    """Budget-aware serving session over ONE anytime solver artifact.
+
+    See the module docstring for the budget-routing contract. Per-budget
+    jit'd programs are compiled lazily and cached, so a running server pays
+    one compile per distinct budget, then exactly m forwards per request.
+    """
+
+    params: dict
+    cfg: ModelConfig
+    sched: Scheduler
+    anytime: anytime_mod.AnytimeParams
+    budgets: tuple[int, ...]
+    cfg_scale: float = 0.0
+
+    def __post_init__(self):
+        self.budgets = tuple(sorted(self.budgets))
+        self._per_budget: dict[int, Callable] = {}
+        self._all: Optional[Callable] = None
+
+    @classmethod
+    def from_artifact(cls, artifact, *, params: dict, cfg: ModelConfig,
+                      sched: Scheduler) -> "AnytimeFlowSampler":
+        """Serving session from a loaded anytime ``SolverArtifact``."""
+        if artifact.kind != "anytime":
+            raise TypeError(f"{artifact.kind!r} artifacts serve one budget; "
+                            "use FlowSampler.from_artifact")
+        return cls(params=params, cfg=cfg, sched=sched,
+                   anytime=artifact.params, budgets=artifact.budgets,
+                   cfg_scale=artifact.spec.cfg_scale)
+
+    def _field(self, batch: dict):
+        return M.velocity_field(self.params, self.cfg, self.sched, batch,
+                                cfg_scale=self.cfg_scale)
+
+    def resolve_budget(self, m: int, strict: bool = False) -> int:
+        """Route a requested NFE to a served budget (nearest; ties cheaper)."""
+        if m in self.budgets:
+            return m
+        if strict:
+            raise ValueError(f"budget {m} not served; have {self.budgets}")
+        return min(self.budgets, key=lambda b: (abs(b - m), b))
+
+    def ns_at_budget(self, m: int) -> NSParams:
+        return anytime_mod.extract_ns(self.anytime, self.budgets, m)
+
+    def sample_from(self, batch: dict, x0: Array, budget: int) -> Array:
+        """Integrate given noise ``x0`` at exactly ``budget`` NFE."""
+        fn = self._per_budget.get(budget)
+        if fn is None:
+            ns = self.ns_at_budget(budget)   # raises on unserved budgets
+
+            def _sample(params, batch, x0, ns=ns):
+                field = M.velocity_field(params, self.cfg, self.sched, batch,
+                                         cfg_scale=self.cfg_scale)
+                return ns_solver.ns_sample(ns, field.fn, x0)
+
+            fn = self._per_budget[budget] = jax.jit(_sample)
+        return fn(self.params, batch, x0)
+
+    def sample(self, batch: dict, key: Array, budget: int,
+               strict: bool = False) -> Array:
+        """Generate latents for ``batch`` at the requested NFE budget."""
+        budget = self.resolve_budget(budget, strict=strict)
+        B, S = batch["tokens"].shape
+        x0 = jax.random.normal(key, (B, S, self.cfg.latent_dim))
+        return self.sample_from(batch, x0, budget)
+
+    def sample_all_from(self, batch: dict, x0: Array) -> dict[int, Array]:
+        """One shared trajectory from ``x0``; every budget's output, at
+        max(budgets) total forwards."""
+        if self._all is None:
+            def _sample(params, batch, x0):
+                field = M.velocity_field(params, self.cfg, self.sched, batch,
+                                         cfg_scale=self.cfg_scale)
+                return anytime_mod.anytime_sample(self.anytime, self.budgets,
+                                                  field.fn, x0)
+
+            self._all = jax.jit(_sample)
+        return self._all(self.params, batch, x0)
+
+    def sample_all(self, batch: dict, key: Array) -> dict[int, Array]:
+        B, S = batch["tokens"].shape
+        x0 = jax.random.normal(key, (B, S, self.cfg.latent_dim))
+        return self.sample_all_from(batch, x0)
+
+    def nearest_tokens(self, latents: Array) -> Array:
+        """Decode sampled latents to tokens by nearest latent embedding."""
+        return nearest_latent_tokens(self.params, latents)
 
 
 @dataclasses.dataclass

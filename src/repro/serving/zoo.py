@@ -1,0 +1,168 @@
+"""SolverZoo — a budget-aware cache of solver artifacts for serving.
+
+The zoo maps ``SolverSpec`` keys (the spec is a frozen, hashable dataclass —
+the key IS the declarative solver description) to loaded ``SolverArtifact``s
+with LRU eviction. A ``get`` resolves in order:
+
+  1. memory hit — the loaded artifact, zero I/O, zero distillation;
+  2. disk hit — a ``.msgpack`` artifact indexed by ``scan`` whose stored
+     spec equals the requested one is loaded (no distillation);
+  3. miss — the spec is distilled lazily via the zoo's ``distill_fn``
+     (or ``SolverSpec.distill`` with the ``get`` call's field/pairs) and,
+     when the zoo has a ``save_dir``, persisted for the next process.
+
+``stats`` counts hits/misses/loads/distills/evictions so serving can assert
+the cache contract (a hit performs zero distillation) and dashboards can
+watch the ratio. One anytime artifact covers every budget in its spec, so
+multi-NFE serving needs exactly one entry.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from collections import OrderedDict
+from typing import Callable, Optional
+
+from repro.solvers.artifact import FORMAT, SolverArtifact
+from repro.solvers.spec import SolverSpec
+
+
+@dataclasses.dataclass
+class ZooStats:
+    hits: int = 0          # served from memory
+    loads: int = 0         # served from a scanned artifact file
+    distills: int = 0      # distilled on miss
+    misses: int = 0        # loads + distills
+    evictions: int = 0     # LRU evictions past capacity
+
+
+class SolverZoo:
+    """LRU cache of solver artifacts keyed by ``SolverSpec``."""
+
+    def __init__(self, capacity: int = 8, *,
+                 distill_fn: Optional[Callable[[SolverSpec], SolverArtifact]] = None,
+                 scan_dirs=(), save_dir: Optional[str] = None):
+        if capacity < 1:
+            raise ValueError("capacity must be >= 1")
+        self.capacity = capacity
+        self.distill_fn = distill_fn
+        self.save_dir = save_dir
+        self.stats = ZooStats()
+        self._cache: "OrderedDict[SolverSpec, SolverArtifact]" = OrderedDict()
+        self._paths: dict[SolverSpec, str] = {}
+        for d in scan_dirs:
+            self.scan(d)
+
+    # -- disk index ---------------------------------------------------------
+
+    def scan(self, directory: str) -> int:
+        """Index saved ``.msgpack`` solver artifacts under ``directory``.
+
+        Reads only each file's JSON meta (cheap); artifacts load lazily on
+        ``get``. Non-artifact msgpack files are skipped. Returns how many
+        artifacts were indexed.
+        """
+        from repro.checkpoint import checkpointer
+
+        found = 0
+        if not os.path.isdir(directory):
+            return 0
+        for name in sorted(os.listdir(directory)):
+            if not name.endswith(".msgpack"):
+                continue
+            path = os.path.join(directory, name)
+            try:
+                meta = checkpointer.load_meta(path)
+            except Exception:
+                continue
+            if not meta or meta.get("format") != FORMAT:
+                continue
+            self._paths[SolverSpec.from_dict(meta["spec"])] = path
+            found += 1
+        return found
+
+    # -- cache --------------------------------------------------------------
+
+    def __len__(self) -> int:
+        return len(self._cache)
+
+    def __contains__(self, spec: SolverSpec) -> bool:
+        return spec in self._cache
+
+    def specs(self) -> list[SolverSpec]:
+        """Cached specs, least- to most-recently used."""
+        return list(self._cache)
+
+    def put(self, artifact: SolverArtifact) -> SolverArtifact:
+        """Insert (or refresh) an artifact under its own spec key."""
+        spec = artifact.spec
+        if spec in self._cache:
+            self._cache.move_to_end(spec)
+        self._cache[spec] = artifact
+        while len(self._cache) > self.capacity:
+            self._cache.popitem(last=False)
+            self.stats.evictions += 1
+        return artifact
+
+    def get(self, spec: SolverSpec, *, field=None, train_pairs=None,
+            val_pairs=None, train_cfg=None, log=None) -> SolverArtifact:
+        """The artifact for ``spec`` — cached, loaded from disk, or distilled.
+
+        A memory or disk hit performs zero distillation; only a true miss
+        trains, via ``distill_fn`` when the zoo has one, else
+        ``spec.distill(field, train_pairs, val_pairs, train_cfg)``.
+        """
+        art = self._cache.get(spec)
+        if art is not None:
+            self.stats.hits += 1
+            self._cache.move_to_end(spec)
+            return art
+        self.stats.misses += 1
+        path = self._paths.get(spec)
+        if path is not None and os.path.exists(path):
+            art = SolverArtifact.load(path)
+            if art.spec == spec:
+                self.stats.loads += 1
+                if log:
+                    log(f"zoo: loaded {spec.mode}/{spec.name} from {path}")
+                return self.put(art)
+            # file changed since it was indexed — never serve the wrong solver
+            del self._paths[spec]
+        art = self._distill(spec, field, train_pairs, val_pairs, train_cfg,
+                            log)
+        if self.save_dir is not None:
+            path = os.path.join(self.save_dir, self._filename(spec))
+            art.save(path)
+            self._paths[spec] = path
+            if log:
+                log(f"zoo: saved {path}")
+        return self.put(art)
+
+    @staticmethod
+    def _filename(spec: SolverSpec) -> str:
+        """Readable prefix + full-spec digest: specs differing only in e.g.
+        cfg_scale or sigma0 must never collide on disk."""
+        import hashlib
+        import json
+
+        digest = hashlib.md5(
+            json.dumps(spec.to_dict(), sort_keys=True).encode()).hexdigest()
+        return f"{spec.mode}_{spec.name}_nfe{spec.nfe}_{digest[:10]}.msgpack"
+
+    def _distill(self, spec, field, train_pairs, val_pairs, train_cfg,
+                 log) -> SolverArtifact:
+        if self.distill_fn is not None:
+            self.stats.distills += 1
+            art = self.distill_fn(spec)
+        elif field is not None:
+            self.stats.distills += 1
+            art = spec.distill(field, train_pairs, val_pairs, train_cfg,
+                               log=log).artifact()
+        else:
+            raise KeyError(
+                f"{spec} not cached and the zoo cannot distill it (no "
+                "distill_fn; pass field/train_pairs/val_pairs to get)")
+        if art.spec != spec:
+            raise ValueError(f"distill_fn returned artifact for {art.spec}, "
+                             f"requested {spec}")
+        return art

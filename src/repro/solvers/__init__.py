@@ -21,10 +21,17 @@ from repro.solvers.registry import (
     register_solver,
     solver_names,
 )
-from repro.solvers.spec import MODES, SolverSpec, TrainedSolver
+from repro.solvers.spec import (
+    MODES,
+    SolverSpec,
+    TrainedSolver,
+    ns_at_budget,
+    reduce_to_ns,
+)
 
 __all__ = [
     "MODES", "Sampler", "SolverArtifact", "SolverInfo", "SolverSpec",
     "TrainedSolver", "build_ns", "evaluate_psnr", "get_solver",
-    "list_solvers", "register_solver", "save_artifact", "solver_names",
+    "list_solvers", "ns_at_budget", "reduce_to_ns", "register_solver",
+    "save_artifact", "solver_names",
 ]

@@ -20,7 +20,7 @@ from repro.core import bst_solver, ns_solver
 from repro.core.ns_solver import NSParams
 from repro.core.parametrization import VelocityField
 from repro.solvers.pipeline import Sampler
-from repro.solvers.spec import SolverSpec, reduce_to_ns
+from repro.solvers.spec import SolverSpec, ns_at_budget, reduce_to_ns
 
 FORMAT = "bns-solver-artifact"
 FORMAT_VERSION = 1
@@ -80,9 +80,36 @@ class SolverArtifact:
         """Canonical NS parameters for Algorithm-1 serving."""
         return reduce_to_ns(self.params)
 
-    def sampler(self, field: VelocityField, update_fn=None) -> Sampler:
-        """Thin jit'd session sampling the artifact's solver on ``field``."""
-        return Sampler(self.ns_params, field, update_fn=update_fn)
+    @property
+    def budgets(self) -> tuple[int, ...]:
+        """NFE budgets this artifact serves (a single one unless anytime)."""
+        return self.spec.budgets or (self.spec.nfe,)
+
+    def ns_at_budget(self, m: int) -> NSParams:
+        """The m-step NS solver served at budget ``m``.
+
+        Anytime artifacts extract the bona-fide m-step early-exit solver;
+        single-budget artifacts require ``m`` to be their one NFE.
+        """
+        return ns_at_budget(self.params, self.budgets, m)
+
+    def nearest_budget(self, m: int) -> int:
+        """The served budget closest to ``m`` (ties break to the smaller —
+        fewer backbone forwards)."""
+        return min(self.budgets, key=lambda b: (abs(b - m), b))
+
+    def sampler(self, field: VelocityField, update_fn=None,
+                budget: Optional[int] = None) -> Sampler:
+        """Thin jit'd session sampling the artifact's solver on ``field``.
+
+        ``budget`` selects the early exit of an anytime artifact (defaults
+        to the top budget); single-budget artifacts ignore it only when it
+        matches their NFE.
+        """
+        if budget is None and self.kind == "anytime":
+            budget = self.budgets[-1]
+        ns = self.ns_params if budget is None else self.ns_at_budget(budget)
+        return Sampler(ns, field, update_fn=update_fn)
 
     def save(self, path: str) -> None:
         meta = {"format": FORMAT, "version": FORMAT_VERSION,

@@ -35,8 +35,34 @@ def reduce_to_ns(params) -> NSParams:
         return params
     if isinstance(params, ns_solver.BNSParams):
         return ns_solver.materialize(params)
+    from repro.core import anytime as anytime_mod
+
+    if isinstance(params, anytime_mod.AnytimeParams):
+        raise TypeError(
+            "AnytimeParams serve several budgets and do not reduce to a "
+            "single NSParams; pick one with ns_at_budget(params, budgets, m) "
+            "(or SolverArtifact.ns_at_budget / AnytimeFlowSampler for "
+            "serving)")
     raise TypeError(f"{type(params).__name__} solvers do not reduce to a "
                     "single NSParams")
+
+
+def ns_at_budget(params, budgets, m: int) -> NSParams:
+    """The m-step NS solver a trained/stored solver serves at budget ``m``.
+
+    Anytime solvers extract the bona-fide m-step early-exit solver; every
+    other kind reduces to its single NSParams, which must already have
+    ``m`` steps.
+    """
+    from repro.core import anytime as anytime_mod
+
+    if isinstance(params, anytime_mod.AnytimeParams):
+        return anytime_mod.extract_ns(params, budgets, m)
+    ns = reduce_to_ns(params)
+    if ns.n != m:
+        raise ValueError(f"solver has {ns.n} steps, not {m}; only anytime "
+                         "solvers serve multiple budgets")
+    return ns
 
 
 @dataclasses.dataclass(frozen=True)
@@ -151,6 +177,15 @@ class TrainedSolver:
     def ns_params(self) -> NSParams:
         """Canonical NS parameters, ready for Algorithm-1 serving."""
         return reduce_to_ns(self.params)
+
+    @property
+    def budgets(self) -> tuple[int, ...]:
+        """NFE budgets this solver serves (a single one unless anytime)."""
+        return self.spec.budgets or (self.spec.nfe,)
+
+    def ns_at_budget(self, m: int) -> NSParams:
+        """The m-step NS solver served at budget ``m`` (anytime early exit)."""
+        return ns_at_budget(self.params, self.budgets, m)
 
     def sampler(self, field: VelocityField, update_fn=None) -> Sampler:
         return Sampler(self.ns_params, field, update_fn=update_fn)

@@ -1,0 +1,250 @@
+"""Multi-NFE anytime serving: nested-grid properties, early-exit extraction
+(each exit is a bona-fide m-step NS solver, bit-exactly), and
+``AnytimeFlowSampler`` budget routing / PSNR parity with
+``evaluate_anytime``."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ns_solver, schedulers, toy
+from repro.core.anytime import (
+    anytime_sample, evaluate_anytime, extract_ns, init_anytime, nested_grid,
+    train_anytime,
+)
+from repro.core.bns import BNSTrainConfig, psnr
+from repro.serving import AnytimeFlowSampler, FlowSampler
+from repro.solvers import SolverArtifact, SolverSpec, ns_at_budget
+
+BUDGET_SETS = [(4,), (2, 4), (4, 8), (2, 4, 8), (4, 8, 16), (3, 6, 12)]
+
+
+def _random_anytime(budgets, key, scale=0.1):
+    """Nested-init params jittered everywhere, so indexing bugs can't hide
+    behind structural zeros."""
+    theta = init_anytime(None, budgets, "nested")
+    leaves, treedef = jax.tree.flatten(theta)
+    keys = jax.random.split(key, len(leaves))
+    return jax.tree.unflatten(
+        treedef,
+        [l + scale * jax.random.normal(k, l.shape)
+         for l, k in zip(leaves, keys)])
+
+
+@pytest.fixture(scope="module")
+def field():
+    sched = schedulers.fm_ot()
+    return toy.mixture_field(sched, toy.two_moons_means(),
+                             jnp.full((16,), 0.15), jnp.ones((16,)))
+
+
+# ---------------------------------------------------------------------------
+# nested_grid properties
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("budgets", BUDGET_SETS)
+def test_nested_grid_is_permutation(budgets):
+    """The grid is a permutation of the union of every budget's uniform grid
+    (= the top budget's grid when budgets divide each other)."""
+    g = nested_grid(budgets)
+    n = max(budgets)
+    assert len(g) == n
+    union = sorted({i / m for m in budgets for i in range(m)})
+    assert sorted(g.tolist()) == pytest.approx(union)
+
+
+@pytest.mark.parametrize("budgets", BUDGET_SETS)
+def test_nested_grid_each_prefix_covers_budget_grid(budgets):
+    """The first m eval times are exactly {i/m} — each prefix spreads over
+    [0, 1) like a dedicated m-step solver's grid."""
+    g = nested_grid(budgets)
+    for m in budgets:
+        assert set(g[:m].tolist()) == {i / m for i in range(m)}, m
+
+
+# ---------------------------------------------------------------------------
+# early-exit extraction
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("budgets", [(2, 4), (4, 8), (2, 4, 8)])
+def test_extracted_solver_bit_exact(field, budgets):
+    """Every early exit == running the extracted m-step NS solver through
+    Algorithm 1, bit-exactly (same weighted-sum arithmetic)."""
+    theta = _random_anytime(budgets, jax.random.PRNGKey(0))
+    x0 = jax.random.normal(jax.random.PRNGKey(1), (32, 2))
+    outs = anytime_sample(theta, budgets, field.fn, x0)
+    for m in budgets:
+        ns = extract_ns(theta, budgets, m)
+        assert ns.n == m
+        got = ns_solver.ns_sample(ns, field.fn, x0, unroll=True)
+        np.testing.assert_array_equal(np.asarray(outs[m]), np.asarray(got))
+
+
+def test_extracted_solver_costs_exactly_m_nfe(field):
+    budgets = (2, 4, 8)
+    theta = _random_anytime(budgets, jax.random.PRNGKey(0))
+    x0 = jax.random.normal(jax.random.PRNGKey(1), (8, 2))
+    for m in budgets:
+        calls = {"n": 0}
+
+        def counting(t, x):
+            calls["n"] += 1
+            return field.fn(t, x)
+
+        ns_solver.ns_sample(extract_ns(theta, budgets, m), counting, x0,
+                            unroll=True)
+        assert calls["n"] == m
+
+
+def test_extract_ns_validates_budget():
+    theta = init_anytime(None, (2, 4), "nested")
+    with pytest.raises(ValueError):
+        extract_ns(theta, (2, 4), 3)
+    # generic ns_at_budget dispatch: anytime extracts, NS requires exact n
+    assert ns_at_budget(theta, (2, 4), 2).n == 2
+    ns = extract_ns(theta, (2, 4), 4)
+    assert ns_at_budget(ns, (4,), 4) is ns
+    with pytest.raises(ValueError):
+        ns_at_budget(ns, (4,), 2)
+
+
+def test_extracted_top_budget_is_whole_solver(field):
+    budgets = (4, 8)
+    theta = _random_anytime(budgets, jax.random.PRNGKey(3))
+    ns = extract_ns(theta, budgets, 8)
+    got = ns_solver.ns_sample(
+        ns, field.fn, jax.random.normal(jax.random.PRNGKey(4), (16, 2)),
+        unroll=True)
+    ref = anytime_sample(theta, budgets, field.fn,
+                         jax.random.normal(jax.random.PRNGKey(4), (16, 2)))[8]
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+# ---------------------------------------------------------------------------
+# AnytimeFlowSampler (smoke backbone)
+# ---------------------------------------------------------------------------
+
+BUDGETS = (2, 4)
+
+
+@pytest.fixture(scope="module")
+def backbone():
+    from repro.configs import get_config
+    from repro.data.synthetic import DataConfig, SyntheticTokens
+    from repro.models import model as M
+
+    cfg = get_config("yi-6b", smoke=True)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    data = SyntheticTokens(cfg, DataConfig(batch_size=2, seq_len=8))
+    batch = data.batch(0)
+    sched = schedulers.fm_ot()
+    field = M.velocity_field(params, cfg, sched, batch)
+    return cfg, params, batch, sched, field
+
+
+@pytest.fixture(scope="module")
+def served(backbone):
+    cfg, params, batch, sched, field = backbone
+    theta = _random_anytime(BUDGETS, jax.random.PRNGKey(7))
+    art = SolverArtifact(
+        spec=SolverSpec("midpoint", mode="anytime", budgets=BUDGETS),
+        params=theta, val_psnr=0.0)
+    sampler = AnytimeFlowSampler.from_artifact(art, params=params, cfg=cfg,
+                                               sched=sched)
+    return art, sampler
+
+
+def test_engine_budget_matches_evaluate_anytime(backbone, served):
+    cfg, params, batch, sched, field = backbone
+    art, sampler = served
+    x0 = jax.random.normal(jax.random.PRNGKey(8), (2, 8, cfg.latent_dim))
+    x1 = jax.random.normal(jax.random.PRNGKey(9), x0.shape)
+    ref = evaluate_anytime(art.params, BUDGETS, field, (x0, x1))
+    for m in BUDGETS:
+        got = float(jnp.mean(psnr(sampler.sample_from(batch, x0, m), x1)))
+        assert got == pytest.approx(ref[m], abs=1e-3), m
+
+
+def test_engine_sample_all_matches_per_budget(backbone, served):
+    cfg, params, batch, _, _ = backbone
+    _, sampler = served
+    x0 = jax.random.normal(jax.random.PRNGKey(10), (2, 8, cfg.latent_dim))
+    outs = sampler.sample_all_from(batch, x0)
+    assert sorted(outs) == sorted(BUDGETS)
+    for m in BUDGETS:
+        np.testing.assert_allclose(np.asarray(outs[m]),
+                                   np.asarray(sampler.sample_from(batch, x0, m)),
+                                   atol=1e-5)
+
+
+def test_engine_resolves_unserved_budgets(backbone, served):
+    _, sampler = served
+    assert sampler.resolve_budget(2) == 2
+    assert sampler.resolve_budget(3) == 2       # tie breaks to the cheaper
+    assert sampler.resolve_budget(16) == 4
+    with pytest.raises(ValueError):
+        sampler.resolve_budget(16, strict=True)
+    with pytest.raises(ValueError):
+        sampler.sample_from({}, None, 16)       # unserved budget, no routing
+
+
+def test_engine_rejects_wrong_artifact_kinds(backbone, served):
+    cfg, params, batch, sched, field = backbone
+    art, _ = served
+    with pytest.raises(TypeError):
+        FlowSampler.from_artifact(art, params=params, cfg=cfg, sched=sched)
+    single = SolverSpec("euler", 4).distill(
+        field, None,
+        (jax.random.normal(jax.random.PRNGKey(11), (2, 8, cfg.latent_dim)),
+         jnp.zeros((2, 8, cfg.latent_dim)))).artifact()
+    with pytest.raises(TypeError):
+        AnytimeFlowSampler.from_artifact(single, params=params, cfg=cfg,
+                                         sched=sched)
+
+
+def test_engine_fixed_budget_session_matches_anytime_sampler(backbone, served):
+    """FlowSampler.from_artifact(budget=m) == AnytimeFlowSampler at m."""
+    cfg, params, batch, sched, _ = backbone
+    art, sampler = served
+    fixed = FlowSampler.from_artifact(art, params=params, cfg=cfg,
+                                      sched=sched, budget=2)
+    key = jax.random.PRNGKey(12)
+    np.testing.assert_allclose(np.asarray(fixed.sample(batch, key)),
+                               np.asarray(sampler.sample(batch, key, budget=2)),
+                               atol=1e-6)
+
+
+@pytest.mark.integration
+def test_distilled_anytime_artifact_serves_every_budget(field, tmp_path):
+    """Acceptance: distill -> artifact -> save/load -> serve each budget m at
+    exactly m NFE with PSNR equal to evaluate_anytime on the same pairs."""
+    from repro.core.bns import generate_pairs
+
+    budgets = (2, 4)
+    train = generate_pairs(field, jax.random.PRNGKey(0), 64, (2,))
+    val = generate_pairs(field, jax.random.PRNGKey(1), 64, (2,))
+    spec = SolverSpec("midpoint", mode="anytime", budgets=budgets)
+    res = spec.distill(field, train, val,
+                       BNSTrainConfig(iterations=60, val_every=20,
+                                      batch_size=32))
+    path = str(tmp_path / "anytime.msgpack")
+    res.artifact().save(path)
+    art = SolverArtifact.load(path)
+    assert art.spec == spec and art.budgets == budgets
+    for a, b in zip(jax.tree.leaves(res.params), jax.tree.leaves(art.params)):
+        assert jnp.array_equal(a, b)            # bit-exact round-trip
+    ref = evaluate_anytime(art.params, budgets, field, val)
+    for m in budgets:
+        calls = {"n": 0}
+
+        def counting(t, x):
+            calls["n"] += 1
+            return field.fn(t, x)
+
+        out = ns_solver.ns_sample(art.ns_at_budget(m), counting, val[0],
+                                  unroll=True)
+        assert calls["n"] == m                  # exactly m NFE per budget
+        assert float(jnp.mean(psnr(out, val[1]))) == pytest.approx(
+            ref[m], abs=1e-3)

@@ -3,12 +3,14 @@ MoE dispatch strategies, attention masks, RoPE, data pipeline, checkpointing."""
 import dataclasses
 import os
 
-import hypothesis
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (CI installs it)")
+st = pytest.importorskip("hypothesis.strategies")
 
 from repro.checkpoint import checkpointer
 from repro.configs import get_config

@@ -1,10 +1,13 @@
 """Property tests for NS-solver invariants (hypothesis) and the distributed
 Algorithm-2 step."""
-import hypothesis
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (CI installs it)")
+st = pytest.importorskip("hypothesis.strategies")
 
 from repro.core import ns_solver, schedulers, toy
 from repro.core.bns import BNSTrainConfig, make_distributed_bns_step, solver_to_ns

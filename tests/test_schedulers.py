@@ -1,9 +1,11 @@
 """Scheduler invariants (paper eq. 4) and snr-inverse exactness."""
-import hypothesis
-import hypothesis.strategies as st
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (CI installs it)")
+st = pytest.importorskip("hypothesis.strategies")
 
 from repro.core import schedulers
 

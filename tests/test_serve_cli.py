@@ -1,0 +1,81 @@
+"""Subprocess smoke tests for ``launch/serve.py`` — flow (anytime artifact,
+budget routing, --strict-nfe) and decode modes on the smoke config."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+pytestmark = pytest.mark.integration
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(*argv, timeout=600):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    return subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve", *argv],
+        capture_output=True, text=True, timeout=timeout, env=env, cwd=REPO)
+
+
+@pytest.fixture(scope="module")
+def anytime_artifact(tmp_path_factory):
+    """An (untrained) anytime artifact on disk — serving must not retrain."""
+    from repro.core.anytime import init_anytime
+    from repro.solvers import SolverArtifact, SolverSpec
+
+    path = str(tmp_path_factory.mktemp("zoo") / "anytime.msgpack")
+    budgets = (2, 4)
+    SolverArtifact(
+        spec=SolverSpec("midpoint", mode="anytime", budgets=budgets),
+        params=init_anytime(None, budgets),
+        val_psnr=0.0,
+        provenance={"arch": "yi-6b", "scheduler": "fm_ot"},
+    ).save(path)
+    return path
+
+
+def test_flow_mode_serves_mixed_budgets_from_one_artifact(anytime_artifact):
+    res = _run("--arch", "yi-6b", "--mode", "flow",
+               "--solver-artifact", anytime_artifact,
+               "--request-budgets", "2,4,8", "--requests", "3",
+               "--batch", "2", "--seq", "4")
+    assert res.returncode == 0, res.stderr
+    out = res.stdout
+    assert "no retraining" in out
+    assert "distilling" not in out               # zero re-distillation
+    assert "(2 NFE)" in out and "(4 NFE)" in out
+    # the unserved budget 8 is routed to the nearest one, loudly
+    assert "WARNING: requested NFE 8" in out
+    assert "using nearest budget 4" in out
+
+
+def test_flow_mode_explicit_nfe_is_routed_not_ignored(anytime_artifact):
+    """Regression: --nfe used to be silently ignored when an artifact was
+    loaded; it must route through nearest-budget selection with a WARNING."""
+    res = _run("--arch", "yi-6b", "--mode", "flow",
+               "--solver-artifact", anytime_artifact, "--nfe", "16",
+               "--requests", "1", "--batch", "2", "--seq", "4")
+    assert res.returncode == 0, res.stderr
+    assert "WARNING: requested NFE 16" in res.stdout
+    assert "using nearest budget 4" in res.stdout
+    assert "(4 NFE)" in res.stdout
+
+
+def test_flow_mode_strict_nfe_rejects_unserved_budget(anytime_artifact):
+    res = _run("--arch", "yi-6b", "--mode", "flow",
+               "--solver-artifact", anytime_artifact, "--strict-nfe",
+               "--request-budgets", "8", "--requests", "1",
+               "--batch", "2", "--seq", "4")
+    assert res.returncode != 0
+    assert "--strict-nfe" in res.stderr + res.stdout
+
+
+def test_decode_mode_smoke():
+    res = _run("--arch", "yi-6b", "--mode", "decode", "--batch", "2",
+               "--steps", "3", "--slots", "16")
+    assert res.returncode == 0, res.stderr
+    assert "decoded 3 tokens x 2 seqs" in res.stdout

@@ -188,6 +188,54 @@ def test_artifact_rejects_non_artifact(tmp_path):
         SolverArtifact.load(path)
 
 
+def test_reduce_to_ns_anytime_error_names_escape_hatch():
+    """AnytimeParams cannot reduce to one NSParams — the error must say so
+    clearly and point at ns_at_budget (regression: the old message was the
+    generic unsupported-type one and serving just crashed)."""
+    from repro.core.anytime import init_anytime
+    from repro.solvers import ns_at_budget, reduce_to_ns
+
+    theta = init_anytime(None, (2, 4))
+    with pytest.raises(TypeError, match="ns_at_budget"):
+        reduce_to_ns(theta)
+    assert ns_at_budget(theta, (2, 4), 2).n == 2
+
+
+def test_anytime_artifact_roundtrips_and_serves(field, pairs, tmp_path):
+    """Regression: an anytime artifact saved fine but could not be served
+    (FlowSampler.from_artifact -> reduce_to_ns -> TypeError). Now every
+    budget serves through ns_at_budget / sampler(budget=m)."""
+    train, val = pairs
+    budgets = (2, 4)
+    spec = SolverSpec("midpoint", mode="anytime", budgets=budgets)
+    res = spec.distill(field, train, val,
+                       BNSTrainConfig(iterations=40, val_every=20,
+                                      batch_size=32))
+    assert res.budgets == budgets
+    path = str(tmp_path / "anytime.msgpack")
+    res.artifact(provenance={"source": "test"}).save(path)
+    art = SolverArtifact.load(path)
+    assert art.kind == "anytime"
+    assert art.spec == spec and art.budgets == budgets
+    with pytest.raises(TypeError):
+        art.ns_params                       # still no single reduction
+    x0 = val[0]
+    for m in budgets:
+        ns = art.ns_at_budget(m)
+        assert ns.n == m
+        for a, b in zip(jax.tree.leaves(res.ns_at_budget(m)),
+                        jax.tree.leaves(ns)):
+            assert jnp.array_equal(a, b)    # trained == reloaded
+        out = art.sampler(field, budget=m)(x0)
+        assert out.shape == x0.shape and bool(jnp.isfinite(out).all())
+    # default sampler serves the top budget
+    assert jnp.array_equal(art.sampler(field)(x0),
+                           art.sampler(field, budget=4)(x0))
+    assert art.nearest_budget(3) == 2 and art.nearest_budget(100) == 4
+    with pytest.raises(ValueError):
+        art.ns_at_budget(3)
+
+
 def test_flow_sampler_from_artifact(tmp_path):
     from repro.configs import get_config
     from repro.data.synthetic import DataConfig, SyntheticTokens

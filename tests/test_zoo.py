@@ -1,0 +1,178 @@
+"""SolverZoo: hit/miss/eviction accounting, directory-scan loading, and the
+cache contract that a hit performs zero distillation."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import schedulers, toy
+from repro.serving import SolverZoo
+from repro.solvers import SolverArtifact, SolverSpec
+
+
+@pytest.fixture(scope="module")
+def field():
+    sched = schedulers.fm_ot()
+    return toy.mixture_field(sched, toy.two_moons_means(),
+                             jnp.full((16,), 0.15), jnp.ones((16,)))
+
+
+@pytest.fixture(scope="module")
+def val_pairs():
+    x0 = jax.random.normal(jax.random.PRNGKey(0), (16, 2))
+    return x0, jnp.zeros_like(x0)
+
+
+class CountingDistiller:
+    """Stub distiller with a call counter — baseline mode, so it is cheap."""
+
+    def __init__(self, field, val_pairs):
+        self.field = field
+        self.val_pairs = val_pairs
+        self.calls = 0
+
+    def __call__(self, spec: SolverSpec) -> SolverArtifact:
+        self.calls += 1
+        return spec.distill(self.field, None, self.val_pairs).artifact()
+
+
+@pytest.fixture
+def distiller(field, val_pairs):
+    return CountingDistiller(field, val_pairs)
+
+
+def test_hit_skips_distillation_entirely(distiller):
+    zoo = SolverZoo(capacity=4, distill_fn=distiller)
+    spec = SolverSpec("euler", 4)
+    a1 = zoo.get(spec)
+    assert (zoo.stats.misses, zoo.stats.distills, distiller.calls) == (1, 1, 1)
+    a2 = zoo.get(spec)
+    assert a2 is a1                              # the very same object
+    assert zoo.stats.hits == 1
+    assert distiller.calls == 1                  # a hit distills NOTHING
+    # an equal-but-not-identical spec is still a hit (keying is by value)
+    assert zoo.get(SolverSpec("euler", 4)) is a1
+    assert distiller.calls == 1
+
+
+def test_distinct_specs_are_distinct_entries(distiller):
+    zoo = SolverZoo(capacity=4, distill_fn=distiller)
+    zoo.get(SolverSpec("euler", 4))
+    zoo.get(SolverSpec("euler", 8))
+    zoo.get(SolverSpec("midpoint", 4))
+    assert len(zoo) == 3 and distiller.calls == 3
+
+
+def test_lru_eviction(distiller):
+    zoo = SolverZoo(capacity=2, distill_fn=distiller)
+    a, b, c = (SolverSpec("euler", n) for n in (2, 4, 8))
+    zoo.get(a)
+    zoo.get(b)
+    zoo.get(a)                  # refresh a: b is now least-recently used
+    zoo.get(c)                  # evicts b
+    assert zoo.stats.evictions == 1
+    assert b not in zoo and a in zoo and c in zoo
+    zoo.get(b)                  # re-distilled after eviction
+    assert distiller.calls == 4
+
+
+def test_directory_scan_loads_without_distilling(field, val_pairs, tmp_path,
+                                                 distiller):
+    specs = [SolverSpec("euler", 4), SolverSpec("midpoint", 8),
+             SolverSpec("midpoint", mode="anytime", budgets=(2, 4))]
+    for i, spec in enumerate(specs):
+        if spec.mode == "anytime":
+            from repro.core.anytime import init_anytime
+
+            art = SolverArtifact(spec=spec,
+                                 params=init_anytime(field, spec.budgets),
+                                 val_psnr=0.0)
+        else:
+            art = spec.distill(field, None, val_pairs).artifact()
+        art.save(str(tmp_path / f"solver_{i}.msgpack"))
+    # distractors: a non-artifact msgpack and a non-msgpack file
+    from repro.checkpoint import checkpointer
+
+    checkpointer.save(str(tmp_path / "raw.msgpack"), {"w": jnp.zeros((2,))})
+    (tmp_path / "notes.txt").write_text("not a solver")
+
+    zoo = SolverZoo(capacity=4, distill_fn=distiller)
+    assert zoo.scan(str(tmp_path)) == 3
+    for spec in specs:
+        art = zoo.get(spec)
+        assert art.spec == spec
+    assert zoo.stats.loads == 3
+    assert zoo.stats.distills == 0 and distiller.calls == 0
+    assert zoo.get(specs[2]).kind == "anytime"   # second get: memory hit
+    assert zoo.stats.hits == 1
+
+
+def test_scan_missing_directory_is_empty():
+    assert SolverZoo().scan("/nonexistent/zoo/dir") == 0
+
+
+def test_get_without_distiller_raises(field, val_pairs):
+    zoo = SolverZoo()
+    with pytest.raises(KeyError):
+        zoo.get(SolverSpec("euler", 4))
+    # ... unless the call supplies what SolverSpec.distill needs
+    art = zoo.get(SolverSpec("euler", 4), field=field, val_pairs=val_pairs)
+    assert art.spec == SolverSpec("euler", 4)
+    assert zoo.stats.distills == 1
+
+
+def test_distiller_spec_mismatch_rejected(field, val_pairs):
+    rogue = SolverSpec("midpoint", 8)
+
+    def bad_distill(spec):
+        return rogue.distill(field, None, val_pairs).artifact()
+
+    zoo = SolverZoo(distill_fn=bad_distill)
+    with pytest.raises(ValueError):
+        zoo.get(SolverSpec("euler", 4))
+
+
+def test_save_dir_persists_across_zoos(field, val_pairs, tmp_path, distiller):
+    zoo1 = SolverZoo(distill_fn=distiller, save_dir=str(tmp_path))
+    spec = SolverSpec("euler", 4)
+    zoo1.get(spec)
+    assert distiller.calls == 1
+    # a fresh process scanning the same dir never re-distills
+    zoo2 = SolverZoo(distill_fn=distiller, scan_dirs=(str(tmp_path),))
+    art = zoo2.get(spec)
+    assert art.spec == spec
+    assert zoo2.stats.loads == 1 and distiller.calls == 1
+
+
+def test_save_dir_never_collides_specs(field, val_pairs, tmp_path, distiller):
+    """Specs differing only in cfg_scale/sigma0 get distinct files, and a
+    re-get after eviction loads the RIGHT artifact (regression: one shared
+    filename let the last save shadow every other spec)."""
+    a = SolverSpec("euler", 4, cfg_scale=0.0)
+    b = SolverSpec("euler", 4, cfg_scale=2.0)
+    zoo = SolverZoo(capacity=1, distill_fn=distiller, save_dir=str(tmp_path))
+    zoo.get(a)
+    zoo.get(b)                  # evicts a from memory; both now on disk
+    assert len(list(tmp_path.glob("*.msgpack"))) == 2
+    art = zoo.get(a)            # must come back from a's own file
+    assert art.spec == a
+    assert zoo.stats.loads == 1 and distiller.calls == 2
+
+
+def test_stale_disk_file_is_not_served(field, val_pairs, tmp_path, distiller):
+    """A scanned file that no longer holds the indexed spec is re-distilled,
+    never served wrong."""
+    spec = SolverSpec("euler", 4)
+    spec.distill(field, None, val_pairs).artifact().save(
+        str(tmp_path / "s.msgpack"))
+    zoo = SolverZoo(distill_fn=distiller, scan_dirs=(str(tmp_path),))
+    # overwrite the file with a different solver behind the zoo's back
+    SolverSpec("midpoint", 8).distill(field, None, val_pairs).artifact() \
+        .save(str(tmp_path / "s.msgpack"))
+    art = zoo.get(spec)
+    assert art.spec == spec
+    assert zoo.stats.loads == 0 and zoo.stats.distills == 1
+
+
+def test_capacity_validation():
+    with pytest.raises(ValueError):
+        SolverZoo(capacity=0)
