@@ -1,0 +1,185 @@
+"""Gateway benchmark: batched-vs-unbatched serving throughput and latency
+across request mixes.
+
+Workload: single-sample requests over the analytic toy field (backbone
+forwards are cheap, so the measurement isolates the serving layer: dispatch
+count, coalescing, padding, mixed-budget routing). The unbatched baseline is
+the same jit'd sampler invoked once per request at batch 1 — exactly what
+PR 2's serving loop did; the gateway coalesces the identical request stream
+into padded fixed-bucket batches.
+
+Acceptance (ISSUE 3): >= 2x throughput over unbatched at --max-batch 8 on
+the synthetic workload. ``--json out.json`` writes the summary the CI
+workflow publishes as an artifact.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ns_solver, schedulers, toy
+from repro.core.anytime import anytime_sample, extract_ns, init_anytime
+from repro.serving import Gateway, Request, nearest_budget
+
+BUDGETS = (4, 8, 16)
+
+
+class ToyAnytimeSampler:
+    """Budget-protocol sampler (jit per budget) over the analytic field."""
+
+    def __init__(self, budgets=BUDGETS, seed=0, jitter=0.1):
+        self.budgets = tuple(sorted(budgets))
+        theta = init_anytime(None, self.budgets, "nested")
+        leaves, treedef = jax.tree.flatten(theta)
+        keys = jax.random.split(jax.random.PRNGKey(seed), len(leaves))
+        self.theta = jax.tree.unflatten(
+            treedef, [l + jitter * jax.random.normal(k, l.shape)
+                      for l, k in zip(leaves, keys)])
+        sched = schedulers.fm_ot()
+        self.field = toy.mixture_field(sched, toy.two_moons_means(),
+                                       jnp.full((16,), 0.15), jnp.ones((16,)))
+        self._per_budget = {}
+        self._all = None
+
+    def resolve_budget(self, m, strict=False):
+        return nearest_budget(self.budgets, m, strict)
+
+    def sample_from(self, batch, x0, budget):
+        fn = self._per_budget.get(budget)
+        if fn is None:
+            ns = extract_ns(self.theta, self.budgets, budget)
+            fn = self._per_budget[budget] = jax.jit(
+                lambda x, ns=ns: ns_solver.ns_sample(ns, self.field.fn, x))
+        return fn(x0)
+
+    def sample_all_from(self, batch, x0):
+        if self._all is None:
+            self._all = jax.jit(lambda x: anytime_sample(
+                self.theta, self.budgets, self.field.fn, x))
+        return self._all(x0)
+
+
+MIXES = {
+    "uniform8": lambda i: 8,
+    "mixed": lambda i: BUDGETS[i % len(BUDGETS)],
+    "skew16": lambda i: 16 if i % 4 else 4,
+}
+
+
+def _warmup(sampler, buckets, max_batch):
+    """Compile every program either serving path can hit — per-(budget,
+    bucket) sampler programs AND the gateway's own stack/pad ops — so the
+    timed region measures serving, not first-call compilation."""
+    for budget in sampler.budgets:
+        for b in buckets:
+            sampler.sample_from(None, jnp.zeros((b, 2)), budget)
+    jax.tree.map(lambda x: x.block_until_ready(),
+                 sampler.sample_all_from(None, jnp.zeros((buckets[-1], 2))))
+    gw = Gateway(sampler, max_batch=max_batch, max_wait_ms=0.0)
+    futures = [gw.submit(Request(budget=b, x0=jnp.zeros((2,))))
+               for b in sampler.budgets for _ in range(max_batch)]
+    for count in range(1, max_batch):             # partial buckets too
+        futures.append(gw.submit(Request(budget=sampler.budgets[0],
+                                         x0=jnp.zeros((2,)))))
+        futures.append(gw.submit(Request(budget=sampler.budgets[-1],
+                                         x0=jnp.zeros((2,)))))
+    gw.drain()
+    for f in futures:        # responses are host arrays — already synced
+        f.result()
+
+
+def run(requests: int = 64, max_batch: int = 8, log=print):
+    buckets = [1]
+    while buckets[-1] < max_batch:
+        buckets.append(min(buckets[-1] * 2, max_batch))
+    rows = []
+    for mix, budget_of in MIXES.items():
+        sampler = ToyAnytimeSampler()
+        _warmup(sampler, buckets, max_batch)
+        x0s = [jax.random.normal(jax.random.PRNGKey(1000 + i), (2,))
+               for i in range(requests)]
+
+        t0 = time.perf_counter()
+        for i, x0 in enumerate(x0s):
+            sampler.sample_from(None, x0[None],
+                                budget_of(i)).block_until_ready()
+        unbatched_s = time.perf_counter() - t0
+
+        gw = Gateway(sampler, max_batch=max_batch, max_wait_ms=2.0)
+        t0 = time.perf_counter()
+        futures = [gw.submit(Request(budget=budget_of(i), x0=x0))
+                   for i, x0 in enumerate(x0s)]
+        gw.drain()
+        for f in futures:    # responses are host arrays — already synced
+            f.result()
+        gateway_s = time.perf_counter() - t0
+
+        stats = gw.stats()
+        row = {
+            "mix": mix,
+            "requests": requests,
+            "max_batch": max_batch,
+            "unbatched_rps": requests / unbatched_s,
+            "gateway_rps": requests / gateway_s,
+            "speedup": unbatched_s / gateway_s,
+            "unbatched_ms_per_req": unbatched_s / requests * 1e3,
+            "gateway_ms_per_req": gateway_s / requests * 1e3,
+            "batches": stats["batches"],
+            "mixed_batches": stats["mixed_batches"],
+            "occupancy": stats["occupancy"],
+            "nfe_per_request": stats["nfe_per_request"],
+        }
+        rows.append(row)
+        log(f"{mix}: unbatched {row['unbatched_rps']:.0f} rps -> gateway "
+            f"{row['gateway_rps']:.0f} rps ({row['speedup']:.1f}x) in "
+            f"{stats['batches']} batches ({stats['mixed_batches']} mixed, "
+            f"occupancy {stats['occupancy']:.2f}, "
+            f"{stats['nfe_per_request']:.2f} NFE/request)")
+    return rows
+
+
+def check_claims(rows):
+    notes = []
+    for r in rows:
+        if r["mix"] == "uniform8" and r["max_batch"] == 8:
+            ok = r["speedup"] >= 2.0
+            notes.append(f"[{'PASS' if ok else 'FAIL'}] gateway >= 2x "
+                         f"unbatched throughput at batch 8 "
+                         f"(got {r['speedup']:.1f}x)")
+    return notes
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=64)
+    ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--json", default=None,
+                    help="write the summary (rows + claims) to this path")
+    ap.add_argument("--check", action="store_true",
+                    help="exit non-zero when an acceptance claim FAILs "
+                         "(used by CI so a throughput regression is loud)")
+    args = ap.parse_args()
+    requests = 32 if args.quick else args.requests
+    rows = run(requests=requests, max_batch=args.max_batch)
+    notes = check_claims(rows)
+    for n in notes:
+        print(n)
+    for r in rows:
+        print(f"gateway/{r['mix']},{r['gateway_ms_per_req'] * 1e3:.1f},"
+              f"speedup={r['speedup']:.2f};occupancy={r['occupancy']:.2f};"
+              f"nfe_per_request={r['nfe_per_request']:.2f}")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"rows": rows, "claims": notes}, f, indent=2)
+        print(f"summary written to {args.json}")
+    if args.check and any(n.startswith("[FAIL]") for n in notes):
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

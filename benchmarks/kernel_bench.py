@@ -48,6 +48,29 @@ def run(log=print):
     log(f"ns_update: max_err={err:.2e} ref={us:.0f}us "
         f"(fused: 1 HBM pass = {bytes_moved/1e6:.1f}MB)")
 
+    # --- ns_update at gateway serving batch sizes ---------------------------
+    # The gateway pads coalesced batches to fixed buckets; sweep those bucket
+    # sizes on latent-sequence rows (B, S, C) and check the kernel against
+    # the tensordot update it replaces (make_update_fn threads it through
+    # AnytimeFlowSampler/gateway execution). Timings are the jnp reference
+    # (interpret-mode kernel timing is meaningless off-TPU); the derived
+    # column carries the fused one-pass HBM cost model.
+    n2, S, C = 8, 16, 256
+    for Bs in (1, 8, 64):
+        ks = jax.random.split(jax.random.PRNGKey(Bs), 4)
+        x0b = jax.random.normal(ks[0], (Bs, S, C))
+        ub = jax.random.normal(ks[1], (n2, Bs, S, C))
+        ab, wb = jax.random.normal(ks[2], ()), jax.random.normal(ks[3], (n2,))
+        outb = ns_update_nd(x0b, ub, ab, wb, interpret=True)
+        refb = ns_update_ref(x0b, ub, ab, wb)
+        errb = float(jnp.max(jnp.abs(outb - refb)))
+        usb = _time(jax.jit(ns_update_ref), x0b, ub, ab, wb)
+        fused = (n2 + 2) * Bs * S * C * 4
+        rows.append((f"kernels/ns_update_serve_b{Bs}", usb,
+                     f"err={errb:.1e};fused_hbm_bytes={fused}"))
+        log(f"ns_update serve bucket B={Bs}: max_err={errb:.2e} "
+            f"tensordot={usb:.0f}us (fused: 1 HBM pass = {fused/1e6:.1f}MB)")
+
     # --- flash attention ------------------------------------------------------
     Bq, H, KV, L, hd = 1, 8, 2, 512, 128
     ks = jax.random.split(key, 3)

@@ -6,6 +6,7 @@
   bns_vs_distillation  — Table 3 (forwards/params accounting vs PD)
   taxonomy_bench       — Figure 3 / Theorem 3.2 (exact NS conversions)
   kernel_bench         — Pallas kernels vs ref oracles
+  gateway_bench        — serving gateway: batched vs unbatched throughput
   roofline             — §Roofline terms from the dry-run artifacts
 
 Prints ``name,us_per_call,derived`` CSV lines; paper-claim PASS/FAIL notes go
@@ -91,6 +92,18 @@ def main() -> None:
                                        log=log):
         csv.append((f"anytime_serving/{r['name']}", r["us"], r["derived"]))
     log(f"anytime_bench done in {time.time()-t0:.0f}s")
+
+    from benchmarks import gateway_bench
+    t0 = time.time()
+    g_rows = gateway_bench.run(requests=32 if quick else 64, log=log)
+    for note in gateway_bench.check_claims(g_rows):
+        log(note)
+    for r in g_rows:
+        csv.append((f"gateway/{r['mix']}", r["gateway_ms_per_req"] * 1e3,
+                    f"speedup={r['speedup']:.2f};"
+                    f"occupancy={r['occupancy']:.2f};"
+                    f"nfe_per_request={r['nfe_per_request']:.2f}"))
+    log(f"gateway_bench done in {time.time()-t0:.0f}s")
 
     try:
         import os

@@ -111,16 +111,22 @@ def init_anytime(field: VelocityField, budgets: Sequence[int],
 
 
 def anytime_sample(params: AnytimeParams, budgets: Sequence[int],
-                   u_fn: Callable, x0: Array) -> dict[int, Array]:
+                   u_fn: Callable, x0: Array, *,
+                   update_fn: Callable | None = None) -> dict[int, Array]:
     """Run the shared trajectory once; emit one sample per budget.
     Stopping after m evaluations costs exactly m NFE.
 
     Every update (intermediate and exit) is the same weighted-sum tensordot
     Algorithm 1 uses, so each budget's output agrees with running the
     extracted m-step solver (``extract_ns``) through ``ns_solver.ns_sample``.
+    ``update_fn(x0, U, a_i, w_i) -> x`` overrides that weighted sum (e.g. the
+    Pallas ``ns_update`` kernel), mirroring ``ns_sample(update_fn=...)``.
     """
     budgets = sorted(budgets)
     n = budgets[-1]
+    if update_fn is None:
+        def update_fn(x_init, U, a_i, w_i):
+            return a_i * x_init + jnp.tensordot(w_i, U, axes=(0, 0))
     times = jax.nn.sigmoid(params.time_raw)
     traj_u: list[Array] = []
     x = x0
@@ -129,12 +135,11 @@ def anytime_sample(params: AnytimeParams, budgets: Sequence[int],
         u = u_fn(times[i], x)
         traj_u.append(u)
         U = jnp.stack(traj_u)                       # (i+1, ...)
-        x = params.a[i] * x0 + jnp.tensordot(params.b[i, :i + 1], U,
-                                             axes=(0, 0))
+        x = update_fn(x0, U, params.a[i], params.b[i, :i + 1])
         for bi, m in enumerate(budgets[:-1]):
             if i + 1 == m:
-                outs[m] = params.exit_a[bi] * x0 + \
-                    jnp.tensordot(params.exit_b[bi, :m], U, axes=(0, 0))
+                outs[m] = update_fn(x0, U, params.exit_a[bi],
+                                    params.exit_b[bi, :m])
     outs[n] = x
     return outs
 

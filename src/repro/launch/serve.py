@@ -19,6 +19,16 @@ serve every listed NFE; each request's budget (--request-budgets, cycled)
 routes to the matching exit. A requested --nfe / request budget the artifact
 does not serve is resolved to the nearest served budget with a WARNING, or
 rejected when --strict-nfe is set — never silently ignored.
+
+--gateway serves the same traffic through ``repro.serving.Gateway``: each
+request becomes a single-sample submit, the batcher coalesces them by
+resolved budget into padded fixed-size batches (--max-batch, --max-wait-ms),
+mixed-budget flushes may ride the anytime shared trajectory
+(--mixed-budget-policy), and --mesh shards the backbone over a serving mesh
+(params via distributed.sharding, batches along the data axes). Each
+response prints its (requested, served) budget pair — drift is recorded in
+metadata, not just warned. --kernel-update routes the solver update through
+the Pallas ns_update kernel.
 """
 from __future__ import annotations
 
@@ -135,13 +145,20 @@ def serve_flow(args) -> None:
     else:
         artifact = zoo.get(_requested_spec(args), log=print)
 
+    update_fn = None
+    if args.kernel_update:
+        from repro.kernels.ns_update.ops import make_update_fn
+
+        update_fn = make_update_fn(use_kernel=True)
     anytime = artifact.kind == "anytime"
     if anytime:
         sampler = AnytimeFlowSampler.from_artifact(artifact, params=params,
-                                                   cfg=cfg, sched=sched)
+                                                   cfg=cfg, sched=sched,
+                                                   update_fn=update_fn)
     else:
         sampler = FlowSampler.from_artifact(artifact, params=params,
-                                            cfg=cfg, sched=sched)
+                                            cfg=cfg, sched=sched,
+                                            update_fn=update_fn)
     warned: set = set()
     if args.request_budgets:
         request_budgets = args.request_budgets
@@ -151,18 +168,61 @@ def serve_flow(args) -> None:
         request_budgets = (args.nfe,)
     else:
         request_budgets = artifact.budgets
-    for req in range(args.requests):
-        nfe = _resolve_budget(artifact, request_budgets[req % len(request_budgets)],
-                              args.strict_nfe, warned)
-        t0 = time.time()
-        key = jax.random.PRNGKey(1000 + req)
-        latents = (sampler.sample(cond, key, budget=nfe) if anytime
-                   else sampler.sample(cond, key))
-        tokens = sampler.nearest_tokens(latents)
-        print(f"request {req}: sampled {tokens.shape} in "
-              f"{(time.time()-t0)*1e3:.0f} ms ({nfe} NFE)")
+    if args.gateway:
+        _serve_gateway(args, sampler, cond, request_budgets)
+    else:
+        for req in range(args.requests):
+            nfe = _resolve_budget(artifact,
+                                  request_budgets[req % len(request_budgets)],
+                                  args.strict_nfe, warned)
+            t0 = time.time()
+            key = jax.random.PRNGKey(1000 + req)
+            latents = (sampler.sample(cond, key, budget=nfe) if anytime
+                       else sampler.sample(cond, key))
+            tokens = sampler.nearest_tokens(latents)
+            print(f"request {req}: sampled {tokens.shape} in "
+                  f"{(time.time()-t0)*1e3:.0f} ms ({nfe} NFE)")
     print(f"zoo stats: hits={zoo.stats.hits} misses={zoo.stats.misses} "
           f"loads={zoo.stats.loads} distills={zoo.stats.distills}")
+
+
+def _serve_gateway(args, sampler, cond, request_budgets) -> None:
+    """Multi-user serving: every request is one coalesced-batch submit."""
+    from repro.serving.gateway import Gateway, Request
+    from repro.serving.sharded import serving_mesh
+
+    gw = Gateway(sampler, max_batch=args.max_batch,
+                 max_wait_ms=args.max_wait_ms,
+                 mixed_budget_policy=args.mixed_budget_policy,
+                 strict_nfe=args.strict_nfe, mesh=serving_mesh(args.mesh))
+    gw.start()
+    t0 = time.time()
+    futures = []
+    for req in range(args.requests):
+        nfe = request_budgets[req % len(request_budgets)]
+        row = cond["tokens"][req % cond["tokens"].shape[0]]
+        try:
+            futures.append(gw.submit(Request(
+                tokens=row, budget=nfe, key=jax.random.PRNGKey(1000 + req))))
+        except ValueError as e:
+            raise SystemExit(f"--strict-nfe: {e}")
+    gw.shutdown()
+    for i, fut in enumerate(futures):
+        meta = fut.result().meta
+        drift = ("" if meta["requested_budget"] == meta["served_budget"]
+                 else f" (requested {meta['requested_budget']})")
+        print(f"request {i}: served {meta['served_budget']} NFE{drift}, "
+              f"wait {meta['wait_ms']:.1f} ms, "
+              f"batch {meta['batch_real']}/{meta['batch_padded']}"
+              + (" [mixed]" if meta["mixed"] else ""))
+    wall = time.time() - t0
+    s = gw.stats()
+    print(f"gateway stats: completed={s['completed']} batches={s['batches']} "
+          f"mixed={s['mixed_batches']} forwards={s['forwards']} "
+          f"nfe/request={s['nfe_per_request']:.2f} "
+          f"occupancy={s['occupancy']:.2f} "
+          f"mean_wait={s['mean_wait_ms']:.1f}ms "
+          f"throughput={s['completed'] / max(wall, 1e-9):.1f} rps")
 
 
 def serve_decode(args) -> None:
@@ -217,6 +277,24 @@ def main() -> None:
     ap.add_argument("--zoo-dir", default=None,
                     help="scan this directory for saved solver artifacts")
     ap.add_argument("--zoo-capacity", type=int, default=4)
+    ap.add_argument("--gateway", action="store_true",
+                    help="serve requests through the coalescing batch "
+                         "gateway (one single-sample submit per request)")
+    ap.add_argument("--max-batch", type=int, default=8,
+                    help="gateway: coalesce at most this many requests")
+    ap.add_argument("--max-wait-ms", type=float, default=10.0,
+                    help="gateway: flush partial batches after this wait")
+    ap.add_argument("--mixed-budget-policy", default="auto",
+                    choices=["never", "auto", "always"],
+                    help="gateway: route multi-budget flushes through the "
+                         "anytime shared trajectory (never/auto/always)")
+    ap.add_argument("--mesh", default="none",
+                    choices=["none", "host", "production", "multipod"],
+                    help="gateway: shard the backbone over this serving "
+                         "mesh; 'none' = single-device jit")
+    ap.add_argument("--kernel-update", action="store_true",
+                    help="route the NS solver update through the Pallas "
+                         "ns_update kernel (interpret mode off-TPU)")
     ap.add_argument("--cfg-scale", type=float, default=0.0)
     ap.add_argument("--bns-iters", type=int, default=300)
     ap.add_argument("--batch", type=int, default=8)

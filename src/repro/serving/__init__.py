@@ -1,17 +1,33 @@
-"""repro.serving — serving engines and the solver-zoo cache.
+"""repro.serving — serving engines, the solver-zoo cache, and the gateway.
 
 ``engine``  — ``FlowSampler`` (one budget), ``AnytimeFlowSampler`` (budget-
               routed multi-NFE serving from one artifact), ``DecodeEngine``;
 ``zoo``     — ``SolverZoo``, the LRU SolverSpec -> SolverArtifact cache with
-              directory scan and lazy distill-on-miss.
+              directory scan, lazy distill-on-miss, preload and spill;
+``gateway`` — ``Gateway``/``BatchScheduler``, the multi-user front-end:
+              async request queue, budget-coalescing padded batches, mixed-
+              budget shared-trajectory dispatch, serving metrics;
+``sharded`` — mesh placement for gateway batches (params via
+              ``distributed.sharding``, batches split along the data axes).
 """
 from repro.serving.engine import (
     AnytimeFlowSampler,
     DecodeEngine,
     FlowSampler,
+    nearest_budget,
     nearest_latent_tokens,
+)
+from repro.serving.gateway import (
+    BatchScheduler,
+    Gateway,
+    GatewayStats,
+    Request,
+    RequestQueue,
+    Response,
 )
 from repro.serving.zoo import SolverZoo, ZooStats
 
-__all__ = ["AnytimeFlowSampler", "DecodeEngine", "FlowSampler", "SolverZoo",
-           "ZooStats", "nearest_latent_tokens"]
+__all__ = ["AnytimeFlowSampler", "BatchScheduler", "DecodeEngine",
+           "FlowSampler", "Gateway", "GatewayStats", "Request",
+           "RequestQueue", "Response", "SolverZoo", "ZooStats",
+           "nearest_budget", "nearest_latent_tokens"]

@@ -43,6 +43,18 @@ from repro.models import model as M
 Array = jax.Array
 
 
+def nearest_budget(budgets, m: int, strict: bool = False) -> int:
+    """THE budget-routing rule, shared by every serving surface: an exact
+    match passes through; otherwise the nearest served budget (ties break
+    to the smaller — fewer backbone forwards), or ``ValueError`` under
+    ``strict``."""
+    if m in budgets:
+        return m
+    if strict:
+        raise ValueError(f"budget {m} not served; have {tuple(budgets)}")
+    return min(budgets, key=lambda b: (abs(b - m), b))
+
+
 def nearest_latent_tokens(params: dict, latents: Array) -> Array:
     """Decode sampled latents to tokens by nearest latent embedding."""
     table = params["flow"]["latent_embed"].astype(jnp.float32)
@@ -59,19 +71,21 @@ class FlowSampler:
     sched: Scheduler
     solver: NSParams
     cfg_scale: float = 0.0
+    update_fn: Optional[Callable] = None   # e.g. kernels.ns_update make_update_fn
 
     def __post_init__(self):
         def _sample(params, solver, batch, x0):
             field = M.velocity_field(params, self.cfg, self.sched, batch,
                                      cfg_scale=self.cfg_scale)
-            return ns_solver.ns_sample(solver, field.fn, x0)
+            return ns_solver.ns_sample(solver, field.fn, x0,
+                                       update_fn=self.update_fn)
 
         self._sample = jax.jit(_sample)
 
     @classmethod
     def from_artifact(cls, artifact, *, params: dict, cfg: ModelConfig,
-                      sched: Scheduler,
-                      budget: Optional[int] = None) -> "FlowSampler":
+                      sched: Scheduler, budget: Optional[int] = None,
+                      update_fn: Optional[Callable] = None) -> "FlowSampler":
         """Serving session from a loaded ``repro.solvers.SolverArtifact``.
 
         The artifact carries the solver parameters and the CFG scale it was
@@ -86,7 +100,27 @@ class FlowSampler:
         solver = (artifact.ns_params if budget is None
                   else artifact.ns_at_budget(budget))
         return cls(params=params, cfg=cfg, sched=sched, solver=solver,
-                   cfg_scale=artifact.spec.cfg_scale)
+                   cfg_scale=artifact.spec.cfg_scale, update_fn=update_fn)
+
+    # -- budget protocol (shared with AnytimeFlowSampler, used by the
+    #    gateway): a fixed-NFE session serves exactly one budget. -----------
+
+    @property
+    def budgets(self) -> tuple[int, ...]:
+        return (self.solver.n,)
+
+    def resolve_budget(self, m: int, strict: bool = False) -> int:
+        """One served budget: exact match or (with ``strict``) rejection."""
+        if m != self.solver.n and strict:
+            raise ValueError(f"budget {m} not served; have {self.budgets}")
+        return self.solver.n
+
+    def sample_from(self, batch: Optional[dict], x0: Array,
+                    budget: Optional[int] = None) -> Array:
+        """Integrate given noise ``x0`` (this session's one budget)."""
+        if budget is not None and budget != self.solver.n:
+            raise ValueError(f"budget {budget} not served; have {self.budgets}")
+        return self._sample(self.params, self.solver, batch, x0)
 
     def sample(self, batch: dict, key: Array) -> Array:
         """Generate latent sequences conditioned on ``batch`` tokens.
@@ -118,6 +152,7 @@ class AnytimeFlowSampler:
     anytime: anytime_mod.AnytimeParams
     budgets: tuple[int, ...]
     cfg_scale: float = 0.0
+    update_fn: Optional[Callable] = None   # e.g. kernels.ns_update make_update_fn
 
     def __post_init__(self):
         self.budgets = tuple(sorted(self.budgets))
@@ -126,14 +161,16 @@ class AnytimeFlowSampler:
 
     @classmethod
     def from_artifact(cls, artifact, *, params: dict, cfg: ModelConfig,
-                      sched: Scheduler) -> "AnytimeFlowSampler":
+                      sched: Scheduler,
+                      update_fn: Optional[Callable] = None
+                      ) -> "AnytimeFlowSampler":
         """Serving session from a loaded anytime ``SolverArtifact``."""
         if artifact.kind != "anytime":
             raise TypeError(f"{artifact.kind!r} artifacts serve one budget; "
                             "use FlowSampler.from_artifact")
         return cls(params=params, cfg=cfg, sched=sched,
                    anytime=artifact.params, budgets=artifact.budgets,
-                   cfg_scale=artifact.spec.cfg_scale)
+                   cfg_scale=artifact.spec.cfg_scale, update_fn=update_fn)
 
     def _field(self, batch: dict):
         return M.velocity_field(self.params, self.cfg, self.sched, batch,
@@ -141,11 +178,7 @@ class AnytimeFlowSampler:
 
     def resolve_budget(self, m: int, strict: bool = False) -> int:
         """Route a requested NFE to a served budget (nearest; ties cheaper)."""
-        if m in self.budgets:
-            return m
-        if strict:
-            raise ValueError(f"budget {m} not served; have {self.budgets}")
-        return min(self.budgets, key=lambda b: (abs(b - m), b))
+        return nearest_budget(self.budgets, m, strict)
 
     def ns_at_budget(self, m: int) -> NSParams:
         return anytime_mod.extract_ns(self.anytime, self.budgets, m)
@@ -159,7 +192,8 @@ class AnytimeFlowSampler:
             def _sample(params, batch, x0, ns=ns):
                 field = M.velocity_field(params, self.cfg, self.sched, batch,
                                          cfg_scale=self.cfg_scale)
-                return ns_solver.ns_sample(ns, field.fn, x0)
+                return ns_solver.ns_sample(ns, field.fn, x0,
+                                           update_fn=self.update_fn)
 
             fn = self._per_budget[budget] = jax.jit(_sample)
         return fn(self.params, batch, x0)
@@ -180,7 +214,8 @@ class AnytimeFlowSampler:
                 field = M.velocity_field(params, self.cfg, self.sched, batch,
                                          cfg_scale=self.cfg_scale)
                 return anytime_mod.anytime_sample(self.anytime, self.budgets,
-                                                  field.fn, x0)
+                                                  field.fn, x0,
+                                                  update_fn=self.update_fn)
 
             self._all = jax.jit(_sample)
         return self._all(self.params, batch, x0)

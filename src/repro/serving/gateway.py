@@ -1,0 +1,499 @@
+"""Serving gateway: async request queue, budget-coalescing batcher, and
+sharded execution for BNS samplers.
+
+The distilled solver makes each request cost exactly m backbone forwards;
+this module makes that speed survive concurrency. Callers ``submit`` single-
+sample ``Request``s and get ``concurrent.futures.Future``s; the gateway
+coalesces pending requests into padded fixed-size batches and runs them on a
+``FlowSampler`` / ``AnytimeFlowSampler`` (or anything speaking the budget
+protocol: ``budgets``, ``resolve_budget``, ``sample_from``, and optionally
+``sample_all_from``).
+
+Batching contract
+-----------------
+* Requests are grouped by (resolved NFE budget, sample shape). A group
+  reaching ``max_batch`` flushes immediately; partial groups flush once the
+  oldest pending request has waited ``max_wait_ms`` (a flush tick drains all
+  partial groups, so one aged request never strands its neighbours).
+* Batches are padded to a fixed BUCKET size (powers of two up to
+  ``max_batch``, plus ``max_batch`` itself), so the jit program for each
+  (budget, bucket) pair is compiled exactly once and every later batch reuses
+  it. Pad rows are zeros; rows are independent through the backbone, so each
+  served sample is bit-identical to calling ``sampler.sample_from`` directly
+  with the same x0 — padding never perturbs real samples.
+* A per-budget batch at budget m costs exactly m backbone forwards,
+  regardless of how many requests were coalesced into it — that is the whole
+  point of batching a bespoke solver.
+
+Mixed-budget policy
+-------------------
+When a flush tick leaves partial groups at several budgets, dispatching each
+group separately costs ``sum(distinct budgets)`` backbone forwards, while the
+anytime shared trajectory (``sample_all_from``) serves every budget from ONE
+dispatch at ``max(sampler.budgets)`` forwards. ``mixed_budget_policy``:
+
+    "never"  — always per-budget batches (keeps the bit-identical-to-
+               ``sample_from`` guarantee for every sample);
+    "auto"   — merge iff the shared trajectory is strictly cheaper, i.e.
+               ``max(sampler.budgets) < sum(distinct pending budgets)``;
+    "always" — merge any multi-budget flush.
+
+Merged samples are bit-identical to ``sampler.sample_all_from`` for the same
+x0 (the shared trajectory is itself exact — see ``core.anytime``); each
+response's metadata records ``mixed=True`` plus the requested/served budget
+pair, so budget drift is never silent.
+
+Sharded execution: pass ``mesh=`` (see ``repro.serving.sharded``) to shard
+the backbone params via ``distributed.sharding.param_specs`` and split
+batches along the data axes; with no mesh the gateway falls back to the
+samplers' single-device jit unchanged.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import threading
+import time
+from concurrent.futures import Future
+from typing import Any, Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+POLICIES = ("never", "auto", "always")
+
+
+@dataclasses.dataclass
+class Request:
+    """One user's sample request: conditioning tokens (S,), an NFE budget
+    (None = the sampler's top budget), and either explicit noise ``x0``
+    (bit-reproducibility) or a PRNG ``key`` (the gateway folds in a unique
+    id when both are None)."""
+
+    tokens: Optional[Array] = None
+    budget: Optional[int] = None
+    x0: Optional[Array] = None
+    key: Optional[Array] = None
+
+
+@dataclasses.dataclass
+class Response:
+    """One sample plus its serving metadata.
+
+    ``latents`` is the sample's row, materialized on host (the gateway does
+    one device->host transfer per BATCH and scatters rows in numpy — per-row
+    device slicing costs an eager op per request and erases the batching
+    win at small budgets).
+
+    ``meta`` records: requested_budget, served_budget (budget drift is data,
+    not just a warning), nfe_batch (backbone forwards the carrying batch
+    spent), batch_real / batch_padded (occupancy), mixed (shared-trajectory
+    dispatch), wait_ms (queue time).
+    """
+
+    latents: Array
+    meta: dict
+
+
+@dataclasses.dataclass
+class _Entry:
+    uid: int
+    tokens: Optional[Array]
+    x0: Array
+    requested: int
+    served: int
+    shape_key: tuple
+    t_submit: float
+    future: Future
+
+
+class RequestQueue:
+    """Thread-safe FIFO of pending entries with a depth gauge."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._entries: list[_Entry] = []
+
+    def push(self, entry: _Entry) -> None:
+        with self._lock:
+            self._entries.append(entry)
+
+    def depth(self) -> int:
+        with self._lock:
+            return len(self._entries)
+
+    def remove(self, taken: set) -> None:
+        """Drop exactly the batched entries (by uid). Entries pushed while
+        the scheduler was planning are untouched — never lost."""
+        with self._lock:
+            self._entries = [e for e in self._entries if e.uid not in taken]
+
+    def snapshot(self) -> list[_Entry]:
+        with self._lock:
+            return list(self._entries)
+
+
+@dataclasses.dataclass
+class Batch:
+    """A planned dispatch: FIFO entries, the served budget (None when the
+    batch rides the shared anytime trajectory), and the padded bucket."""
+
+    entries: list
+    budget: Optional[int]
+    bucket: int
+    mixed: bool = False
+
+
+class BatchScheduler:
+    """Deterministic batch planning (pure function of pending + now).
+
+    ``plan`` never touches wall-clock or device state, so tests drive it
+    with a fake clock and assert the exact batch layout.
+    """
+
+    def __init__(self, max_batch: int = 8, max_wait_ms: float = 10.0,
+                 policy: str = "auto", can_mix: bool = False,
+                 top_budget: Optional[int] = None):
+        if max_batch < 1:
+            raise ValueError("max_batch must be >= 1")
+        if policy not in POLICIES:
+            raise ValueError(f"mixed_budget_policy {policy!r} not in {POLICIES}")
+        self.max_batch = max_batch
+        self.max_wait_s = max_wait_ms / 1e3
+        self.policy = policy
+        self.can_mix = can_mix
+        self.top_budget = top_budget
+        self._buckets = self._bucket_sizes(max_batch)
+
+    @staticmethod
+    def _bucket_sizes(max_batch: int) -> tuple[int, ...]:
+        sizes = {max_batch}
+        b = 1
+        while b < max_batch:
+            sizes.add(b)
+            b *= 2
+        return tuple(sorted(sizes))
+
+    def bucket(self, count: int) -> int:
+        """Smallest padded size holding ``count`` — one jit program per
+        (budget, bucket), not one per observed batch size."""
+        for b in self._buckets:
+            if b >= count:
+                return b
+        raise ValueError(f"count {count} exceeds max_batch {self.max_batch}")
+
+    def _use_mixed(self, budgets: Sequence[int], total: int) -> bool:
+        """Cost model in backbone forwards per flush: per-budget dispatch
+        costs sum(distinct budgets) — leftover groups are below max_batch,
+        one dispatch each — while merging dispatches ceil(total / max_batch)
+        chunks of the shared trajectory, each running to the sampler's TOP
+        budget (``sample_all``). Merge only when that is strictly cheaper."""
+        if not self.can_mix or len(budgets) < 2 or self.policy == "never":
+            return False
+        if self.policy == "always":
+            return True
+        if self.top_budget is None:
+            return False
+        chunks = -(-total // self.max_batch)
+        return chunks * self.top_budget < sum(budgets)
+
+    def plan(self, pending: Sequence[_Entry], now: float,
+             force: bool = False) -> list[Batch]:
+        """The batches ready to dispatch; unbatched entries stay pending
+        (the caller removes exactly the batched entries from its queue)."""
+        batches: list[Batch] = []
+        groups: dict[tuple, list[_Entry]] = {}
+        for e in pending:
+            groups.setdefault((e.shape_key, e.served), []).append(e)
+
+        leftovers: dict[tuple, list[_Entry]] = {}
+        for (shape, served), es in groups.items():
+            while len(es) >= self.max_batch:
+                head, es = es[:self.max_batch], es[self.max_batch:]
+                batches.append(Batch(head, served, self.bucket(len(head))))
+            if es:
+                leftovers[(shape, served)] = es
+
+        aged = any(now - e.t_submit >= self.max_wait_s
+                   for es in leftovers.values() for e in es)
+        if not (force or aged):
+            return batches
+
+        by_shape: dict[tuple, dict[int, list[_Entry]]] = {}
+        for (shape, served), es in leftovers.items():
+            by_shape.setdefault(shape, {})[served] = es
+        for shape in sorted(by_shape, key=repr):
+            per_budget = by_shape[shape]
+            total = sum(len(es) for es in per_budget.values())
+            if self._use_mixed(sorted(per_budget), total):
+                merged = sorted((e for es in per_budget.values() for e in es),
+                                key=lambda e: e.uid)
+                for i in range(0, len(merged), self.max_batch):
+                    chunk = merged[i:i + self.max_batch]
+                    served_set = {e.served for e in chunk}
+                    if len(served_set) > 1:
+                        batches.append(Batch(chunk, None,
+                                             self.bucket(len(chunk)),
+                                             mixed=True))
+                    else:
+                        batches.append(Batch(chunk, chunk[0].served,
+                                             self.bucket(len(chunk))))
+            else:
+                for served in sorted(per_budget):
+                    es = per_budget[served]
+                    batches.append(Batch(es, served, self.bucket(len(es))))
+        return batches
+
+
+@dataclasses.dataclass
+class GatewayStats:
+    submitted: int = 0
+    completed: int = 0
+    failed: int = 0
+    batches: int = 0
+    mixed_batches: int = 0
+    forwards: int = 0          # backbone forwards spent (batch-level NFE sum)
+    real_rows: int = 0
+    padded_rows: int = 0
+    sum_wait_ms: float = 0.0
+    max_wait_ms: float = 0.0
+    started: float = 0.0
+
+
+class Gateway:
+    """Multi-user front-end over one budget-routing sampler.
+
+    ``submit(request) -> Future[Response]``; ``pump()`` plans and executes
+    ready batches (the unit tests drive it with a fake clock); ``start()`` /
+    ``serve_forever()`` run the pump loop on a thread; ``drain()`` stops
+    accepting and flushes everything; ``shutdown()`` = drain + stop.
+
+    ``from_zoo`` acquires the solver artifact through a ``SolverZoo`` so a
+    gateway boot is a cache hit/load, never an accidental re-distillation.
+    """
+
+    def __init__(self, sampler, *, max_batch: int = 8,
+                 max_wait_ms: float = 10.0,
+                 mixed_budget_policy: str = "auto", strict_nfe: bool = False,
+                 mesh=None, clock: Callable[[], float] = time.monotonic,
+                 key: Optional[Array] = None):
+        self.sampler = sampler
+        can_mix = (hasattr(sampler, "sample_all_from")
+                   and len(sampler.budgets) > 1)
+        self.scheduler = BatchScheduler(
+            max_batch=max_batch, max_wait_ms=max_wait_ms,
+            policy=mixed_budget_policy, can_mix=can_mix,
+            top_budget=max(sampler.budgets))
+        self.strict_nfe = strict_nfe
+        self.clock = clock
+        self.queue = RequestQueue()
+        self.stats_raw = GatewayStats(started=clock())
+        self._uid = itertools.count()
+        self._plan_lock = threading.Lock()
+        self._intake_lock = threading.Lock()   # closed-check + push atomic
+        self._stats_lock = threading.Lock()    # drain + serve thread both run
+        #                                        _execute; '+=' is not atomic
+        self._closed = False
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+        self._base_key = key if key is not None else jax.random.PRNGKey(0)
+        self._place = None
+        if mesh is not None:
+            from repro.serving import sharded
+
+            sharded.shard_sampler(self.sampler, mesh)
+            self._place = sharded.batch_placer(mesh)
+
+    @classmethod
+    def from_zoo(cls, zoo, spec, *, params: dict, cfg, sched,
+                 update_fn: Optional[Callable] = None, log=None,
+                 **gateway_kw) -> "Gateway":
+        """Boot a gateway from a zoo-resolved artifact (hit/load/distill)."""
+        from repro.serving.engine import AnytimeFlowSampler, FlowSampler
+
+        artifact = zoo.get(spec, log=log)
+        if artifact.kind == "anytime":
+            sampler = AnytimeFlowSampler.from_artifact(
+                artifact, params=params, cfg=cfg, sched=sched,
+                update_fn=update_fn)
+        else:
+            sampler = FlowSampler.from_artifact(
+                artifact, params=params, cfg=cfg, sched=sched,
+                update_fn=update_fn)
+        return cls(sampler, **gateway_kw)
+
+    # -- intake -------------------------------------------------------------
+
+    def submit(self, request: Optional[Request] = None, **kw) -> Future:
+        """Enqueue one request; returns a Future resolving to ``Response``.
+
+        The budget is resolved to a served one NOW (strict mode raises here,
+        before the request ever queues); the (requested, served) pair rides
+        in the response metadata either way.
+        """
+        if request is None:
+            request = Request(**kw)
+        requested = (request.budget if request.budget is not None
+                     else self.sampler.budgets[-1])
+        served = self.sampler.resolve_budget(requested,
+                                             strict=self.strict_nfe)
+        uid = next(self._uid)
+        x0 = request.x0
+        if x0 is None:
+            if request.tokens is None:
+                raise ValueError("request needs tokens and/or explicit x0")
+            key = (request.key if request.key is not None
+                   else jax.random.fold_in(self._base_key, uid))
+            x0 = jax.random.normal(
+                key, (request.tokens.shape[0], self.sampler.cfg.latent_dim))
+        shape_key = (None if request.tokens is None
+                     else tuple(request.tokens.shape), tuple(x0.shape))
+        entry = _Entry(uid=uid, tokens=request.tokens, x0=x0,
+                       requested=requested, served=served,
+                       shape_key=shape_key, t_submit=self.clock(),
+                       future=Future())
+        # the closed check and the push are one atomic step wrt drain():
+        # once drain flips _closed (under this lock), no entry can slip in
+        # after its final flush and strand an unresolved future
+        with self._intake_lock:
+            if self._closed:
+                raise RuntimeError("gateway is draining; no new requests")
+            self.queue.push(entry)
+            self.stats_raw.submitted += 1
+        return entry.future
+
+    # -- scheduling / execution --------------------------------------------
+
+    def pump(self, force: bool = False) -> int:
+        """Plan ready batches and execute them; returns how many ran."""
+        with self._plan_lock:
+            batches = self.scheduler.plan(
+                self.queue.snapshot(), self.clock(), force=force)
+            # remove exactly the batched entries — a submit landing after
+            # the snapshot stays queued for the next pump, never dropped
+            self.queue.remove(
+                {e.uid for b in batches for e in b.entries})
+        for batch in batches:
+            self._execute(batch)
+        return len(batches)
+
+    def _execute(self, batch: Batch) -> None:
+        import numpy as np
+
+        es = batch.entries
+        pad = batch.bucket - len(es)
+        dispatched = self.clock()   # wait_ms is QUEUE time, ending here —
+        #                             not device/compile time
+        try:
+            # assemble on host: ONE device transfer per batch, not one eager
+            # stack/slice op per request (those dominate at small budgets)
+            x0_np = np.stack([np.asarray(e.x0) for e in es])
+            if pad:
+                x0_np = np.concatenate(
+                    [x0_np, np.zeros((pad,) + x0_np.shape[1:], x0_np.dtype)])
+            x0 = jnp.asarray(x0_np)
+            cond = None
+            if es[0].tokens is not None:
+                t_np = np.stack([np.asarray(e.tokens) for e in es]
+                                + [np.zeros_like(np.asarray(es[0].tokens))]
+                                * pad)
+                cond = {"tokens": jnp.asarray(t_np)}
+            if self._place is not None:
+                cond, x0 = self._place(cond, x0)
+            if batch.mixed:
+                outs = self.sampler.sample_all_from(cond, x0)
+                nfe = max(self.sampler.budgets)
+                host = {m: np.asarray(outs[m]) for m in {e.served for e in es}}
+                rows = [host[e.served][i] for i, e in enumerate(es)]
+            else:
+                lat = np.asarray(
+                    self.sampler.sample_from(cond, x0, batch.budget))
+                nfe = batch.budget
+                rows = [lat[i] for i in range(len(es))]
+        except Exception as exc:
+            for e in es:
+                e.future.set_exception(exc)
+            with self._stats_lock:
+                self.stats_raw.failed += len(es)
+            return
+        s = self.stats_raw
+        with self._stats_lock:
+            s.batches += 1
+            s.mixed_batches += int(batch.mixed)
+            s.forwards += nfe
+            s.real_rows += len(es)
+            s.padded_rows += batch.bucket
+            for e in es:
+                wait_ms = (dispatched - e.t_submit) * 1e3
+                s.sum_wait_ms += wait_ms
+                s.max_wait_ms = max(s.max_wait_ms, wait_ms)
+                s.completed += 1
+        for e, row in zip(es, rows):
+            wait_ms = (dispatched - e.t_submit) * 1e3
+            e.future.set_result(Response(latents=row, meta={
+                "requested_budget": e.requested,
+                "served_budget": e.served,
+                "nfe_batch": nfe,
+                "batch_real": len(es),
+                "batch_padded": batch.bucket,
+                "mixed": batch.mixed,
+                "wait_ms": wait_ms,
+            }))
+
+    # -- lifecycle ----------------------------------------------------------
+
+    def serve_forever(self, poll_s: float = 0.001) -> None:
+        """Pump until ``stop``; sleeps ``poll_s`` when there is no work."""
+        while not self._stop.is_set():
+            if self.pump() == 0:
+                time.sleep(poll_s)
+
+    def start(self, poll_s: float = 0.001) -> threading.Thread:
+        if self._thread is not None and self._thread.is_alive():
+            return self._thread
+        self._stop.clear()
+        self._thread = threading.Thread(
+            target=self.serve_forever, kwargs={"poll_s": poll_s},
+            name="gateway-serve", daemon=True)
+        self._thread.start()
+        return self._thread
+
+    def drain(self) -> None:
+        """Graceful drain: refuse new requests, flush every pending one."""
+        with self._intake_lock:
+            self._closed = True        # no submit can pass the check now
+        while self.queue.depth():
+            self.pump(force=True)
+
+    def stop(self) -> None:
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join(timeout=10)
+            self._thread = None
+
+    def shutdown(self) -> None:
+        self.drain()
+        self.stop()
+
+    # -- metrics ------------------------------------------------------------
+
+    def stats(self) -> dict[str, Any]:
+        """Aggregate serving metrics as one flat dict."""
+        s = self.stats_raw
+        elapsed = max(self.clock() - s.started, 1e-9)
+        return {
+            "queue_depth": self.queue.depth(),
+            "submitted": s.submitted,
+            "completed": s.completed,
+            "failed": s.failed,
+            "batches": s.batches,
+            "mixed_batches": s.mixed_batches,
+            "forwards": s.forwards,
+            "nfe_per_request": s.forwards / max(s.completed, 1),
+            "occupancy": s.real_rows / max(s.padded_rows, 1),
+            "mean_wait_ms": s.sum_wait_ms / max(s.completed, 1),
+            "max_wait_ms": s.max_wait_ms,
+            "throughput_rps": s.completed / elapsed,
+        }

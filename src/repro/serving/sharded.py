@@ -1,0 +1,89 @@
+"""Sharded serving execution: gateway batches on the production mesh.
+
+Params are placed once via ``distributed.sharding.param_specs`` (Megatron +
+FSDP rules — the same table training uses), and each gateway batch is split
+along the composed data axes before dispatch, so the samplers' existing jit
+programs lower to GSPMD collectives with no sampler code changes. When the
+padded bucket does not divide the data-axis size the batch is replicated
+instead (correct, just not data-parallel) — bucket sizes are powers of two,
+so sizing ``max_batch`` to the data axis keeps every bucket divisible.
+
+No mesh -> nothing here runs and serving stays single-device jit (the
+``Gateway(mesh=None)`` default).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def _data_axes(mesh):
+    from repro.launch.mesh import batch_axes
+
+    axes = batch_axes(mesh)
+    size = 1
+    for a in axes:
+        size *= mesh.shape[a]
+    return (axes if len(axes) > 1 else axes[0]), size
+
+
+def shard_params(params, cfg, mesh):
+    """Place a backbone param pytree on ``mesh`` per the serving/training
+    sharding rules; returns the (now sharded) pytree."""
+    from repro.distributed.sharding import param_specs
+
+    specs = param_specs(params, cfg, mesh)
+    shardings = jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                             is_leaf=lambda x: isinstance(x, P))
+    return jax.device_put(params, shardings)
+
+
+def shard_sampler(sampler, mesh):
+    """Re-place a ``FlowSampler``/``AnytimeFlowSampler``'s params on the
+    mesh, in place. Its jit'd programs recompile (once per budget/bucket)
+    against the sharded layout on next call."""
+    sampler.params = shard_params(sampler.params, sampler.cfg, mesh)
+    return sampler
+
+
+def batch_placer(mesh):
+    """A ``place(cond, x0) -> (cond, x0)`` callable sharding batch arrays
+    along the data axes (leading dim), replicating when indivisible."""
+    axes, size = _data_axes(mesh)
+
+    def place_one(x):
+        spec_b = axes if x.shape[0] % size == 0 else None
+        sharding = NamedSharding(mesh, P(spec_b, *(None,) * (x.ndim - 1)))
+        return jax.device_put(x, sharding)
+
+    def place(cond, x0):
+        x0 = place_one(x0)
+        if cond is not None:
+            cond = {k: place_one(v) if hasattr(v, "ndim") and v.ndim else v
+                    for k, v in cond.items()}
+        return cond, x0
+
+    return place
+
+
+def serving_mesh(name: str):
+    """CLI mesh selection: 'none' -> None (single-device jit), 'host' ->
+    the 1x1 smoke mesh, 'production'/'multipod' -> ``launch.mesh`` shapes.
+    Falls back to None with a warning when the host lacks the devices."""
+    if name in (None, "none"):
+        return None
+    from repro.launch import mesh as mesh_mod
+
+    try:
+        if name == "host":
+            return mesh_mod.make_host_mesh()
+        if name == "production":
+            return mesh_mod.make_production_mesh()
+        if name == "multipod":
+            return mesh_mod.make_production_mesh(multi_pod=True)
+    except Exception as e:
+        print(f"WARNING: cannot build {name!r} mesh ({e}); "
+              "falling back to single-device jit")
+        return None
+    raise ValueError(f"unknown mesh {name!r}; "
+                     "choose none|host|production|multipod")

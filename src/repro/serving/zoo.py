@@ -11,10 +11,15 @@ with LRU eviction. A ``get`` resolves in order:
      (or ``SolverSpec.distill`` with the ``get`` call's field/pairs) and,
      when the zoo has a ``save_dir``, persisted for the next process.
 
-``stats`` counts hits/misses/loads/distills/evictions so serving can assert
-the cache contract (a hit performs zero distillation) and dashboards can
-watch the ratio. One anytime artifact covers every budget in its spec, so
-multi-NFE serving needs exactly one entry.
+``stats`` counts hits/misses/loads/distills/evictions/spills so serving can
+assert the cache contract (a hit performs zero distillation) and dashboards
+can watch the ratio. One anytime artifact covers every budget in its spec,
+so multi-NFE serving needs exactly one entry.
+
+Warm-start and spill (the serving-boot policy): ``preload(specs)`` resolves
+the top-k specs before traffic arrives, and when the zoo has a ``save_dir``
+an LRU eviction SPILLS the artifact to disk instead of dropping it, so the
+next ``get`` is a load, never a re-distillation.
 """
 from __future__ import annotations
 
@@ -34,6 +39,7 @@ class ZooStats:
     distills: int = 0      # distilled on miss
     misses: int = 0        # loads + distills
     evictions: int = 0     # LRU evictions past capacity
+    spills: int = 0        # evicted artifacts saved to save_dir (not dropped)
 
 
 class SolverZoo:
@@ -94,15 +100,50 @@ class SolverZoo:
         return list(self._cache)
 
     def put(self, artifact: SolverArtifact) -> SolverArtifact:
-        """Insert (or refresh) an artifact under its own spec key."""
+        """Insert (or refresh) an artifact under its own spec key.
+
+        When the insert pushes the zoo past capacity, the LRU entry is
+        evicted — and, if the zoo has a ``save_dir`` and the artifact is not
+        already indexed on disk, SPILLED there first instead of being
+        dropped, so a later ``get`` reloads it without re-distilling.
+        """
         spec = artifact.spec
+        # the inserted artifact shadows any disk copy of unknown freshness:
+        # drop the index entry so a later eviction spills THIS artifact
+        # instead of trusting a possibly-stale file (``get`` re-links the
+        # path right after its own load/save, where file == artifact holds)
+        self._paths.pop(spec, None)
         if spec in self._cache:
             self._cache.move_to_end(spec)
         self._cache[spec] = artifact
         while len(self._cache) > self.capacity:
-            self._cache.popitem(last=False)
+            spec_e, art_e = self._cache.popitem(last=False)
             self.stats.evictions += 1
+            if self.save_dir is not None and spec_e not in self._paths:
+                path = os.path.join(self.save_dir, self._filename(spec_e))
+                art_e.save(path)
+                self._paths[spec_e] = path
+                self.stats.spills += 1
         return artifact
+
+    def preload(self, specs, *, field=None, train_pairs=None, val_pairs=None,
+                train_cfg=None, log=None) -> list[SolverArtifact]:
+        """Warm-start: resolve the top-k specs (by expected traffic, caller-
+        ordered) at boot so the first real request never pays a load/distill.
+
+        Specs beyond ``capacity`` would immediately evict one another, so
+        only the first ``capacity`` are resolved (with a log note). Returns
+        the loaded artifacts in request order.
+        """
+        specs = list(specs)
+        if len(specs) > self.capacity:
+            if log:
+                log(f"zoo: preloading only the first {self.capacity} of "
+                    f"{len(specs)} specs (capacity)")
+            specs = specs[:self.capacity]
+        return [self.get(s, field=field, train_pairs=train_pairs,
+                         val_pairs=val_pairs, train_cfg=train_cfg, log=log)
+                for s in specs]
 
     def get(self, spec: SolverSpec, *, field=None, train_pairs=None,
             val_pairs=None, train_cfg=None, log=None) -> SolverArtifact:
@@ -125,18 +166,21 @@ class SolverZoo:
                 self.stats.loads += 1
                 if log:
                     log(f"zoo: loaded {spec.mode}/{spec.name} from {path}")
-                return self.put(art)
+                art = self.put(art)
+                self._paths[spec] = path       # file == artifact, re-link
+                return art
             # file changed since it was indexed — never serve the wrong solver
             del self._paths[spec]
         art = self._distill(spec, field, train_pairs, val_pairs, train_cfg,
                             log)
+        art = self.put(art)
         if self.save_dir is not None:
             path = os.path.join(self.save_dir, self._filename(spec))
             art.save(path)
             self._paths[spec] = path
             if log:
                 log(f"zoo: saved {path}")
-        return self.put(art)
+        return art
 
     @staticmethod
     def _filename(spec: SolverSpec) -> str:

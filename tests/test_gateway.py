@@ -1,0 +1,482 @@
+"""Serving gateway: deterministic batch scheduling (fake clock), coalescing
+by budget, max-wait flush, padded-batch bit-exactness vs direct sampling,
+exact NFE accounting via a forward-counting field wrapper, mixed-budget
+shared-trajectory dispatch, budget-drift metadata, and sharded execution."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ns_solver, schedulers, toy
+from repro.core.anytime import anytime_sample, extract_ns, init_anytime
+from repro.serving import AnytimeFlowSampler, Gateway, Request, nearest_budget
+from repro.serving.gateway import BatchScheduler
+from repro.solvers import SolverArtifact, SolverSpec
+
+BUDGETS = (2, 4)
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, seconds):
+        self.t += seconds
+
+
+class CountingToySampler:
+    """Budget-protocol sampler over the analytic toy field, UN-jitted so a
+    forward-counting field wrapper observes every real backbone forward —
+    the gateway's NFE accounting is asserted against this counter."""
+
+    def __init__(self, budgets=BUDGETS, seed=0, jitter=0.1):
+        self.budgets = tuple(sorted(budgets))
+        theta = init_anytime(None, self.budgets, "nested")
+        leaves, treedef = jax.tree.flatten(theta)
+        keys = jax.random.split(jax.random.PRNGKey(seed), len(leaves))
+        self.theta = jax.tree.unflatten(
+            treedef, [l + jitter * jax.random.normal(k, l.shape)
+                      for l, k in zip(leaves, keys)])
+        sched = schedulers.fm_ot()
+        self._field = toy.mixture_field(sched, toy.two_moons_means(),
+                                        jnp.full((16,), 0.15),
+                                        jnp.ones((16,)))
+        self.forwards = 0
+
+    def _u(self, t, x):
+        self.forwards += 1
+        return self._field.fn(t, x)
+
+    def resolve_budget(self, m, strict=False):
+        return nearest_budget(self.budgets, m, strict)
+
+    def sample_from(self, batch, x0, budget):
+        ns = extract_ns(self.theta, self.budgets, budget)
+        return ns_solver.ns_sample(ns, self._u, x0, unroll=True)
+
+    def sample_all_from(self, batch, x0):
+        return anytime_sample(self.theta, self.budgets, self._u, x0)
+
+
+def _gateway(sampler=None, **kw):
+    clock = FakeClock()
+    sampler = sampler or CountingToySampler()
+    kw.setdefault("max_batch", 2)
+    kw.setdefault("max_wait_ms", 10.0)
+    gw = Gateway(sampler, clock=clock, **kw)
+    return gw, sampler, clock
+
+
+def _x0(i, shape=(2,)):
+    return jax.random.normal(jax.random.PRNGKey(100 + i), shape)
+
+
+# ---------------------------------------------------------------------------
+# BatchScheduler (pure planning)
+# ---------------------------------------------------------------------------
+
+
+def test_bucket_sizes_are_powers_of_two_up_to_max_batch():
+    s = BatchScheduler(max_batch=8)
+    assert [s.bucket(k) for k in (1, 2, 3, 5, 8)] == [1, 2, 4, 8, 8]
+    s6 = BatchScheduler(max_batch=6)
+    assert [s6.bucket(k) for k in (3, 5, 6)] == [4, 6, 6]
+    with pytest.raises(ValueError):
+        s.bucket(9)
+
+
+def test_scheduler_validates_config():
+    with pytest.raises(ValueError):
+        BatchScheduler(max_batch=0)
+    with pytest.raises(ValueError):
+        BatchScheduler(policy="sometimes")
+
+
+# ---------------------------------------------------------------------------
+# Coalescing + flush behavior (gateway with fake clock, manual pump)
+# ---------------------------------------------------------------------------
+
+
+def test_full_batch_flushes_immediately_without_wait():
+    gw, sampler, clock = _gateway()
+    f0 = gw.submit(Request(budget=2, x0=_x0(0)))
+    assert gw.pump() == 0 and not f0.done()      # half a batch: waits
+    f1 = gw.submit(Request(budget=2, x0=_x0(1)))
+    assert gw.pump() == 1                        # full batch: no wait needed
+    assert f0.done() and f1.done()
+    assert sampler.forwards == 2                 # ONE dispatch at budget 2
+
+
+def test_coalesces_by_budget_not_arrival_order():
+    gw, sampler, clock = _gateway()
+    futs = [gw.submit(Request(budget=b, x0=_x0(i)))
+            for i, b in enumerate([2, 4, 2, 4])]   # interleaved arrivals
+    assert gw.pump() == 2                          # (2,2) and (4,4) batches
+    for f, b in zip(futs, [2, 4, 2, 4]):
+        assert f.result().meta["served_budget"] == b
+        assert f.result().meta["batch_real"] == 2
+    # 2 + 4 forwards total — budget coalescing, not FIFO batching
+    assert sampler.forwards == 6
+    assert gw.stats()["forwards"] == sampler.forwards
+
+
+def test_partial_batch_flushes_only_after_max_wait():
+    gw, sampler, clock = _gateway(max_batch=4)
+    fut = gw.submit(Request(budget=2, x0=_x0(0)))
+    clock.advance(0.005)
+    assert gw.pump() == 0 and not fut.done()     # younger than max_wait
+    clock.advance(0.006)                         # now 11ms > 10ms
+    assert gw.pump() == 1
+    assert fut.result().meta["wait_ms"] >= 10.0
+    assert fut.result().meta["batch_real"] == 1
+
+
+def test_gateway_output_bit_identical_to_direct_sampler():
+    """Coalesced + padded batches must not perturb any sample: gateway rows
+    == direct ``sample_from`` on the same x0 (toy path is un-jitted)."""
+    gw, sampler, clock = _gateway(max_batch=4)
+    x0s = [_x0(i) for i in range(3)]
+    futs = [gw.submit(Request(budget=4, x0=x)) for x in x0s]
+    clock.advance(1.0)
+    assert gw.pump() == 1                        # one batch of 3, padded to 4
+    direct = sampler.sample_from(None, jnp.stack(x0s), 4)
+    for f, d in zip(futs, direct):
+        np.testing.assert_array_equal(np.asarray(f.result().latents),
+                                      np.asarray(d))
+        assert f.result().meta["batch_padded"] == 4
+
+
+def test_coalesced_batch_costs_exactly_m_forwards():
+    """Acceptance: a coalesced batch at budget m costs exactly m backbone
+    forwards, asserted via the forward-counting field wrapper."""
+    gw, sampler, clock = _gateway(max_batch=4)
+    for i in range(4):
+        gw.submit(Request(budget=4, x0=_x0(i)))
+    assert gw.pump() == 1
+    assert sampler.forwards == 4                 # m forwards for the batch
+    s = gw.stats()
+    assert s["forwards"] == 4 and s["completed"] == 4
+    assert s["nfe_per_request"] == pytest.approx(1.0)
+
+
+# ---------------------------------------------------------------------------
+# Mixed-budget policy
+# ---------------------------------------------------------------------------
+
+
+def test_mixed_flush_rides_shared_trajectory_when_cheaper():
+    """Budgets {2, 4} pending, top budget 4 < 2+4: auto merges the flush
+    into ONE sample_all dispatch costing max(budgets) forwards."""
+    gw, sampler, clock = _gateway(max_batch=4)
+    f2 = gw.submit(Request(budget=2, x0=_x0(0)))
+    f4 = gw.submit(Request(budget=4, x0=_x0(1)))
+    clock.advance(1.0)
+    assert gw.pump() == 1
+    assert sampler.forwards == 4                 # max, not 2 + 4
+    for f, b in [(f2, 2), (f4, 4)]:
+        meta = f.result().meta
+        assert meta["mixed"] and meta["served_budget"] == b
+        assert meta["nfe_batch"] == 4
+    # bit-identical to the shared trajectory on the same x0
+    outs = CountingToySampler().sample_all_from(
+        None, jnp.stack([_x0(0), _x0(1)]))
+    np.testing.assert_array_equal(np.asarray(f2.result().latents),
+                                  np.asarray(outs[2][0]))
+    np.testing.assert_array_equal(np.asarray(f4.result().latents),
+                                  np.asarray(outs[4][1]))
+    assert gw.stats()["mixed_batches"] == 1
+
+
+def test_mixed_policy_never_dispatches_per_budget():
+    gw, sampler, clock = _gateway(max_batch=4, mixed_budget_policy="never")
+    gw.submit(Request(budget=2, x0=_x0(0)))
+    gw.submit(Request(budget=4, x0=_x0(1)))
+    clock.advance(1.0)
+    assert gw.pump() == 2                        # one partial batch per budget
+    assert sampler.forwards == 6
+    assert gw.stats()["mixed_batches"] == 0
+
+
+def test_mixed_auto_respects_cost_model():
+    """With budgets (2, 4, 16) the shared trajectory costs 16 forwards; a
+    {2, 4} flush (sum 6) is cheaper per-budget, so auto must NOT merge —
+    but policy=always does."""
+    sampler = CountingToySampler(budgets=(2, 4, 16))
+    gw, _, clock = _gateway(sampler, max_batch=4)
+    gw.submit(Request(budget=2, x0=_x0(0)))
+    gw.submit(Request(budget=4, x0=_x0(1)))
+    clock.advance(1.0)
+    assert gw.pump() == 2 and sampler.forwards == 6
+
+    sampler2 = CountingToySampler(budgets=(2, 4, 16))
+    gw2, _, clock2 = _gateway(sampler2, max_batch=4,
+                              mixed_budget_policy="always")
+    gw2.submit(Request(budget=2, x0=_x0(0)))
+    gw2.submit(Request(budget=4, x0=_x0(1)))
+    clock2.advance(1.0)
+    assert gw2.pump() == 1 and sampler2.forwards == 16
+
+
+def test_mixed_auto_accounts_for_chunking():
+    """Regression: when the merged flush would split into several chunks,
+    EACH costs max(budgets) forwards — auto must compare against that, not
+    a single dispatch. Here 2 chunks x 16 = 32 > 2+4+8+16 = 30: no merge."""
+    sampler = CountingToySampler(budgets=(2, 4, 8, 16))
+    gw, _, clock = _gateway(sampler, max_batch=2)
+    for i, b in enumerate((2, 4, 8, 16)):
+        gw.submit(Request(budget=b, x0=_x0(i)))
+    clock.advance(1.0)
+    assert gw.pump() == 4                        # per-budget partials
+    assert sampler.forwards == 30
+    assert gw.stats()["mixed_batches"] == 0
+
+
+# ---------------------------------------------------------------------------
+# Budget drift metadata + strict mode
+# ---------------------------------------------------------------------------
+
+
+def test_budget_drift_recorded_in_response_metadata():
+    """An unserved budget routes to the nearest served one AND the
+    (requested, served) pair rides in the metadata — never only a warning."""
+    gw, sampler, clock = _gateway(max_batch=1)
+    fut = gw.submit(Request(budget=3, x0=_x0(0)))
+    gw.pump()
+    meta = fut.result().meta
+    assert meta["requested_budget"] == 3
+    assert meta["served_budget"] == 2            # nearest, ties to cheaper
+
+
+def test_strict_nfe_rejects_at_submit():
+    gw, sampler, clock = _gateway(strict_nfe=True)
+    with pytest.raises(ValueError):
+        gw.submit(Request(budget=3, x0=_x0(0)))
+    assert gw.queue.depth() == 0
+
+
+def test_submit_requires_tokens_or_x0():
+    gw, _, _ = _gateway()
+    with pytest.raises(ValueError):
+        gw.submit(Request(budget=2))
+
+
+# ---------------------------------------------------------------------------
+# Drain / lifecycle / threaded serving
+# ---------------------------------------------------------------------------
+
+
+def test_drain_flushes_everything_and_closes_intake():
+    gw, sampler, clock = _gateway(max_batch=4)
+    futs = [gw.submit(Request(budget=2, x0=_x0(i))) for i in range(3)]
+    gw.drain()                                   # partial batch, zero age
+    assert all(f.done() for f in futs)
+    with pytest.raises(RuntimeError):
+        gw.submit(Request(budget=2, x0=_x0(9)))
+
+
+def test_submit_during_pump_is_never_lost():
+    """Regression: a submit landing while pump is planning must stay queued
+    (the old swap-based pump overwrote it, stranding the future forever)."""
+    gw, sampler, clock = _gateway(max_batch=2)
+    f0 = gw.submit(Request(budget=2, x0=_x0(0)))
+    orig_plan = gw.scheduler.plan
+    late = {}
+
+    def plan_then_push(pending, now, force=False):
+        out = orig_plan(pending, now, force)
+        if "f" not in late:                      # a submit races the pump
+            late["f"] = gw.submit(Request(budget=2, x0=_x0(1)))
+        return out
+
+    gw.scheduler.plan = plan_then_push
+    assert gw.pump() == 0                        # f0 partial, f1 mid-plan
+    assert gw.queue.depth() == 2                 # the racing submit survived
+    assert gw.pump() == 1                        # now a full (2, 2) batch
+    assert f0.done() and late["f"].done()
+
+
+def test_failed_batch_propagates_to_futures():
+    class Exploding(CountingToySampler):
+        def sample_from(self, batch, x0, budget):
+            raise RuntimeError("boom")
+
+    gw, _, clock = _gateway(Exploding())
+    futs = [gw.submit(Request(budget=2, x0=_x0(i))) for i in range(2)]
+    gw.pump()
+    for f in futs:
+        with pytest.raises(RuntimeError, match="boom"):
+            f.result()
+    assert gw.stats()["failed"] == 2
+
+
+def test_threaded_serve_forever_resolves_futures():
+    """Real clock end-to-end: start() + submit -> futures resolve without
+    manual pumping; shutdown drains and joins the thread."""
+    sampler = CountingToySampler()
+    gw = Gateway(sampler, max_batch=2, max_wait_ms=5.0)
+    gw.start()
+    futs = [gw.submit(Request(budget=2, x0=_x0(i))) for i in range(3)]
+    for f in futs:
+        assert f.result(timeout=30).latents.shape == (2,)
+    gw.shutdown()
+    assert gw.stats()["completed"] == 3
+
+
+# ---------------------------------------------------------------------------
+# Real backbone: padded-batch bit-exactness, jit reuse, sharding
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def backbone():
+    from repro.configs import get_config
+    from repro.core.schedulers import fm_ot
+    from repro.data.synthetic import DataConfig, SyntheticTokens
+    from repro.models import model as M
+
+    cfg = get_config("yi-6b", smoke=True)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    data = SyntheticTokens(cfg, DataConfig(batch_size=4, seq_len=8))
+    art = SolverArtifact(
+        spec=SolverSpec("midpoint", mode="anytime", budgets=BUDGETS),
+        params=init_anytime(None, BUDGETS, "nested"), val_psnr=0.0)
+
+    def make_sampler(update_fn=None):
+        return AnytimeFlowSampler.from_artifact(
+            art, params=params, cfg=cfg, sched=fm_ot(), update_fn=update_fn)
+
+    return cfg, data.batch(0), make_sampler
+
+
+def test_backbone_padded_batch_bit_identical(backbone):
+    """The jit'd backbone path: 3 coalesced requests padded to bucket 4 give
+    rows bit-identical to the direct 3-row ``sample_from`` call."""
+    cfg, batch, make_sampler = backbone
+    sampler = make_sampler()
+    clock = FakeClock()
+    gw = Gateway(sampler, max_batch=4, max_wait_ms=10.0, clock=clock)
+    toks = batch["tokens"][:3]
+    x0 = jax.random.normal(jax.random.PRNGKey(5), (3, 8, cfg.latent_dim))
+    futs = [gw.submit(Request(tokens=toks[i], budget=2, x0=x0[i]))
+            for i in range(3)]
+    clock.advance(1.0)
+    assert gw.pump() == 1
+    direct = sampler.sample_from({"tokens": toks}, x0, 2)
+    for i, f in enumerate(futs):
+        assert f.result().meta["batch_padded"] == 4
+        np.testing.assert_array_equal(np.asarray(f.result().latents),
+                                      np.asarray(direct[i]))
+
+
+def test_backbone_bucket_reuses_jit_program(backbone):
+    """Padding to fixed buckets means the second same-bucket flush hits the
+    compiled program: exactly ONE jit cache entry per (budget, bucket)."""
+    cfg, batch, make_sampler = backbone
+    sampler = make_sampler()
+    clock = FakeClock()
+    gw = Gateway(sampler, max_batch=4, max_wait_ms=10.0, clock=clock)
+    for rnd in range(2):
+        for i in range(3):                       # 3 rows -> bucket 4, twice
+            gw.submit(Request(tokens=batch["tokens"][i], budget=2,
+                              key=jax.random.PRNGKey(rnd * 10 + i)))
+        clock.advance(1.0)
+        assert gw.pump() == 1
+    assert sampler._per_budget[2]._cache_size() == 1
+
+
+@pytest.mark.integration
+def test_backbone_mixed_budget_end_to_end(backbone):
+    """Mixed flush on the real backbone rides sample_all: outputs are
+    bit-identical to the direct shared-trajectory call, and the batch costs
+    max(budgets) forwards (metadata), not sum."""
+    cfg, batch, make_sampler = backbone
+    sampler = make_sampler()
+    clock = FakeClock()
+    gw = Gateway(sampler, max_batch=2, max_wait_ms=10.0, clock=clock)
+    toks = batch["tokens"][:2]
+    x0 = jax.random.normal(jax.random.PRNGKey(6), (2, 8, cfg.latent_dim))
+    f2 = gw.submit(Request(tokens=toks[0], budget=2, x0=x0[0]))
+    f4 = gw.submit(Request(tokens=toks[1], budget=4, x0=x0[1]))
+    clock.advance(1.0)
+    # a full bucket spanning two budgets is planned as a MIXED batch when
+    # the shared trajectory is cheaper (4 < 2 + 4)
+    assert gw.pump() == 1
+    outs = sampler.sample_all_from({"tokens": toks}, x0)
+    assert f2.result().meta["mixed"] and f4.result().meta["mixed"]
+    assert f2.result().meta["nfe_batch"] == 4
+    np.testing.assert_array_equal(np.asarray(f2.result().latents),
+                                  np.asarray(outs[2][0]))
+    np.testing.assert_array_equal(np.asarray(f4.result().latents),
+                                  np.asarray(outs[4][1]))
+
+
+def test_backbone_sharded_gateway_matches_unsharded(backbone):
+    """mesh= shards params/batches (1x1 host mesh on CPU); results must be
+    identical to the single-device path."""
+    from repro.launch.mesh import make_host_mesh
+
+    cfg, batch, make_sampler = backbone
+    ref_sampler = make_sampler()
+    sampler = make_sampler()   # fresh: sharding re-places its params
+    clock = FakeClock()
+    gw = Gateway(sampler, max_batch=2, max_wait_ms=10.0,
+                 mesh=make_host_mesh(), clock=clock)
+    toks = batch["tokens"][:2]
+    x0 = jax.random.normal(jax.random.PRNGKey(7), (2, 8, cfg.latent_dim))
+    futs = [gw.submit(Request(tokens=toks[i], budget=2, x0=x0[i]))
+            for i in range(2)]
+    assert gw.pump() == 1
+    direct = ref_sampler.sample_from({"tokens": toks}, x0, 2)
+    for i, f in enumerate(futs):
+        np.testing.assert_allclose(np.asarray(f.result().latents),
+                                   np.asarray(direct[i]), atol=1e-6)
+
+
+def test_gateway_from_zoo_boots_without_redistilling():
+    """Gateway boot acquires its artifact through the SolverZoo: a cached
+    artifact is a pure hit (zero loads, zero distills)."""
+    from repro.configs import get_config
+    from repro.core.schedulers import fm_ot
+    from repro.models import model as M
+    from repro.serving import SolverZoo
+
+    cfg = get_config("yi-6b", smoke=True)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    spec = SolverSpec("midpoint", mode="anytime", budgets=BUDGETS)
+    zoo = SolverZoo(capacity=2)
+    zoo.put(SolverArtifact(spec=spec, params=init_anytime(None, BUDGETS),
+                           val_psnr=0.0))
+    gw = Gateway.from_zoo(zoo, spec, params=params, cfg=cfg, sched=fm_ot(),
+                          max_batch=2, clock=FakeClock())
+    assert zoo.stats.hits == 1 and zoo.stats.distills == 0
+    assert gw.sampler.budgets == BUDGETS
+    fut = gw.submit(Request(tokens=jnp.zeros((8,), jnp.int32), budget=2,
+                            key=jax.random.PRNGKey(0)))
+    gw.drain()
+    assert fut.result().meta["served_budget"] == 2
+
+
+def test_gateway_with_kernel_update_fn_matches_reference(backbone):
+    """make_update_fn threads the Pallas ns_update kernel (interpret on CPU)
+    through gateway execution; outputs match the tensordot path."""
+    from repro.kernels.ns_update.ops import make_update_fn
+
+    cfg, batch, make_sampler = backbone
+    ref_sampler = make_sampler()
+    sampler = make_sampler(
+        update_fn=make_update_fn(use_kernel=True, interpret=True))
+    clock = FakeClock()
+    gw = Gateway(sampler, max_batch=2, max_wait_ms=10.0, clock=clock)
+    toks = batch["tokens"][:2]
+    x0 = jax.random.normal(jax.random.PRNGKey(8), (2, 8, cfg.latent_dim))
+    futs = [gw.submit(Request(tokens=toks[i], budget=2, x0=x0[i]))
+            for i in range(2)]
+    assert gw.pump() == 1
+    direct = ref_sampler.sample_from({"tokens": toks}, x0, 2)
+    for i, f in enumerate(futs):
+        np.testing.assert_allclose(np.asarray(f.result().latents),
+                                   np.asarray(direct[i]),
+                                   atol=1e-4, rtol=1e-4)

@@ -74,6 +74,47 @@ def test_flow_mode_strict_nfe_rejects_unserved_budget(anytime_artifact):
     assert "--strict-nfe" in res.stderr + res.stdout
 
 
+def test_flow_mode_gateway_coalesces_requests(anytime_artifact):
+    """--gateway serves the request stream through the batching gateway:
+    same-budget requests coalesce (4 requests -> 2 batches here), and the
+    summary line reports batch/occupancy/NFE metrics."""
+    res = _run("--arch", "yi-6b", "--mode", "flow",
+               "--solver-artifact", anytime_artifact, "--gateway",
+               "--max-batch", "2", "--max-wait-ms", "200",
+               "--request-budgets", "2,4,2,4", "--requests", "4",
+               "--batch", "2", "--seq", "4")
+    assert res.returncode == 0, res.stderr
+    out = res.stdout
+    assert "gateway stats: completed=4 batches=2" in out
+    assert "request 0: served 2 NFE" in out
+    assert "request 1: served 4 NFE" in out
+    assert "batch 2/2" in out                    # full bucket, no padding
+
+
+def test_flow_mode_gateway_records_budget_drift(anytime_artifact):
+    """An unserved budget is routed AND the (requested, served) pair is in
+    the response metadata — printed per request, not only a warning."""
+    res = _run("--arch", "yi-6b", "--mode", "flow",
+               "--solver-artifact", anytime_artifact, "--gateway",
+               "--max-batch", "2", "--max-wait-ms", "50",
+               "--request-budgets", "8", "--requests", "2",
+               "--batch", "2", "--seq", "4")
+    assert res.returncode == 0, res.stderr
+    assert "served 4 NFE (requested 8)" in res.stdout
+
+
+def test_flow_mode_gateway_mesh_host(anytime_artifact):
+    """--mesh host runs gateway batches through the sharded execution path
+    (1x1 mesh on CPU) end-to-end."""
+    res = _run("--arch", "yi-6b", "--mode", "flow",
+               "--solver-artifact", anytime_artifact, "--gateway",
+               "--mesh", "host", "--max-batch", "2", "--max-wait-ms", "50",
+               "--request-budgets", "2", "--requests", "2",
+               "--batch", "2", "--seq", "4")
+    assert res.returncode == 0, res.stderr
+    assert "gateway stats: completed=2" in res.stdout
+
+
 def test_decode_mode_smoke():
     res = _run("--arch", "yi-6b", "--mode", "decode", "--batch", "2",
                "--steps", "3", "--slots", "16")

@@ -176,3 +176,74 @@ def test_stale_disk_file_is_not_served(field, val_pairs, tmp_path, distiller):
 def test_capacity_validation():
     with pytest.raises(ValueError):
         SolverZoo(capacity=0)
+
+
+def test_preload_warm_starts_top_specs(distiller):
+    """Boot-time warm start: preload resolves every spec once; later gets
+    are pure memory hits (zero loads, zero distills)."""
+    zoo = SolverZoo(capacity=4, distill_fn=distiller)
+    specs = [SolverSpec("euler", 2), SolverSpec("euler", 4)]
+    arts = zoo.preload(specs)
+    assert [a.spec for a in arts] == specs
+    assert distiller.calls == 2
+    for spec in specs:
+        zoo.get(spec)
+    assert zoo.stats.hits == 2 and distiller.calls == 2
+
+
+def test_preload_respects_capacity(distiller):
+    """Preloading past capacity would self-evict; only the first k load."""
+    notes = []
+    zoo = SolverZoo(capacity=2, distill_fn=distiller)
+    arts = zoo.preload([SolverSpec("euler", n) for n in (2, 4, 8)],
+                       log=notes.append)
+    assert len(arts) == 2 and len(zoo) == 2
+    assert distiller.calls == 2 and zoo.stats.evictions == 0
+    assert any("first 2 of 3" in n for n in notes)
+
+
+def test_eviction_spills_to_save_dir(field, val_pairs, tmp_path):
+    """ROADMAP open item: an evicted artifact is saved to save_dir instead
+    of being dropped, and a later get LOADS it (no re-distillation) even
+    with no distiller at all."""
+    a = SolverSpec("euler", 2).distill(field, None, val_pairs).artifact()
+    b = SolverSpec("euler", 4).distill(field, None, val_pairs).artifact()
+    zoo = SolverZoo(capacity=1, save_dir=str(tmp_path))
+    zoo.put(a)
+    assert list(tmp_path.glob("*.msgpack")) == []   # in cache: nothing spilled
+    zoo.put(b)                                      # evicts a -> spills it
+    assert zoo.stats.evictions == 1 and zoo.stats.spills == 1
+    assert len(list(tmp_path.glob("*.msgpack"))) == 1
+    art = zoo.get(a.spec)                           # loads the spilled file
+    assert art.spec == a.spec
+    assert zoo.stats.loads == 1 and zoo.stats.distills == 0
+
+
+def test_eviction_does_not_respill_already_saved(field, val_pairs, tmp_path,
+                                                 distiller):
+    """An artifact the zoo already persisted (distill-save or prior spill)
+    is not written twice on eviction."""
+    zoo = SolverZoo(capacity=1, distill_fn=distiller, save_dir=str(tmp_path))
+    zoo.get(SolverSpec("euler", 2))                 # distilled AND saved
+    zoo.get(SolverSpec("euler", 4))                 # evicts the saved one
+    assert zoo.stats.evictions == 1 and zoo.stats.spills == 0
+    assert len(list(tmp_path.glob("*.msgpack"))) == 2
+
+
+def test_refreshed_put_spills_fresh_artifact_not_stale_file(field, val_pairs,
+                                                            tmp_path,
+                                                            distiller):
+    """Regression: put() of an UPDATED artifact for an already-saved spec
+    must not let eviction trust the stale file — the refresh is spilled and
+    the next get serves the new parameters."""
+    import dataclasses
+
+    zoo = SolverZoo(capacity=1, distill_fn=distiller, save_dir=str(tmp_path))
+    spec = SolverSpec("euler", 2)
+    old = zoo.get(spec)                             # distilled AND saved
+    zoo.put(dataclasses.replace(old, val_psnr=42.0))   # refreshed in memory
+    zoo.get(SolverSpec("euler", 4))                 # evicts the refresh
+    assert zoo.stats.spills == 1                    # ... which was spilled
+    art = zoo.get(spec)                             # loads the SPILLED copy
+    assert art.val_psnr == 42.0
+    assert zoo.stats.loads == 1 and distiller.calls == 2
