@@ -1,14 +1,18 @@
 """Kernel benchmark: correctness vs ref.py oracles (interpret mode — TPU is
 the target, this container is CPU) plus wall-time of the pure-jnp reference
 paths and the modeled VMEM/arithmetic-intensity figures used in §Perf.
+
+``--json out.json`` writes the summary + regression metrics the CI
+bench-regression job gates against committed baselines.
 """
 from __future__ import annotations
 
+import argparse
+import json
 import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.kernels.flash_attention.flash_attention import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref
@@ -108,5 +112,34 @@ def run(log=print):
     return rows
 
 
+def metrics(rows):
+    """Regression metrics (benchmarks/regression.py schema). These are
+    absolute wall-clock timings of the reference paths — they vary
+    several-fold across runner hardware, so they are REPORT-ONLY
+    (``gate: false``): tracked on the BENCH_* artifact trajectory without
+    ever failing the job on a hardware difference."""
+    out = {}
+    for name, us, derived in rows:
+        key = name.removeprefix("kernels/") + ".us"
+        out[key] = {"value": round(us, 1), "higher_better": False,
+                    "gate": False}
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=None,
+                    help="write the summary (rows + metrics) to this path")
+    args = ap.parse_args()
+    rows = run()
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"bench": "kernel",
+                       "rows": [{"name": n, "us": us, "derived": d}
+                                for n, us, d in rows],
+                       "metrics": metrics(rows)}, f, indent=2)
+        print(f"summary written to {args.json}")
+
+
 if __name__ == "__main__":
-    run()
+    main()

@@ -1,0 +1,99 @@
+"""Benchmark perf-regression gating: compare a fresh run against committed
+baselines and fail loudly on real regressions.
+
+Schema (one JSON per bench, ``benchmarks/baselines/{name}_bench.json``):
+
+    {"bench": "gateway",
+     "metrics": {"uniform8.speedup": {"value": 6.1,
+                                      "higher_better": true,
+                                      "tolerance": 0.15}}}
+
+Each bench module owns a ``metrics(rows)`` helper producing that mapping,
+so the gate tracks whatever the bench considers its headline numbers.
+``tolerance`` is the per-metric relative slack (default 15% — the ISSUE's
+regression budget). Only metrics that are DETERMINISTIC functions of the
+code (batch plans, simulated ratios, forward counts) should gate: absolute
+wall-clock timings vary several-fold across runner hardware and load, so
+they carry ``"gate": false`` — tracked and reported on every run (the
+BENCH_* artifact trajectory) but never failing the job. A gated metric
+present in the baseline but missing from the fresh run FAILs (a silently
+dropped benchmark is a regression too); new fresh metrics not in the
+baseline are reported but never fail — they start their trajectory on the
+next baseline refresh.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+DEFAULT_TOLERANCE = 0.15
+
+
+def compare(fresh: dict, baseline: dict,
+            default_tolerance: float = DEFAULT_TOLERANCE) -> list[str]:
+    """PASS/FAIL notes for every baseline metric vs the fresh run."""
+    bench = baseline.get("bench", "?")
+    notes = []
+    fresh_metrics = fresh.get("metrics", {})
+    for name in sorted(baseline.get("metrics", {})):
+        spec = baseline["metrics"][name]
+        gated = bool(spec.get("gate", True))
+        got = fresh_metrics.get(name)
+        if got is None:
+            tag = "FAIL" if gated else "INFO"
+            notes.append(f"[{tag}] {bench}/{name}: metric missing from the "
+                         f"fresh run (baseline {spec['value']:.4g})")
+            continue
+        base_v, new_v = float(spec["value"]), float(got["value"])
+        tol = float(spec.get("tolerance", default_tolerance))
+        higher = bool(spec.get("higher_better", True))
+        if base_v == 0.0:
+            ok, rel = True, 0.0
+        elif higher:
+            rel = (base_v - new_v) / abs(base_v)
+            ok = new_v >= base_v * (1.0 - tol)
+        else:
+            rel = (new_v - base_v) / abs(base_v)
+            ok = new_v <= base_v * (1.0 + tol)
+        arrow = "worse" if rel > 0 else "better"
+        tag = ("PASS" if ok else "FAIL") if gated else "INFO"
+        notes.append(f"[{tag}] {bench}/{name}: "
+                     f"{new_v:.4g} vs baseline {base_v:.4g} "
+                     f"({abs(rel) * 100:.1f}% {arrow}"
+                     + (f", tol {tol * 100:.0f}%)" if gated
+                        else ", report-only)"))
+    for name in sorted(set(fresh_metrics) - set(baseline.get("metrics", {}))):
+        notes.append(f"[NEW ] {bench}/{name}: {fresh_metrics[name]['value']:.4g} "
+                     f"(not in baseline yet)")
+    return notes
+
+
+def check_against(summaries: dict[str, dict], baseline_dir: str,
+                  log=print) -> bool:
+    """Gate every fresh summary against ``{baseline_dir}/{name}_bench.json``.
+    Returns True when nothing regressed. A bench with no committed baseline
+    is reported and skipped (its fresh JSON seeds the baseline)."""
+    ok = True
+    for name, fresh in sorted(summaries.items()):
+        path = os.path.join(baseline_dir, f"{name}_bench.json")
+        if not os.path.exists(path):
+            log(f"[SKIP] {name}: no baseline at {path} "
+                f"(commit the fresh JSON to start the trajectory)")
+            continue
+        with open(path) as f:
+            baseline = json.load(f)
+        for note in compare(fresh, baseline):
+            log(note)
+            if note.startswith("[FAIL]"):
+                ok = False
+    return ok
+
+
+def write_summaries(summaries: dict[str, dict], out_dir: str,
+                    log=print) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    for name, summary in sorted(summaries.items()):
+        path = os.path.join(out_dir, f"{name}_bench.json")
+        with open(path, "w") as f:
+            json.dump(summary, f, indent=2, sort_keys=True)
+        log(f"bench summary written to {path}")

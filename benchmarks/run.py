@@ -7,43 +7,83 @@
   taxonomy_bench       — Figure 3 / Theorem 3.2 (exact NS conversions)
   kernel_bench         — Pallas kernels vs ref oracles
   gateway_bench        — serving gateway: batched vs unbatched throughput
+  continuous_bench     — continuous batching vs flush-only (p95 wait, NFE)
   roofline             — §Roofline terms from the dry-run artifacts
 
 Prints ``name,us_per_call,derived`` CSV lines; paper-claim PASS/FAIL notes go
 to log lines prefixed with '#'.
+
+Regression gating (CI bench-regression job):
+
+  python benchmarks/run.py --quick --only gateway,kernel,continuous \\
+      --json-dir bench-fresh --check-against benchmarks/baselines
+
+runs just the gated benches, writes their fresh summary JSONs, and exits
+non-zero when any baseline metric regressed beyond its tolerance (see
+``benchmarks/regression.py``). The fresh JSONs are uploaded as a CI
+artifact — commit them to ``benchmarks/baselines/`` to advance the
+baseline trajectory.
 """
 from __future__ import annotations
 
+import argparse
+import os
 import sys
 import time
+
+# `python benchmarks/run.py` puts benchmarks/ itself on sys.path, not the
+# repo root — the `from benchmarks import ...` section imports need the
+# root (and the src tree saves callers exporting PYTHONPATH by hand)
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for _p in (_ROOT, os.path.join(_ROOT, "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
 
 
 def log(msg: str) -> None:
     print(f"# {msg}", flush=True)
 
 
-def main() -> None:
-    quick = "--quick" in sys.argv
-    csv: list[tuple[str, float, str]] = []
+def _timed(name):
+    def wrap(fn):
+        def inner(quick, csv, summaries):
+            t0 = time.time()
+            fn(quick, csv, summaries)
+            log(f"{name} done in {time.time()-t0:.0f}s")
+        return inner
+    return wrap
 
+
+@_timed("taxonomy_bench")
+def _taxonomy(quick, csv, summaries):
     from benchmarks import taxonomy_bench
-    t0 = time.time()
     for r in taxonomy_bench.run(log=log):
         csv.append((f"taxonomy/{r['solver']}", r["alg1_us_per_call"],
                     f"max_err={r['max_err']:.1e}"))
-    log(f"taxonomy_bench done in {time.time()-t0:.0f}s")
 
+
+@_timed("bns_vs_distillation")
+def _table3(quick, csv, summaries):
     from benchmarks import bns_vs_distillation
     for r in bns_vs_distillation.run(log=log):
         csv.append((f"table3/{r['dataset']}/{r['method']}/nfe{r['nfe']}",
                     0.0, f"forwards={r['forwards']};match={r['match']}"))
 
-    from benchmarks import kernel_bench
-    for name, us, derived in kernel_bench.run(log=log):
-        csv.append((name, us, derived))
 
+@_timed("kernel_bench")
+def _kernel(quick, csv, summaries):
+    from benchmarks import kernel_bench
+    rows = kernel_bench.run(log=log)
+    csv.extend(rows)
+    summaries["kernel"] = {"bench": "kernel",
+                           "rows": [{"name": n, "us": us, "derived": d}
+                                    for n, us, d in rows],
+                           "metrics": kernel_bench.metrics(rows)}
+
+
+@_timed("psnr_vs_nfe")
+def _fig4(quick, csv, summaries):
     from benchmarks import psnr_vs_nfe
-    t0 = time.time()
     rows = psnr_vs_nfe.run(iterations=300 if quick else 3000, log=log)
     for note in psnr_vs_nfe.check_paper_claims(rows):
         log(note)
@@ -52,10 +92,11 @@ def main() -> None:
                     r["bns_train_s"] * 1e6,
                     f"bns={r['bns']:.2f};bst={r['bst']:.2f};"
                     f"midpoint={r['midpoint']:.2f};dpm2m={r['dpm2m']:.2f}"))
-    log(f"psnr_vs_nfe done in {time.time()-t0:.0f}s")
 
+
+@_timed("t2i_proxy")
+def _t2i(quick, csv, summaries):
     from benchmarks import t2i_proxy
-    t0 = time.time()
     rows = t2i_proxy.run(train_steps=100 if quick else 250,
                          bns_iters=150 if quick else 400, log=log)
     for note in t2i_proxy.check_paper_claims(rows):
@@ -64,10 +105,11 @@ def main() -> None:
         csv.append((f"table2/w{r['w']}/nfe{r['nfe']}", 0.0,
                     f"bns={r['bns']:.2f};init={r['initial_solver']:.2f};"
                     f"euler={r['euler']:.2f}"))
-    log(f"t2i_proxy done in {time.time()-t0:.0f}s")
 
+
+@_timed("audio_proxy")
+def _audio(quick, csv, summaries):
     from benchmarks import audio_proxy
-    t0 = time.time()
     rows = audio_proxy.run(train_steps=80 if quick else 200,
                            bns_iters=120 if quick else 300, log=log)
     for note in audio_proxy.check_paper_claims(rows):
@@ -75,10 +117,11 @@ def main() -> None:
     for r in rows:
         csv.append((f"fig6/audio/nfe{r['nfe']}", 0.0,
                     f"bns={r['bns']:.2f};midpoint={r['midpoint']:.2f}"))
-    log(f"audio_proxy done in {time.time()-t0:.0f}s")
 
+
+@_timed("anytime_bench")
+def _anytime(quick, csv, summaries):
     from benchmarks import anytime_bench
-    t0 = time.time()
     rows, nparams = anytime_bench.run(
         iterations=1500 if quick else 10_000,
         dedicated_iters=500 if quick else 3000, log=log)
@@ -91,20 +134,43 @@ def main() -> None:
     for r in anytime_bench.serve_bench(iterations=200 if quick else 600,
                                        log=log):
         csv.append((f"anytime_serving/{r['name']}", r["us"], r["derived"]))
-    log(f"anytime_bench done in {time.time()-t0:.0f}s")
 
+
+@_timed("gateway_bench")
+def _gateway(quick, csv, summaries):
     from benchmarks import gateway_bench
-    t0 = time.time()
-    g_rows = gateway_bench.run(requests=32 if quick else 64, log=log)
-    for note in gateway_bench.check_claims(g_rows):
+    rows = gateway_bench.run(requests=32 if quick else 64, log=log)
+    notes = gateway_bench.check_claims(rows)
+    for note in notes:
         log(note)
-    for r in g_rows:
+    for r in rows:
         csv.append((f"gateway/{r['mix']}", r["gateway_ms_per_req"] * 1e3,
                     f"speedup={r['speedup']:.2f};"
                     f"occupancy={r['occupancy']:.2f};"
                     f"nfe_per_request={r['nfe_per_request']:.2f}"))
-    log(f"gateway_bench done in {time.time()-t0:.0f}s")
+    summaries["gateway"] = {"bench": "gateway", "rows": rows,
+                            "claims": notes,
+                            "metrics": gateway_bench.metrics(rows)}
 
+
+@_timed("continuous_bench")
+def _continuous(quick, csv, summaries):
+    from benchmarks import continuous_bench
+    rows = continuous_bench.run(requests=48 if quick else 96, log=log)
+    notes = continuous_bench.check_claims(rows)
+    for note in notes:
+        log(note)
+    for r in rows:
+        csv.append((f"continuous/{r['mix']}", r["cont_p95_wait_ms"] * 1e3,
+                    f"p95_ratio={r['p95_ratio']:.2f};"
+                    f"forwards_ratio={r['forwards_ratio']:.3f};"
+                    f"join_rate={r['join_rate']:.2f}"))
+    summaries["continuous"] = {"bench": "continuous", "rows": rows,
+                               "claims": notes,
+                               "metrics": continuous_bench.metrics(rows)}
+
+
+def _roofline(quick, csv, summaries):
     try:
         import os
 
@@ -128,9 +194,57 @@ def main() -> None:
     except Exception as e:  # dry-run artifacts may not exist yet
         log(f"roofline skipped: {e}")
 
+
+SECTIONS = {
+    "taxonomy": _taxonomy,
+    "table3": _table3,
+    "kernel": _kernel,
+    "fig4": _fig4,
+    "t2i": _t2i,
+    "audio": _audio,
+    "anytime": _anytime,
+    "gateway": _gateway,
+    "continuous": _continuous,
+    "roofline": _roofline,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated section names "
+                         f"({','.join(SECTIONS)}); default: all")
+    ap.add_argument("--json-dir", default=None,
+                    help="write each gated bench's summary JSON here")
+    ap.add_argument("--check-against", default=None,
+                    help="baselines directory; exit non-zero on any metric "
+                         "regressing beyond its tolerance")
+    args = ap.parse_args()
+    names = list(SECTIONS)
+    if args.only:
+        names = [n.strip() for n in args.only.split(",") if n.strip()]
+        unknown = [n for n in names if n not in SECTIONS]
+        if unknown:
+            raise SystemExit(f"unknown sections {unknown}; "
+                             f"choose from {list(SECTIONS)}")
+    csv: list[tuple[str, float, str]] = []
+    summaries: dict[str, dict] = {}
+    for name in names:
+        SECTIONS[name](args.quick, csv, summaries)
+
     print("name,us_per_call,derived")
     for name, us, derived in csv:
         print(f"{name},{us:.1f},{derived}")
+
+    if args.json_dir or args.check_against:
+        from benchmarks import regression
+        if args.json_dir:
+            regression.write_summaries(summaries, args.json_dir, log=log)
+        if args.check_against:
+            if not regression.check_against(summaries, args.check_against,
+                                            log=log):
+                raise SystemExit(1)
 
 
 if __name__ == "__main__":

@@ -110,6 +110,86 @@ def init_anytime(field: VelocityField, budgets: Sequence[int],
                          exit_b=jnp.asarray(exit_b))
 
 
+class AnytimeCarry(NamedTuple):
+    """Resumable state of the shared trajectory after ``step`` evaluations.
+
+    The trajectory state after k evals is a pure function of ``x0`` and the
+    recorded velocities ``U[:k]`` (every NS update rule is a weighted sum
+    over them, Prop. 3.1), so this tuple is everything a later leg needs.
+
+    x0:   the noise each row integrates from (batched leading dims).
+    U:    (n, *x0.shape) recorded velocities; rows >= ``step`` are zeros.
+    x:    trajectory state after ``step`` update rules.
+    step: number of velocity evaluations done so far (a static Python int —
+          jit carry-stepping functions per (start, stop) pair, not on it).
+    """
+
+    x0: Array
+    U: Array
+    x: Array
+    step: int
+
+
+def anytime_carry(params: AnytimeParams, budgets: Sequence[int],
+                  x0: Array) -> AnytimeCarry:
+    """A fresh carry at step 0 (no backbone forwards spent)."""
+    n = sorted(budgets)[-1]
+    return AnytimeCarry(x0=x0, U=jnp.zeros((n,) + x0.shape, x0.dtype),
+                        x=x0, step=0)
+
+
+def anytime_extend(params: AnytimeParams, budgets: Sequence[int],
+                   u_fn: Callable, carry: AnytimeCarry, stop: int, *,
+                   update_fn: Callable | None = None
+                   ) -> tuple[AnytimeCarry, dict[int, Array]]:
+    """Advance the shared trajectory from ``carry.step`` to ``stop`` evals,
+    emitting the early-exit output of every budget crossed on the way.
+
+    Exit-boundary join invariant (continuous batching rests on this): for
+    any boundary k and served budget m in ``budgets`` with k < m, computing
+    a request's prefix ``anytime_extend(fresh carry, stop=k)`` from its OWN
+    noise, then extending the carry to m on the shared grid and reading the
+    budget-m exit, performs bit-identically the same weighted-sum arithmetic
+    as running the extracted m-step solver (``extract_ns(m)`` through
+    Algorithm 1) in one go: rows 0..m-2 of the extracted solver ARE the
+    shared intermediate rules, the carry after k evals is a pure function of
+    (x0, U[:k]), and the zero rows of the fixed-width ``U`` buffer contribute
+    exactly +0.0 to every masked weighted sum. A request admitted into an
+    in-flight trajectory at boundary k therefore costs k prefix forwards
+    plus the shared legs k..m — at most m forwards total, and its sample is
+    the one the direct sampler would have produced.
+
+    Costs exactly ``stop - carry.step`` velocity evaluations. ``update_fn``
+    mirrors ``ns_sample(update_fn=...)`` (e.g. the Pallas ``ns_update``
+    kernel); it receives the full fixed-width ``U`` with zero-masked weights.
+    """
+    budgets = sorted(budgets)
+    n = budgets[-1]
+    if not 0 <= carry.step < stop <= n:
+        raise ValueError(f"cannot extend from step {carry.step} to {stop} "
+                         f"(top budget {n})")
+    if update_fn is None:
+        def update_fn(x_init, U, a_i, w_i):
+            return a_i * x_init + jnp.tensordot(w_i, U, axes=(0, 0))
+    times = jax.nn.sigmoid(params.time_raw)
+    arange = jnp.arange(n)
+    x0, U, x = carry.x0, carry.U, carry.x
+    outs: dict[int, Array] = {}
+    for i in range(carry.step, stop):
+        u = u_fn(times[i], x)
+        U = jax.lax.dynamic_update_index_in_dim(U, u, i, axis=0)
+        x = update_fn(x0, U, params.a[i],
+                      jnp.where(arange <= i, params.b[i], 0.0))
+        for bi, m in enumerate(budgets[:-1]):
+            if i + 1 == m:
+                outs[m] = update_fn(x0, U, params.exit_a[bi],
+                                    jnp.where(arange < m, params.exit_b[bi],
+                                              0.0))
+    if stop == n:
+        outs[n] = x
+    return AnytimeCarry(x0=x0, U=U, x=x, step=stop), outs
+
+
 def anytime_sample(params: AnytimeParams, budgets: Sequence[int],
                    u_fn: Callable, x0: Array, *,
                    update_fn: Callable | None = None) -> dict[int, Array]:
@@ -121,26 +201,14 @@ def anytime_sample(params: AnytimeParams, budgets: Sequence[int],
     extracted m-step solver (``extract_ns``) through ``ns_solver.ns_sample``.
     ``update_fn(x0, U, a_i, w_i) -> x`` overrides that weighted sum (e.g. the
     Pallas ``ns_update`` kernel), mirroring ``ns_sample(update_fn=...)``.
+
+    One full-length ``anytime_extend`` leg — the resumable form the
+    continuous-batching engine advances boundary-by-boundary.
     """
     budgets = sorted(budgets)
-    n = budgets[-1]
-    if update_fn is None:
-        def update_fn(x_init, U, a_i, w_i):
-            return a_i * x_init + jnp.tensordot(w_i, U, axes=(0, 0))
-    times = jax.nn.sigmoid(params.time_raw)
-    traj_u: list[Array] = []
-    x = x0
-    outs: dict[int, Array] = {}
-    for i in range(n):
-        u = u_fn(times[i], x)
-        traj_u.append(u)
-        U = jnp.stack(traj_u)                       # (i+1, ...)
-        x = update_fn(x0, U, params.a[i], params.b[i, :i + 1])
-        for bi, m in enumerate(budgets[:-1]):
-            if i + 1 == m:
-                outs[m] = update_fn(x0, U, params.exit_a[bi],
-                                    params.exit_b[bi, :m])
-    outs[n] = x
+    _, outs = anytime_extend(params, budgets, u_fn,
+                             anytime_carry(params, budgets, x0),
+                             budgets[-1], update_fn=update_fn)
     return outs
 
 

@@ -15,7 +15,7 @@ Two dtype-level representations:
 """
 from __future__ import annotations
 
-from typing import Any, Callable, NamedTuple
+from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -138,7 +138,6 @@ def materialize(p: BNSParams) -> NSParams:
 def from_ns(params: NSParams) -> BNSParams:
     """Inverse of ``materialize`` (up to softmax shift): init BNS from any NS solver."""
     t = params.times
-    n = params.n
     gaps = jnp.diff(jnp.concatenate([t, jnp.ones((1,), t.dtype)]))
     logits = jnp.log(jnp.maximum(gaps, 1e-8))
     return BNSParams(time_logits=logits, a=params.a, b=params.b)

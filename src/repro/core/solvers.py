@@ -10,7 +10,6 @@ Naming: an "n-eval" solver makes exactly n model calls (n = NFE).
 from __future__ import annotations
 
 import numpy as np
-import jax.numpy as jnp
 
 
 def uniform_grid(num_intervals: int, t0: float = 0.0, t1: float = 1.0) -> np.ndarray:

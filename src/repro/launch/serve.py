@@ -188,13 +188,22 @@ def serve_flow(args) -> None:
 
 def _serve_gateway(args, sampler, cond, request_budgets) -> None:
     """Multi-user serving: every request is one coalesced-batch submit."""
+    from repro.serving.continuous import ContinuousGateway
     from repro.serving.gateway import Gateway, Request
     from repro.serving.sharded import serving_mesh
 
-    gw = Gateway(sampler, max_batch=args.max_batch,
-                 max_wait_ms=args.max_wait_ms,
-                 mixed_budget_policy=args.mixed_budget_policy,
-                 strict_nfe=args.strict_nfe, mesh=serving_mesh(args.mesh))
+    if args.continuous:
+        gw = ContinuousGateway(sampler, max_slots=args.max_slots,
+                               max_batch=args.max_batch,
+                               max_wait_ms=args.max_wait_ms,
+                               mixed_budget_policy=args.mixed_budget_policy,
+                               strict_nfe=args.strict_nfe,
+                               mesh=serving_mesh(args.mesh))
+    else:
+        gw = Gateway(sampler, max_batch=args.max_batch,
+                     max_wait_ms=args.max_wait_ms,
+                     mixed_budget_policy=args.mixed_budget_policy,
+                     strict_nfe=args.strict_nfe, mesh=serving_mesh(args.mesh))
     gw.start()
     t0 = time.time()
     futures = []
@@ -223,6 +232,11 @@ def _serve_gateway(args, sampler, cond, request_budgets) -> None:
           f"occupancy={s['occupancy']:.2f} "
           f"mean_wait={s['mean_wait_ms']:.1f}ms "
           f"throughput={s['completed'] / max(wall, 1e-9):.1f} rps")
+    if args.continuous:
+        print(f"continuous stats: trajectories={s['trajectories']} "
+              f"legs={s['legs']} joins={s['joins']} "
+              f"join_rate={s['join_rate']:.2f} "
+              f"slot_occupancy={s['slot_occupancy']:.2f}")
 
 
 def serve_decode(args) -> None:
@@ -284,6 +298,14 @@ def main() -> None:
                     help="gateway: coalesce at most this many requests")
     ap.add_argument("--max-wait-ms", type=float, default=10.0,
                     help="gateway: flush partial batches after this wait")
+    ap.add_argument("--continuous", action="store_true",
+                    help="gateway: continuous batching — admit requests "
+                         "into in-flight anytime trajectories at exit "
+                         "boundaries instead of waiting for the next flush "
+                         "(needs an anytime --budgets artifact)")
+    ap.add_argument("--max-slots", type=int, default=8,
+                    help="continuous gateway: trajectory slot count (batch "
+                         "width of the shared anytime trajectory)")
     ap.add_argument("--mixed-budget-policy", default="auto",
                     choices=["never", "auto", "always"],
                     help="gateway: route multi-budget flushes through the "

@@ -225,7 +225,6 @@ def cross_attention_forward(
 ) -> Array:
     """Encoder-decoder cross attention (no mask, no RoPE) — whisper decoder."""
     B, L, _ = x.shape
-    M = memory.shape[1]
     q = _split_heads(x @ p["wq"], n_heads, head_dim)
     k = _split_heads(memory @ p["wk"], n_heads, head_dim)
     v = _split_heads(memory @ p["wv"], n_heads, head_dim)

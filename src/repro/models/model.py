@@ -28,7 +28,6 @@ from repro.configs.base import ModelConfig
 from repro.core.parametrization import VelocityField
 from repro.core.schedulers import Scheduler
 from repro.models import mamba2, moe, rwkv6, transformer, vlm, whisper
-from repro.models.layers import timestep_embedding
 from repro.models.transformer import latent_targets
 
 Array = jax.Array

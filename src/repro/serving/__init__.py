@@ -8,8 +8,12 @@
               async request queue, budget-coalescing padded batches, mixed-
               budget shared-trajectory dispatch, serving metrics;
 ``sharded`` — mesh placement for gateway batches (params via
-              ``distributed.sharding``, batches split along the data axes).
+              ``distributed.sharding``, batches split along the data axes);
+``continuous`` — ``ContinuousGateway``/``ContinuousScheduler``, continuous
+              batching: requests join in-flight anytime trajectories at
+              exit boundaries instead of waiting for the next flush.
 """
+from repro.serving.continuous import ContinuousGateway, ContinuousScheduler
 from repro.serving.engine import (
     AnytimeFlowSampler,
     DecodeEngine,
@@ -27,7 +31,8 @@ from repro.serving.gateway import (
 )
 from repro.serving.zoo import SolverZoo, ZooStats
 
-__all__ = ["AnytimeFlowSampler", "BatchScheduler", "DecodeEngine",
-           "FlowSampler", "Gateway", "GatewayStats", "Request",
-           "RequestQueue", "Response", "SolverZoo", "ZooStats",
-           "nearest_budget", "nearest_latent_tokens"]
+__all__ = ["AnytimeFlowSampler", "BatchScheduler", "ContinuousGateway",
+           "ContinuousScheduler", "DecodeEngine", "FlowSampler", "Gateway",
+           "GatewayStats", "Request", "RequestQueue", "Response",
+           "SolverZoo", "ZooStats", "nearest_budget",
+           "nearest_latent_tokens"]

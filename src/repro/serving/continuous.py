@@ -1,0 +1,386 @@
+"""Continuous batching: admit requests into in-flight anytime trajectories.
+
+The flush-only gateway (``repro.serving.gateway``) exploits the anytime
+solver's shared trajectory only at flush time: a request arriving one tick
+after a flush waits a full ``max_wait_ms`` even though an in-flight
+trajectory is passing an exit boundary it could join. This module turns the
+solver's nested-grid structure into request-level continuous batching:
+
+* An in-flight anytime dispatch is tracked as a SEQUENCE OF EXIT-BOUNDARY
+  JOIN POINTS — the trajectory advances leg by leg between consecutive
+  served budgets, returning control to the host at every boundary.
+* At each boundary k the engine RELEASES the slots whose served budget is k
+  (their early-exit output resolves the future immediately) and ADMITS
+  queued requests with budget > k into the freed slots: a joiner's prefix
+  ``0..k`` is computed from its OWN noise via the shared intermediate
+  coefficients (the first k rows of the extracted ``ns_at_budget`` solver),
+  then steps ``k..b`` ride the shared grid with the rest of the batch.
+* Every served sample stays bit-identical to the direct sampler with the
+  same noise — see the exit-boundary join invariant on
+  ``core.anytime.anytime_extend`` — and a joined request at budget b adds at
+  most b incremental backbone forwards (k for the prefix dispatch; the
+  shared legs are already being paid for).
+
+``ContinuousScheduler`` extends ``BatchScheduler`` with slot admission and
+release planning (pure functions of pending + now — fake-clock testable);
+``ContinuousGateway.pump`` interleaves trajectory legs, joins, and the
+inherited flush planning, so requests that cannot join (budget at or below
+the next boundary, or no free slot) still flush under the usual
+max-batch/max-wait rules. ``stats()`` additionally reports join-rate and
+slot-occupancy.
+
+Samplers must speak the carry protocol on top of the budget protocol:
+``carry_start(batch, x0)`` and ``carry_extend(batch, carry, stop)``
+(``AnytimeFlowSampler`` jit-caches one program per (start, stop) leg).
+With ``mesh=`` the carry arrays are re-placed on the serving mesh after
+every join scatter (``sharded.carry_placer``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serving.gateway import (
+    BatchScheduler,
+    Gateway,
+    Response,
+    _Entry,
+    assemble_rows,
+)
+
+
+class ContinuousScheduler(BatchScheduler):
+    """Slot admission/release planning on top of flush planning.
+
+    ``plan_start`` decides when pending requests open a new trajectory;
+    ``plan_joins`` decides which requests are admitted into an in-flight one
+    at an exit boundary. Both are pure functions of (pending, now, slot
+    state) — the unit tests drive them with a fake clock and assert the
+    exact slate. The inherited ``plan`` keeps serving whatever cannot ride
+    a trajectory.
+    """
+
+    def __init__(self, max_slots: int = 8, boundaries: Sequence[int] = (),
+                 max_batch: Optional[int] = None, max_wait_ms: float = 10.0,
+                 policy: str = "auto", can_mix: bool = False,
+                 top_budget: Optional[int] = None,
+                 max_leg: Optional[int] = None,
+                 join_cost_cap: float = 0.5):
+        super().__init__(max_batch=max_batch or max_slots,
+                         max_wait_ms=max_wait_ms, policy=policy,
+                         can_mix=can_mix, top_budget=top_budget)
+        if max_slots < 1:
+            raise ValueError("max_slots must be >= 1")
+        if max_leg is not None and max_leg < 1:
+            raise ValueError("max_leg must be >= 1")
+        if not 0.0 < join_cost_cap <= 1.0:
+            raise ValueError("join_cost_cap must be in (0, 1]")
+        self.max_slots = max_slots
+        self.boundaries = tuple(sorted(boundaries))
+        self.max_leg = max_leg
+        self.join_cost_cap = join_cost_cap
+        self._join_buckets = self._bucket_sizes(max_slots)
+
+    def join_bucket(self, count: int) -> int:
+        """Smallest padded size for a join-prefix dispatch — powers of two
+        up to ``max_slots``, so each (boundary, bucket) prefix program is
+        compiled exactly once (mirrors ``bucket`` for flush batches)."""
+        for b in self._join_buckets:
+            if b >= count:
+                return b
+        raise ValueError(f"count {count} exceeds max_slots {self.max_slots}")
+
+    def next_boundary(self, step: int) -> Optional[int]:
+        """The next stop strictly beyond ``step`` (None past the top): the
+        first exit boundary, clipped to ``max_leg`` steps when set — a
+        shorter leg is not a join point, but it hands control back to the
+        host so interleaved flushes are not blocked behind a long leg."""
+        for b in self.boundaries:
+            if b > step:
+                return min(b, step + self.max_leg) if self.max_leg else b
+        return None
+
+    def plan_start(self, pending: Sequence[_Entry], now: float,
+                   force: bool = False) -> list[_Entry]:
+        """The FIFO slate opening a new trajectory: entries sharing the
+        oldest entry's sample shape, up to ``max_slots``, once the slots
+        would fill or the oldest same-shape entry has aged out (the same
+        full-or-aged rule ``BatchScheduler.plan`` applies to flushes)."""
+        pending = sorted(pending, key=lambda e: e.uid)
+        if not pending:
+            return []
+        shape = pending[0].shape_key
+        same = [e for e in pending if e.shape_key == shape]
+        aged = any(now - e.t_submit >= self.max_wait_s for e in same)
+        if not (force or aged or len(same) >= self.max_slots):
+            return []
+        return same[:self.max_slots]
+
+    def plan_joins(self, pending: Sequence[_Entry], boundary: int,
+                   free_slots: int, shape_key: tuple) -> list[_Entry]:
+        """Entries admitted into the in-flight trajectory at ``boundary``:
+        FIFO entries of the trajectory's shape whose served budget lies
+        STRICTLY beyond the boundary (their exit is still ahead on the
+        shared grid) and whose prefix is worth paying — the join costs
+        ``boundary`` prefix forwards, so admission requires
+        ``boundary <= join_cost_cap * served`` (default: the prefix may be
+        at most half the budget; very late joins burn forwards a future
+        flush would amortize better). Capped by the freed slots; not
+        age-gated — immediate admission is the latency win."""
+        if free_slots <= 0:
+            return []
+        ok = [e for e in sorted(pending, key=lambda e: e.uid)
+              if e.shape_key == shape_key and e.served > boundary
+              and boundary <= self.join_cost_cap * e.served]
+        return ok[:free_slots]
+
+
+@dataclasses.dataclass
+class _Trajectory:
+    """One in-flight shared trajectory: the device carry plus per-slot host
+    bookkeeping. ``entries[i] is None`` marks a free (padded) slot — its
+    rows keep stale data, which is harmless because rows are independent
+    through the backbone (the padded-batch contract)."""
+
+    carry: object                     # sampler-level AnytimeCarry
+    entries: list                     # Optional[_Entry] per slot
+    shape_key: tuple
+    tokens: Optional[np.ndarray]      # (slots, S) conditioning, or None
+
+    def cond(self) -> Optional[dict]:
+        if self.tokens is None:
+            return None
+        return {"tokens": jnp.asarray(self.tokens)}
+
+    def active(self) -> list[tuple[int, _Entry]]:
+        return [(i, e) for i, e in enumerate(self.entries) if e is not None]
+
+    def free_slots(self) -> list[int]:
+        return [i for i, e in enumerate(self.entries) if e is None]
+
+
+class ContinuousGateway(Gateway):
+    """Gateway with continuous batching over one anytime sampler.
+
+    Same intake/lifecycle as ``Gateway``; ``pump`` becomes one engine tick:
+
+    * no trajectory in flight — open one from the pending queue
+      (``plan_start``), or
+    * advance the trajectory one leg to the next exit boundary, release the
+      slots exiting there, admit joiners into the freed slots
+      (``plan_joins`` + prefix dispatch), and then
+    * run the inherited flush planner over whatever remains pending, so
+      non-joinable requests (budget at or below the next boundary, no free
+      slot, other sample shape) never wait on the trajectory.
+
+    ``drain`` additionally runs the in-flight trajectory to completion.
+    """
+
+    def __init__(self, sampler, *, max_slots: int = 8,
+                 max_batch: Optional[int] = None, max_wait_ms: float = 10.0,
+                 mixed_budget_policy: str = "auto", strict_nfe: bool = False,
+                 mesh=None, clock=None, key=None,
+                 max_leg: Optional[int] = None, join_cost_cap: float = 0.5):
+        for method in ("carry_start", "carry_extend"):
+            if not hasattr(sampler, method):
+                raise TypeError(
+                    "continuous batching needs a resumable anytime sampler "
+                    f"(missing {method!r}); use AnytimeFlowSampler or serve "
+                    "through the flush-only Gateway")
+        kw = {} if clock is None else {"clock": clock}
+        super().__init__(sampler, max_batch=max_batch or max_slots,
+                         max_wait_ms=max_wait_ms,
+                         mixed_budget_policy=mixed_budget_policy,
+                         strict_nfe=strict_nfe, mesh=mesh, key=key, **kw)
+        self.scheduler = ContinuousScheduler(
+            max_slots=max_slots, boundaries=sampler.budgets,
+            max_batch=max_batch or max_slots, max_wait_ms=max_wait_ms,
+            policy=mixed_budget_policy,
+            can_mix=self.scheduler.can_mix,
+            top_budget=max(sampler.budgets),
+            max_leg=max_leg, join_cost_cap=join_cost_cap)
+        self._traj: Optional[_Trajectory] = None
+        self._place_carry = None
+        if mesh is not None:
+            from repro.serving import sharded
+
+            self._place_carry = sharded.carry_placer(mesh)
+
+    # -- engine tick ---------------------------------------------------------
+
+    def pump(self, force: bool = False) -> int:
+        """One engine tick; returns how many dispatches ran (trajectory
+        opens and legs count as one each, like flush batches)."""
+        ran = 0
+        with self._plan_lock:
+            if self._traj is not None:
+                try:
+                    self._advance_leg()
+                except BaseException as exc:  # noqa: BLE001 — see below
+                    # a failing leg must not strand the slots' futures or
+                    # kill the serve thread (the trajectory twin of the
+                    # flush-path guard in Gateway._run_batches)
+                    self._fail_trajectory(exc)
+                ran += 1
+            if self._traj is None:
+                # idle engine, or the trajectory just retired: a new slate
+                # gets first claim on the pending queue — a trajectory costs
+                # what a mixed flush costs but its slots refill at every
+                # later boundary, so it must outrank the flush planner
+                starters = self.scheduler.plan_start(
+                    self.queue.snapshot(), self.clock(), force=force)
+                if starters:
+                    self.queue.remove({e.uid for e in starters})
+                    try:
+                        self._start_trajectory(starters, self.clock())
+                    except BaseException as exc:  # noqa: BLE001
+                        self._fail_entries(starters, exc, count_all=True)
+                        self._traj = None
+                    ran += 1
+            # interleave flushes: whatever neither joined nor started still
+            # obeys the flush-only rules (full buckets now, partials aged)
+            batches = self.scheduler.plan(
+                self.queue.snapshot(), self.clock(), force=force)
+            self.queue.remove({e.uid for b in batches for e in b.entries})
+        return ran + self._run_batches(batches)
+
+    def _start_trajectory(self, starters: list, now: float) -> None:
+        """Open a trajectory over ``starters`` (costs no forwards — the
+        first leg runs on the next tick; waits end here, at admission)."""
+        slots = self.scheduler.max_slots
+        pad = slots - len(starters)
+        x0_np, tokens = assemble_rows(starters, slots)
+        for e in starters:
+            e.t_admit, e.join_step = now, 0
+        traj = _Trajectory(carry=None, entries=list(starters) + [None] * pad,
+                           shape_key=starters[0].shape_key, tokens=tokens)
+        carry = self.sampler.carry_start(traj.cond(), jnp.asarray(x0_np))
+        if self._place_carry is not None:
+            carry = self._place_carry(carry)
+        traj.carry = carry
+        self._traj = traj
+        with self._stats_lock:
+            self.stats_raw.trajectories += 1
+
+    def _advance_leg(self) -> None:
+        """Advance to the next exit boundary, release exiting slots, admit
+        joiners into the freed slots."""
+        traj = self._traj
+        step = traj.carry.step
+        boundary = self.scheduler.next_boundary(step)
+        assert boundary is not None, "trajectory ran past the top budget"
+        active = traj.active()
+        carry, exits = self.sampler.carry_extend(traj.cond(), traj.carry,
+                                                 boundary)
+        traj.carry = carry
+        # a max_leg-clipped stop is a control point, not an exit boundary:
+        # nothing releases or joins there, but interleaved flushes can run
+        is_exit = boundary in self.scheduler.boundaries
+        released = [(si, e) for si, e in active
+                    if is_exit and e.served == boundary]
+        latents = np.asarray(exits[boundary]) if released else None
+        with self._stats_lock:
+            s = self.stats_raw
+            s.legs += 1
+            s.forwards += boundary - step
+            s.slot_steps_active += len(active) * (boundary - step)
+            s.slot_steps_total += self.scheduler.max_slots * (boundary - step)
+        for si, e in released:
+            self._release(traj, si, e, latents[si], boundary, len(active))
+        if is_exit:
+            joiners = self.scheduler.plan_joins(
+                self.queue.snapshot(), boundary, len(traj.free_slots()),
+                traj.shape_key)
+            if joiners:
+                self.queue.remove({e.uid for e in joiners})
+                try:
+                    self._admit(traj, joiners, boundary)
+                except BaseException as exc:  # noqa: BLE001
+                    # joiners left the queue already; a failing prefix
+                    # dispatch must reach their futures. The trajectory's
+                    # own carry is untouched (assigned only after every
+                    # scatter lands), so the in-flight slots roll on.
+                    self._fail_entries(joiners, exc, count_all=True)
+        if not traj.active():
+            self._traj = None
+
+    def _release(self, traj: _Trajectory, si: int, e: _Entry, row,
+                 boundary: int, batch_real: int) -> None:
+        """Resolve one slot's future at its exit boundary and free the slot."""
+        wait_ms = (e.t_admit - e.t_submit) * 1e3
+        with self._stats_lock:
+            s = self.stats_raw
+            s.completed += 1
+            s.sum_wait_ms += wait_ms
+            s.max_wait_ms = max(s.max_wait_ms, wait_ms)
+        response = Response(latents=row, meta={
+            "requested_budget": e.requested,
+            "served_budget": e.served,
+            "nfe_batch": boundary,
+            "batch_real": batch_real,
+            "batch_padded": self.scheduler.max_slots,
+            "mixed": False,
+            "wait_ms": wait_ms,
+            "continuous": True,
+            "join_step": e.join_step,
+            "slot": si,
+        })
+        try:
+            e.future.set_result(response)
+        except Exception:           # cancelled: the trajectory rolls on
+            pass
+        traj.entries[si] = None
+
+    def _admit(self, traj: _Trajectory, joiners: list, boundary: int) -> None:
+        """Join ``joiners`` at ``boundary``: compute each prefix 0..boundary
+        from its own noise on the shared intermediate coefficients (one
+        padded mini-dispatch, ``boundary`` forwards), scatter the prefix
+        carries into the freed slots, and re-place on the mesh if sharded."""
+        k = len(joiners)
+        x0_np, t_np = assemble_rows(joiners, self.scheduler.join_bucket(k))
+        cond = None if t_np is None else {"tokens": jnp.asarray(t_np)}
+        prefix = self.sampler.carry_start(cond, jnp.asarray(x0_np))
+        prefix, _ = self.sampler.carry_extend(cond, prefix, boundary)
+        free = traj.free_slots()[:k]
+        idx = jnp.asarray(free)
+        carry = traj.carry
+        carry = carry._replace(
+            x0=carry.x0.at[idx].set(prefix.x0[:k]),
+            U=carry.U.at[:, idx].set(prefix.U[:, :k]),
+            x=carry.x.at[idx].set(prefix.x[:k]))
+        if self._place_carry is not None:
+            carry = self._place_carry(carry)
+        traj.carry = carry
+        now = self.clock()
+        for si, e in zip(free, joiners):
+            e.t_admit, e.join_step = now, boundary
+            if traj.tokens is not None:
+                traj.tokens[si] = np.asarray(e.tokens)
+            traj.entries[si] = e
+        with self._stats_lock:
+            s = self.stats_raw
+            s.joins += k
+            s.forwards += boundary
+            s.join_forwards += boundary
+
+    def _fail_trajectory(self, exc: BaseException) -> None:
+        """Surface a failing leg into every occupied slot's future and
+        retire the trajectory, keeping the engine (and its serve thread)
+        alive — the trajectory twin of ``_run_batches``' per-batch guard."""
+        traj, self._traj = self._traj, None
+        if traj is not None:
+            self._fail_entries([e for _, e in traj.active()], exc,
+                               count_all=True)
+
+    # -- lifecycle -----------------------------------------------------------
+
+    def drain(self) -> None:
+        """Graceful drain: refuse new requests, flush every pending one AND
+        run the in-flight trajectory to completion."""
+        with self._intake_lock:
+            self._closed = True
+        while self.queue.depth() or self._traj is not None:
+            self.pump(force=True)

@@ -158,6 +158,7 @@ class AnytimeFlowSampler:
         self.budgets = tuple(sorted(self.budgets))
         self._per_budget: dict[int, Callable] = {}
         self._all: Optional[Callable] = None
+        self._extends: dict[tuple[int, int], Callable] = {}
 
     @classmethod
     def from_artifact(cls, artifact, *, params: dict, cfg: ModelConfig,
@@ -224,6 +225,43 @@ class AnytimeFlowSampler:
         B, S = batch["tokens"].shape
         x0 = jax.random.normal(key, (B, S, self.cfg.latent_dim))
         return self.sample_all_from(batch, x0)
+
+    # -- carry protocol (continuous batching, repro.serving.continuous) ------
+
+    def carry_start(self, batch: Optional[dict],
+                    x0: Array) -> anytime_mod.AnytimeCarry:
+        """A fresh shared-trajectory carry over ``x0`` (no forwards spent)."""
+        return anytime_mod.anytime_carry(self.anytime, self.budgets, x0)
+
+    def carry_extend(self, batch: Optional[dict],
+                     carry: anytime_mod.AnytimeCarry, stop: int
+                     ) -> tuple[anytime_mod.AnytimeCarry, dict[int, Array]]:
+        """Advance the shared trajectory to ``stop`` evals; returns the new
+        carry plus the early-exit outputs crossed on the way.
+
+        Costs exactly ``stop - carry.step`` backbone forwards for the whole
+        slot batch. One jit program per (start, stop) leg — the boundary
+        pairs a trajectory can traverse are few and fixed, so a running
+        server compiles each leg once (mirroring the per-budget programs).
+        """
+        key = (carry.step, stop)
+        fn = self._extends.get(key)
+        if fn is None:
+            start, step_stop = key
+
+            def _extend(params, batch, x0, U, x):
+                field = M.velocity_field(params, self.cfg, self.sched, batch,
+                                         cfg_scale=self.cfg_scale)
+                c = anytime_mod.AnytimeCarry(x0=x0, U=U, x=x, step=start)
+                out, exits = anytime_mod.anytime_extend(
+                    self.anytime, self.budgets, field.fn, c, step_stop,
+                    update_fn=self.update_fn)
+                return out.U, out.x, exits
+
+            fn = self._extends[key] = jax.jit(_extend)
+        U, x, exits = fn(self.params, batch, carry.x0, carry.U, carry.x)
+        return anytime_mod.AnytimeCarry(x0=carry.x0, U=U, x=x,
+                                        step=stop), exits
 
     def nearest_tokens(self, latents: Array) -> Array:
         """Decode sampled latents to tokens by nearest latent embedding."""

@@ -47,6 +47,12 @@ Sharded execution: pass ``mesh=`` (see ``repro.serving.sharded``) to shard
 the backbone params via ``distributed.sharding.param_specs`` and split
 batches along the data axes; with no mesh the gateway falls back to the
 samplers' single-device jit unchanged.
+
+Continuous batching: ``repro.serving.continuous.ContinuousGateway`` extends
+this gateway so queued requests are admitted into IN-FLIGHT anytime
+trajectories at exit boundaries instead of waiting for the next flush; its
+scheduler adds slot admission/release planning on top of ``BatchScheduler``
+and its pump interleaves joins with these flushes.
 """
 from __future__ import annotations
 
@@ -107,6 +113,11 @@ class _Entry:
     shape_key: tuple
     t_submit: float
     future: Future
+    # continuous batching (repro.serving.continuous): when this entry was
+    # admitted into a trajectory (wait ends here, not at exit) and at which
+    # exit boundary it joined (0 = opened the trajectory)
+    t_admit: Optional[float] = None
+    join_step: int = 0
 
 
 class RequestQueue:
@@ -133,6 +144,28 @@ class RequestQueue:
     def snapshot(self) -> list[_Entry]:
         with self._lock:
             return list(self._entries)
+
+
+def assemble_rows(entries: Sequence["_Entry"], bucket: int):
+    """Host-side padded-batch assembly, shared by flush execution,
+    trajectory starts, and join-prefix dispatches: stack each entry's x0
+    (and tokens) and zero-pad to ``bucket`` rows — ONE device transfer per
+    dispatch, and the single definition of the pad contract (zero rows,
+    independent through the backbone, so padding never perturbs a real
+    sample). Returns host numpy arrays ``(x0, tokens-or-None)``."""
+    import numpy as np
+
+    pad = bucket - len(entries)
+    x0 = np.stack([np.asarray(e.x0) for e in entries])
+    if pad:
+        x0 = np.concatenate(
+            [x0, np.zeros((pad,) + x0.shape[1:], x0.dtype)])
+    tokens = None
+    if entries[0].tokens is not None:
+        tokens = np.stack([np.asarray(e.tokens) for e in entries]
+                          + [np.zeros_like(np.asarray(entries[0].tokens))]
+                          * pad)
+    return x0, tokens
 
 
 @dataclasses.dataclass
@@ -260,6 +293,13 @@ class GatewayStats:
     sum_wait_ms: float = 0.0
     max_wait_ms: float = 0.0
     started: float = 0.0
+    # continuous batching (zero under the flush-only gateway):
+    trajectories: int = 0      # anytime trajectories opened
+    legs: int = 0              # boundary-to-boundary trajectory dispatches
+    joins: int = 0             # requests admitted into in-flight trajectories
+    join_forwards: int = 0     # forwards spent computing join prefixes
+    slot_steps_active: int = 0  # occupied slot-steps across trajectory legs
+    slot_steps_total: int = 0   # max_slots * steps across trajectory legs
 
 
 class Gateway:
@@ -375,31 +415,48 @@ class Gateway:
             # the snapshot stays queued for the next pump, never dropped
             self.queue.remove(
                 {e.uid for b in batches for e in b.entries})
+        return self._run_batches(batches)
+
+    def _run_batches(self, batches: Sequence[Batch]) -> int:
+        """Execute planned batches; an exception escaping one batch (e.g. a
+        cancelled future rejecting its result mid-scatter) is surfaced into
+        that batch's unresolved futures and the NEXT batch still runs —
+        entries were already removed from the queue, so anything less
+        strands their futures forever (the old mid-drain failure mode)."""
         for batch in batches:
-            self._execute(batch)
+            try:
+                self._execute(batch)
+            except BaseException as exc:  # noqa: BLE001 — must not strand
+                self._fail_entries(batch.entries, exc)
         return len(batches)
+
+    def _fail_entries(self, entries: Sequence[_Entry], exc: BaseException,
+                      count_all: bool = False) -> None:
+        """Surface ``exc`` into every still-unresolved future. A future the
+        client already cancelled rejects ``set_exception``; that must not
+        keep the failure from reaching its batch-mates."""
+        failed = 0
+        for e in entries:
+            try:
+                e.future.set_exception(exc)
+                failed += 1
+            except Exception:       # cancelled/raced future: nothing to do
+                failed += int(count_all)
+        with self._stats_lock:
+            self.stats_raw.failed += failed
 
     def _execute(self, batch: Batch) -> None:
         import numpy as np
 
         es = batch.entries
-        pad = batch.bucket - len(es)
         dispatched = self.clock()   # wait_ms is QUEUE time, ending here —
         #                             not device/compile time
         try:
             # assemble on host: ONE device transfer per batch, not one eager
             # stack/slice op per request (those dominate at small budgets)
-            x0_np = np.stack([np.asarray(e.x0) for e in es])
-            if pad:
-                x0_np = np.concatenate(
-                    [x0_np, np.zeros((pad,) + x0_np.shape[1:], x0_np.dtype)])
+            x0_np, t_np = assemble_rows(es, batch.bucket)
             x0 = jnp.asarray(x0_np)
-            cond = None
-            if es[0].tokens is not None:
-                t_np = np.stack([np.asarray(e.tokens) for e in es]
-                                + [np.zeros_like(np.asarray(es[0].tokens))]
-                                * pad)
-                cond = {"tokens": jnp.asarray(t_np)}
+            cond = None if t_np is None else {"tokens": jnp.asarray(t_np)}
             if self._place is not None:
                 cond, x0 = self._place(cond, x0)
             if batch.mixed:
@@ -413,10 +470,7 @@ class Gateway:
                 nfe = batch.budget
                 rows = [lat[i] for i in range(len(es))]
         except Exception as exc:
-            for e in es:
-                e.future.set_exception(exc)
-            with self._stats_lock:
-                self.stats_raw.failed += len(es)
+            self._fail_entries(es, exc, count_all=True)
             return
         s = self.stats_raw
         with self._stats_lock:
@@ -432,7 +486,7 @@ class Gateway:
                 s.completed += 1
         for e, row in zip(es, rows):
             wait_ms = (dispatched - e.t_submit) * 1e3
-            e.future.set_result(Response(latents=row, meta={
+            response = Response(latents=row, meta={
                 "requested_budget": e.requested,
                 "served_budget": e.served,
                 "nfe_batch": nfe,
@@ -440,7 +494,11 @@ class Gateway:
                 "batch_padded": batch.bucket,
                 "mixed": batch.mixed,
                 "wait_ms": wait_ms,
-            }))
+            })
+            try:
+                e.future.set_result(response)
+            except Exception:   # cancelled mid-batch: batch-mates still land
+                pass
 
     # -- lifecycle ----------------------------------------------------------
 
@@ -496,4 +554,11 @@ class Gateway:
             "mean_wait_ms": s.sum_wait_ms / max(s.completed, 1),
             "max_wait_ms": s.max_wait_ms,
             "throughput_rps": s.completed / elapsed,
+            # continuous batching (all zero under the flush-only gateway)
+            "trajectories": s.trajectories,
+            "legs": s.legs,
+            "joins": s.joins,
+            "join_rate": s.joins / max(s.completed, 1),
+            "slot_occupancy": (s.slot_steps_active / s.slot_steps_total
+                               if s.slot_steps_total else 0.0),
         }

@@ -66,6 +66,28 @@ def batch_placer(mesh):
     return place
 
 
+def carry_placer(mesh):
+    """A ``place(carry) -> carry`` callable re-placing the continuous
+    engine's slot-batched carry arrays after a join scatters new rows:
+    ``x0``/``x`` along the data axes on the leading (slot) dim, ``U`` on its
+    slot dim (axis 1), replicating when the slot count does not divide the
+    data-axis size — size ``max_slots`` to the data axis to stay split."""
+    axes, size = _data_axes(mesh)
+
+    def place_axis(x, dim):
+        spec = [None] * x.ndim
+        if x.shape[dim] % size == 0:
+            spec[dim] = axes
+        return jax.device_put(x, NamedSharding(mesh, P(*spec)))
+
+    def place(carry):
+        return carry._replace(x0=place_axis(carry.x0, 0),
+                              U=place_axis(carry.U, 1),
+                              x=place_axis(carry.x, 0))
+
+    return place
+
+
 def serving_mesh(name: str):
     """CLI mesh selection: 'none' -> None (single-device jit), 'host' ->
     the 1x1 smoke mesh, 'production'/'multipod' -> ``launch.mesh`` shapes.

@@ -1,0 +1,113 @@
+"""Reference toy sampler speaking the full serving protocol stack.
+
+One implementation of the budget protocol (``budgets``, ``resolve_budget``,
+``sample_from``, ``sample_all_from``) AND the carry protocol
+(``carry_start``, ``carry_extend``) over the analytic two-moons velocity
+field, shared by the serving benchmarks and the gateway/continuous test
+suites so they all exercise the SAME sampler:
+
+* ``jit=True`` (benchmark timing): per-budget programs compiled once and
+  cached, like ``AnytimeFlowSampler``.
+* ``jit=False`` (forward accounting / fake-clock simulation): everything
+  runs eagerly through ``_u``, which calls the ``on_forward`` hook once per
+  BATCH-LEVEL velocity evaluation — override it to count backbone forwards
+  or to advance a simulated clock. The hook is not called on the jit path
+  (compiled programs do not re-trace), so accounting users must keep
+  ``jit=False``.
+
+The anytime solver is ``init_anytime`` + per-leaf Gaussian jitter (seeded),
+so two instances with the same (budgets, seed, jitter) are bit-identical —
+the flush-vs-continuous comparisons rest on that.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ns_solver, schedulers, toy
+from repro.core.anytime import (
+    AnytimeCarry,
+    anytime_carry,
+    anytime_extend,
+    anytime_sample,
+    extract_ns,
+    init_anytime,
+)
+from repro.serving.engine import nearest_budget
+
+Array = jax.Array
+
+
+class ToyAnytimeSampler:
+    """Budget+carry-protocol sampler over the analytic toy field."""
+
+    def __init__(self, budgets: Sequence[int] = (4, 8, 16), seed: int = 0,
+                 jitter: float = 0.1, jit: bool = True):
+        self.budgets = tuple(sorted(budgets))
+        theta = init_anytime(None, self.budgets, "nested")
+        leaves, treedef = jax.tree.flatten(theta)
+        keys = jax.random.split(jax.random.PRNGKey(seed), len(leaves))
+        self.theta = jax.tree.unflatten(
+            treedef, [l + jitter * jax.random.normal(k, l.shape)
+                      for l, k in zip(leaves, keys)])
+        sched = schedulers.fm_ot()
+        self.field = toy.mixture_field(sched, toy.two_moons_means(),
+                                       jnp.full((16,), 0.15), jnp.ones((16,)))
+        self._jit = jit
+        self._per_budget: dict[int, Callable] = {}
+        self._all: Optional[Callable] = None
+
+    def on_forward(self) -> None:
+        """Called once per batch-level velocity evaluation (eager path
+        only). Override to count forwards or advance a simulated clock."""
+
+    def _u(self, t: Array, x: Array) -> Array:
+        self.on_forward()
+        return self.field.fn(t, x)
+
+    # -- budget protocol -----------------------------------------------------
+
+    def resolve_budget(self, m: int, strict: bool = False) -> int:
+        return nearest_budget(self.budgets, m, strict)
+
+    def sample_from(self, batch, x0: Array, budget: int) -> Array:
+        if not self._jit:
+            ns = extract_ns(self.theta, self.budgets, budget)
+            return ns_solver.ns_sample(ns, self._u, x0, unroll=True)
+        fn = self._per_budget.get(budget)
+        if fn is None:
+            ns = extract_ns(self.theta, self.budgets, budget)
+            fn = self._per_budget[budget] = jax.jit(
+                lambda x, ns=ns: ns_solver.ns_sample(ns, self.field.fn, x))
+        return fn(x0)
+
+    def sample_all_from(self, batch, x0: Array) -> dict[int, Array]:
+        if not self._jit:
+            return anytime_sample(self.theta, self.budgets, self._u, x0)
+        if self._all is None:
+            self._all = jax.jit(lambda x: anytime_sample(
+                self.theta, self.budgets, self.field.fn, x))
+        return self._all(x0)
+
+    # -- carry protocol (continuous batching) --------------------------------
+
+    def carry_start(self, batch, x0: Array) -> AnytimeCarry:
+        return anytime_carry(self.theta, self.budgets, x0)
+
+    def carry_extend(self, batch, carry: AnytimeCarry, stop: int):
+        return anytime_extend(self.theta, self.budgets, self._u, carry, stop)
+
+
+class CountingToySampler(ToyAnytimeSampler):
+    """Eager variant metering batch-level backbone forwards — the NFE
+    accounting the gateway tests assert against."""
+
+    def __init__(self, budgets: Sequence[int] = (2, 4), seed: int = 0,
+                 jitter: float = 0.1):
+        super().__init__(budgets=budgets, seed=seed, jitter=jitter, jit=False)
+        self.forwards = 0
+
+    def on_forward(self) -> None:
+        self.forwards += 1

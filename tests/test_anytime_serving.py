@@ -10,7 +10,6 @@ import pytest
 from repro.core import ns_solver, schedulers, toy
 from repro.core.anytime import (
     anytime_sample, evaluate_anytime, extract_ns, init_anytime, nested_grid,
-    train_anytime,
 )
 from repro.core.bns import BNSTrainConfig, psnr
 from repro.serving import AnytimeFlowSampler, FlowSampler

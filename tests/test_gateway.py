@@ -7,10 +7,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import ns_solver, schedulers, toy
-from repro.core.anytime import anytime_sample, extract_ns, init_anytime
-from repro.serving import AnytimeFlowSampler, Gateway, Request, nearest_budget
+from repro.core.anytime import init_anytime
+from repro.serving import AnytimeFlowSampler, Gateway, Request
 from repro.serving.gateway import BatchScheduler
+from repro.serving.toy import CountingToySampler
 from repro.solvers import SolverArtifact, SolverSpec
 
 BUDGETS = (2, 4)
@@ -25,40 +25,6 @@ class FakeClock:
 
     def advance(self, seconds):
         self.t += seconds
-
-
-class CountingToySampler:
-    """Budget-protocol sampler over the analytic toy field, UN-jitted so a
-    forward-counting field wrapper observes every real backbone forward —
-    the gateway's NFE accounting is asserted against this counter."""
-
-    def __init__(self, budgets=BUDGETS, seed=0, jitter=0.1):
-        self.budgets = tuple(sorted(budgets))
-        theta = init_anytime(None, self.budgets, "nested")
-        leaves, treedef = jax.tree.flatten(theta)
-        keys = jax.random.split(jax.random.PRNGKey(seed), len(leaves))
-        self.theta = jax.tree.unflatten(
-            treedef, [l + jitter * jax.random.normal(k, l.shape)
-                      for l, k in zip(leaves, keys)])
-        sched = schedulers.fm_ot()
-        self._field = toy.mixture_field(sched, toy.two_moons_means(),
-                                        jnp.full((16,), 0.15),
-                                        jnp.ones((16,)))
-        self.forwards = 0
-
-    def _u(self, t, x):
-        self.forwards += 1
-        return self._field.fn(t, x)
-
-    def resolve_budget(self, m, strict=False):
-        return nearest_budget(self.budgets, m, strict)
-
-    def sample_from(self, batch, x0, budget):
-        ns = extract_ns(self.theta, self.budgets, budget)
-        return ns_solver.ns_sample(ns, self._u, x0, unroll=True)
-
-    def sample_all_from(self, batch, x0):
-        return anytime_sample(self.theta, self.budgets, self._u, x0)
 
 
 def _gateway(sampler=None, **kw):
@@ -93,6 +59,54 @@ def test_scheduler_validates_config():
         BatchScheduler(max_batch=0)
     with pytest.raises(ValueError):
         BatchScheduler(policy="sometimes")
+
+
+# ---------------------------------------------------------------------------
+# _use_mixed edge cases (pure cost model)
+# ---------------------------------------------------------------------------
+
+
+def test_use_mixed_single_budget_never_merges():
+    s = BatchScheduler(max_batch=8, policy="always", can_mix=True,
+                       top_budget=16)
+    assert not s._use_mixed([4], total=3)       # one budget: nothing to mix
+
+
+def test_use_mixed_all_equal_budgets_form_one_group():
+    """All-equal budgets coalesce into ONE (shape, budget) group, so a flush
+    plans a plain per-budget batch — never a mixed dispatch."""
+    gw, sampler, clock = _gateway(max_batch=4, mixed_budget_policy="always")
+    futs = [gw.submit(Request(budget=4, x0=_x0(i))) for i in range(3)]
+    clock.advance(1.0)
+    assert gw.pump() == 1
+    assert all(not f.result().meta["mixed"] for f in futs)
+    assert gw.stats()["mixed_batches"] == 0 and sampler.forwards == 4
+
+
+def test_use_mixed_respects_policy_and_missing_top_budget():
+    s = BatchScheduler(max_batch=8, policy="never", can_mix=True,
+                       top_budget=16)
+    assert not s._use_mixed([2, 4], total=2)    # policy gates everything
+    s2 = BatchScheduler(max_batch=8, policy="auto", can_mix=True,
+                        top_budget=None)        # no shared trajectory known
+    assert not s2._use_mixed([2, 4], total=2)
+    s3 = BatchScheduler(max_batch=8, policy="auto", can_mix=False,
+                        top_budget=2)
+    assert not s3._use_mixed([2, 4], total=2)   # sampler cannot mix at all
+
+
+def test_use_mixed_totals_exceeding_max_batch_count_every_chunk():
+    """total > max_batch means several shared-trajectory chunks; each costs
+    the top budget, and the cost model must charge all of them."""
+    s = BatchScheduler(max_batch=2, policy="auto", can_mix=True,
+                       top_budget=8)
+    # 3 chunks x 8 = 24 > 2 + 4 + 8 = 14: per-budget wins
+    assert not s._use_mixed([2, 4, 8], total=5)
+    # 1 chunk x 8 < 2 + 4 + 8: merge wins
+    assert s._use_mixed([2, 4, 8], total=2)
+    s.top_budget = 3
+    # 3 chunks x 3 = 9 < 14: merge still wins despite chunking
+    assert s._use_mixed([2, 4, 8], total=5)
 
 
 # ---------------------------------------------------------------------------
@@ -310,6 +324,62 @@ def test_failed_batch_propagates_to_futures():
         with pytest.raises(RuntimeError, match="boom"):
             f.result()
     assert gw.stats()["failed"] == 2
+
+
+def test_mid_drain_failure_surfaces_into_affected_futures():
+    """Regression: a raising sampler plus a client-cancelled future used to
+    blow up ``set_exception`` mid-drain, aborting the pump loop and leaving
+    every later batch's futures pending forever. The failure must reach the
+    affected batch's live futures and later batches must still drain."""
+    class Exploding(CountingToySampler):
+        def sample_from(self, batch, x0, budget):
+            if budget == 2:
+                raise RuntimeError("boom")
+            return super().sample_from(batch, x0, budget)
+
+    gw, _, clock = _gateway(Exploding(), max_batch=2,
+                            mixed_budget_policy="never")
+    f2s = [gw.submit(Request(budget=2, x0=_x0(i))) for i in range(2)]
+    f4s = [gw.submit(Request(budget=4, x0=_x0(2 + i))) for i in range(2)]
+    f2s[0].cancel()                      # client gave up while queued
+    gw.drain()
+    assert all(f.done() for f in f2s + f4s)      # nothing pending forever
+    with pytest.raises(RuntimeError, match="boom"):
+        f2s[1].result()
+    for f in f4s:                        # the later batch still served
+        assert f.result().meta["served_budget"] == 4
+
+
+def test_cancelled_future_does_not_strand_batch_mates():
+    """A cancelled future rejecting its result mid-scatter must not keep
+    batch-mates from resolving."""
+    gw, sampler, clock = _gateway(max_batch=2)
+    f0 = gw.submit(Request(budget=2, x0=_x0(0)))
+    f1 = gw.submit(Request(budget=2, x0=_x0(1)))
+    f0.cancel()
+    assert gw.pump() == 1
+    assert f1.result().meta["served_budget"] == 2
+
+
+def test_stats_occupancy_under_partial_flushes():
+    """GatewayStats occupancy = real rows / padded bucket rows, accumulated
+    across full and partial (padded) flushes."""
+    gw, sampler, clock = _gateway(max_batch=4)
+    for i in range(3):                           # partial: 3 real, bucket 4
+        gw.submit(Request(budget=2, x0=_x0(i)))
+    clock.advance(1.0)
+    assert gw.pump() == 1
+    assert gw.stats()["occupancy"] == pytest.approx(3 / 4)
+    for i in range(4):                           # full: 4 real, bucket 4
+        gw.submit(Request(budget=2, x0=_x0(10 + i)))
+    assert gw.pump() == 1
+    s = gw.stats()
+    assert s["occupancy"] == pytest.approx((3 + 4) / (4 + 4))
+    assert gw.stats_raw.real_rows == 7 and gw.stats_raw.padded_rows == 8
+    gw.submit(Request(budget=2, x0=_x0(20)))     # 1 real pads to bucket 1,
+    clock.advance(1.0)                           # not to max_batch
+    assert gw.pump() == 1
+    assert gw.stats()["occupancy"] == pytest.approx((3 + 4 + 1) / (4 + 4 + 1))
 
 
 def test_threaded_serve_forever_resolves_futures():

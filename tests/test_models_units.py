@@ -14,10 +14,9 @@ st = pytest.importorskip("hypothesis.strategies")
 
 from repro.checkpoint import checkpointer
 from repro.configs import get_config
-from repro.configs.base import MoEConfig
 from repro.data.synthetic import DataConfig, SyntheticTokens
 from repro.models.attention import attention_forward, init_attention
-from repro.models.linear_scan import gla_chunked, gla_recurrent, gla_step
+from repro.models.linear_scan import gla_chunked, gla_recurrent
 from repro.models.moe import moe_mlp_onehot, moe_mlp_scatter, init_moe_mlp
 
 

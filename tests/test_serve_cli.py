@@ -115,6 +115,22 @@ def test_flow_mode_gateway_mesh_host(anytime_artifact):
     assert "gateway stats: completed=2" in res.stdout
 
 
+def test_flow_mode_continuous_gateway(anytime_artifact):
+    """--continuous serves the stream through the continuous-batching
+    gateway: requests ride shared trajectories and the summary reports
+    trajectory/join/slot-occupancy metrics."""
+    res = _run("--arch", "yi-6b", "--mode", "flow",
+               "--solver-artifact", anytime_artifact, "--gateway",
+               "--continuous", "--max-slots", "2", "--max-wait-ms", "50",
+               "--request-budgets", "2,4", "--requests", "4",
+               "--batch", "2", "--seq", "4")
+    assert res.returncode == 0, res.stderr
+    out = res.stdout
+    assert "gateway stats: completed=4" in out
+    assert "continuous stats:" in out
+    assert "trajectories=" in out and "slot_occupancy=" in out
+
+
 def test_decode_mode_smoke():
     res = _run("--arch", "yi-6b", "--mode", "decode", "--batch", "2",
                "--steps", "3", "--slots", "16")

@@ -13,7 +13,6 @@ from repro.solvers import (
     SolverSpec,
     build_ns,
     get_solver,
-    list_solvers,
     solver_names,
 )
 
