@@ -33,20 +33,9 @@ import jax
 import numpy as np
 
 from repro.serving import ContinuousGateway, Gateway, Request
-from repro.serving.toy import ToyAnytimeSampler
+from repro.serving.toy import FakeClock, ToyAnytimeSampler
 
 BUDGETS = (4, 8, 16)
-
-
-class FakeClock:
-    def __init__(self):
-        self.t = 0.0
-
-    def __call__(self):
-        return self.t
-
-    def advance(self, seconds):
-        self.t += seconds
 
 
 class ToyCarrySampler(ToyAnytimeSampler):

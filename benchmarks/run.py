@@ -8,6 +8,8 @@
   kernel_bench         — Pallas kernels vs ref oracles
   gateway_bench        — serving gateway: batched vs unbatched throughput
   continuous_bench     — continuous batching vs flush-only (p95 wait, NFE)
+  decode_bench         — decode gateway: continuous slot refill vs
+                         run-to-completion batching (wall-steps)
   roofline             — §Roofline terms from the dry-run artifacts
 
 Prints ``name,us_per_call,derived`` CSV lines; paper-claim PASS/FAIL notes go
@@ -15,7 +17,7 @@ to log lines prefixed with '#'.
 
 Regression gating (CI bench-regression job):
 
-  python benchmarks/run.py --quick --only gateway,kernel,continuous \\
+  python benchmarks/run.py --quick --only gateway,kernel,continuous,decode \\
       --json-dir bench-fresh --check-against benchmarks/baselines
 
 runs just the gated benches, writes their fresh summary JSONs, and exits
@@ -153,6 +155,23 @@ def _gateway(quick, csv, summaries):
                             "metrics": gateway_bench.metrics(rows)}
 
 
+@_timed("decode_bench")
+def _decode(quick, csv, summaries):
+    from benchmarks import decode_bench
+    rows = decode_bench.run(requests=32 if quick else 64, log=log)
+    notes = decode_bench.check_claims(rows)
+    for note in notes:
+        log(note)
+    for r in rows:
+        csv.append((f"decode/{r['mix']}", float(r["cont_wall_steps"]),
+                    f"wall_step_ratio={r['wall_step_ratio']:.2f};"
+                    f"occupancy={r['cont_occupancy']:.2f};"
+                    f"joins={r['joins']}"))
+    summaries["decode"] = {"bench": "decode", "rows": rows,
+                           "claims": notes,
+                           "metrics": decode_bench.metrics(rows)}
+
+
 @_timed("continuous_bench")
 def _continuous(quick, csv, summaries):
     from benchmarks import continuous_bench
@@ -205,6 +224,7 @@ SECTIONS = {
     "anytime": _anytime,
     "gateway": _gateway,
     "continuous": _continuous,
+    "decode": _decode,
     "roofline": _roofline,
 }
 

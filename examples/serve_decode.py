@@ -1,18 +1,17 @@
 """Serving-substrate demo: batched autoregressive decode across architecture
 families — KV-cache GQA (dense), recurrent state (RWKV6), and the hybrid
 Mamba2+shared-attention state, plus the sliding-window ring buffer that makes
-long_500k decode sub-quadratic for dense models.
+long_500k decode sub-quadratic for dense models — and the decode gateway's
+continuous slot refill multiplexing mixed-length prompts onto one slot pool.
 
   PYTHONPATH=src python examples/serve_decode.py
 """
-import time
-
 import jax
-import jax.numpy as jnp
 
 from repro.configs import get_config
 from repro.models import model as M
-from repro.serving.engine import DecodeEngine
+from repro.serving.decode import DecodeGateway, DecodeRequest
+from repro.serving.engine import DecodeEngine, greedy_demo
 
 BATCH, STEPS = 4, 24
 
@@ -21,15 +20,36 @@ def demo(arch: str, window: int = 0, slots: int = 64):
     cfg = get_config(arch, smoke=True)
     params = M.init_params(jax.random.PRNGKey(0), cfg)
     engine = DecodeEngine(params=params, cfg=cfg, window=window)
-    state = engine.init_state(BATCH, slots)
-    prompt = jnp.zeros((BATCH,), jnp.int32)
-    t0 = time.time()
-    tokens, _ = engine.greedy(prompt, state, STEPS)
-    dt = (time.time() - t0) / STEPS * 1e3
+    tokens, dt = greedy_demo(engine, BATCH, STEPS, slots)
     kind = f"window={window}" if window else \
         ("recurrent state" if cfg.family in ("ssm", "hybrid") else "full cache")
     print(f"  {arch:16s} [{cfg.family:6s}] {STEPS} tokens x {BATCH} seqs, "
           f"{kind}: {dt:.1f} ms/token  sample={tokens[0, :6].tolist()}")
+
+
+GATEWAY_SLOTS = 2
+
+
+def demo_gateway(arch: str = "yi-6b", max_slots: int = GATEWAY_SLOTS):
+    """Mixed-length prompts through the continuous-batching decode gateway:
+    a finished sequence frees its slot and the next prompt joins mid-flight
+    (join_step > 0), bit-identical to decoding it alone."""
+    cfg = get_config(arch, smoke=True)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    gw = DecodeGateway(DecodeEngine(params=params, cfg=cfg),
+                       max_slots=max_slots, cache_slots=64)
+    gw.start()
+    futs = [gw.submit(DecodeRequest(prompt=[1 + i, 2 + i], max_tokens=t))
+            for i, t in enumerate((12, 4, 8))]
+    gw.shutdown()
+    for i, f in enumerate(futs):
+        meta = f.result().meta
+        print(f"  request {i}: {meta['new_tokens']} tokens, slot "
+              f"{meta['slot']}, join_step {meta['join_step']}")
+    s = gw.stats()
+    print(f"  {s['completed']} sequences over {s['forwards']} engine steps "
+          f"({max_slots} slots, occupancy {s['slot_occupancy']:.2f}, "
+          f"{s['joins']} mid-flight joins)")
 
 
 def main():
@@ -40,6 +60,9 @@ def main():
     demo("qwen3-moe-30b-a3b")
     print("sliding-window ring buffer (long-context mechanism, window=8):")
     demo("yi-6b", window=8, slots=8)
+    print(f"continuous decode batching ({GATEWAY_SLOTS} slots, "
+          "mixed lengths):")
+    demo_gateway()
 
 
 if __name__ == "__main__":

@@ -7,6 +7,8 @@
       --budgets 4,8,16 --request-budgets 4,16,8   # anytime: one artifact
   PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-7b --mode decode \
       --batch 4 --steps 32
+  PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --mode decode \
+      --gateway --max-slots 4 --requests 8 --decode-lengths 32,8,16
 
 Flow mode routes solver acquisition through a ``SolverZoo``: a saved
 ``SolverArtifact`` (--solver-artifact, or anything indexed by --zoo-dir) is
@@ -29,6 +31,15 @@ mixed-budget flushes may ride the anytime shared trajectory
 response prints its (requested, served) budget pair — drift is recorded in
 metadata, not just warned. --kernel-update routes the solver update through
 the Pallas ns_update kernel.
+
+Decode mode serves batched greedy decode (jit'd multi-token scan). With
+--gateway it becomes a multi-user continuous-batching service
+(``repro.serving.decode.DecodeGateway``): each request is one prompt
+submitted to a fixed pool of --max-slots state slots; finished sequences
+free their slot and queued prompts are admitted at the very next engine
+step, bit-identical to decoding each prompt alone. --decode-lengths cycles
+per-request max_tokens (mixed output lengths are where continuous refill
+beats run-to-completion batching).
 """
 from __future__ import annotations
 
@@ -38,7 +49,6 @@ import tempfile
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.checkpoint import checkpointer
 from repro.configs import get_config
@@ -47,7 +57,13 @@ from repro.core.rk45 import rk45_solve
 from repro.core.schedulers import get_scheduler
 from repro.data.synthetic import DataConfig, SyntheticTokens
 from repro.models import model as M
-from repro.serving import AnytimeFlowSampler, DecodeEngine, FlowSampler, SolverZoo
+from repro.serving import (
+    AnytimeFlowSampler,
+    DecodeEngine,
+    FlowSampler,
+    SolverZoo,
+    greedy_demo,
+)
 from repro.solvers import SolverArtifact, SolverSpec
 
 DEFAULT_NFE = 8
@@ -245,13 +261,41 @@ def serve_decode(args) -> None:
     if args.ckpt:
         params = checkpointer.restore(args.ckpt, params)
     engine = DecodeEngine(params=params, cfg=cfg, window=args.window)
-    state = engine.init_state(args.batch, args.slots)
-    prompt = jnp.zeros((args.batch,), jnp.int32)
-    t0 = time.time()
-    tokens, _ = engine.greedy(prompt, state, args.steps)
-    dt = (time.time() - t0) / args.steps * 1e3
+    if args.gateway:
+        _serve_decode_gateway(args, engine, cfg)
+        return
+    tokens, dt = greedy_demo(engine, args.batch, args.steps, args.slots)
     print(f"decoded {args.steps} tokens x {args.batch} seqs "
           f"({dt:.1f} ms/token); first row: {tokens[0, :8].tolist()}")
+
+
+def _serve_decode_gateway(args, engine, cfg) -> None:
+    """Continuous decode batching: every request is one prompt -> state slot."""
+    from repro.serving.decode import DecodeGateway, DecodeRequest
+
+    lengths = args.decode_lengths or (args.steps, max(1, args.steps // 2))
+    gw = DecodeGateway(engine, max_slots=args.max_slots,
+                       cache_slots=args.slots)
+    gw.start()
+    t0 = time.time()
+    futures = []
+    for req in range(args.requests):
+        prompt = [(3 * req + 1) % cfg.vocab, (5 * req + 2) % cfg.vocab]
+        futures.append(gw.submit(DecodeRequest(
+            prompt=prompt, max_tokens=lengths[req % len(lengths)])))
+    gw.shutdown()
+    for i, fut in enumerate(futures):
+        meta = fut.result().meta
+        print(f"request {i}: {meta['new_tokens']} tokens "
+              f"({meta['finish_reason']}), wait {meta['wait_ms']:.1f} ms, "
+              f"slot {meta['slot']}, join_step {meta['join_step']}")
+    wall = time.time() - t0
+    s = gw.stats()
+    print(f"decode gateway stats: completed={s['completed']} "
+          f"steps={s['forwards']} tokens={s['tokens_out']} "
+          f"tokens/s={s['tokens_out'] / max(wall, 1e-9):.1f} "
+          f"slot_occupancy={s['slot_occupancy']:.2f} joins={s['joins']} "
+          f"mean_wait={s['mean_wait_ms']:.1f}ms")
 
 
 def _budget_list(text: str) -> tuple[int, ...]:
@@ -305,7 +349,12 @@ def main() -> None:
                          "(needs an anytime --budgets artifact)")
     ap.add_argument("--max-slots", type=int, default=8,
                     help="continuous gateway: trajectory slot count (batch "
-                         "width of the shared anytime trajectory)")
+                         "width of the shared anytime trajectory); decode "
+                         "gateway: sequence slot count")
+    ap.add_argument("--decode-lengths", type=_budget_list, default=None,
+                    help="decode gateway: per-request max_tokens, cycled "
+                         "over --requests (default: --steps and --steps/2 — "
+                         "mixed lengths exercise continuous slot refill)")
     ap.add_argument("--mixed-budget-policy", default="auto",
                     choices=["never", "auto", "always"],
                     help="gateway: route multi-budget flushes through the "

@@ -22,7 +22,8 @@ NEG_INF = -1e30
 class KVCache(NamedTuple):
     k: Array       # (B, slots, KV, hd)
     v: Array       # (B, slots, KV, hd)
-    index: Array   # scalar int32: number of tokens already decoded (absolute)
+    index: Array   # int32 tokens already decoded: scalar, or (B,) per-row
+    #                (slot serving — each batch row at its own position)
 
     @property
     def slots(self) -> int:
@@ -182,32 +183,41 @@ def decode_attention(
     window: int = 0,
     norm_eps: float = 1e-5,
 ) -> tuple[Array, KVCache]:
-    """One-token decode over a KV cache (ring buffer when window > 0)."""
+    """One-token decode over a KV cache (ring buffer when window > 0).
+
+    ``cache.index`` is either a scalar (the whole batch sits at one decode
+    position — the classic engine) or a per-row ``(B,)`` vector (slot
+    serving: each batch row is an independent sequence at its own position,
+    see ``DecodeEngine.step_slots``). RoPE, the cache write slot, and the
+    validity mask are all computed per row, so rows never share position
+    state and each row's decode is bit-identical to decoding it alone.
+    """
     B, Lq, _ = x.shape
     assert Lq == 1
     G = n_heads // n_kv
-    pos = cache.index                                           # absolute position
+    pos = jnp.broadcast_to(cache.index, (B,)).astype(jnp.int32)  # per-row position
     q = _split_heads(x @ p["wq"], n_heads, head_dim)
     k_new = _split_heads(x @ p["wk"], n_kv, head_dim)
     v_new = _split_heads(x @ p["wv"], n_kv, head_dim)
     if "q_norm" in p:
         q = rms_norm(q, p["q_norm"], norm_eps)
         k_new = rms_norm(k_new, p["k_norm"], norm_eps)
-    posb = jnp.full((1,), pos, jnp.int32)
+    posb = pos[:, None]                                         # (B, 1)
     q = apply_rope(q, posb, rope_theta)
     k_new = apply_rope(k_new, posb, rope_theta)
 
     slot = pos % cache.slots if window else jnp.minimum(pos, cache.slots - 1)
-    k = cache.k.at[:, slot].set(k_new[:, 0].astype(cache.k.dtype))
-    v = cache.v.at[:, slot].set(v_new[:, 0].astype(cache.v.dtype))
+    rows = jnp.arange(B)
+    k = cache.k.at[rows, slot].set(k_new[:, 0].astype(cache.k.dtype))
+    v = cache.v.at[rows, slot].set(v_new[:, 0].astype(cache.v.dtype))
 
-    # validity of each physical slot
+    # validity of each physical slot, per row
     slot_ids = jnp.arange(cache.slots)
     if window:
-        valid = slot_ids < jnp.minimum(pos + 1, cache.slots)
+        valid = slot_ids[None, :] < jnp.minimum(pos + 1, cache.slots)[:, None]
     else:
-        valid = slot_ids <= pos
-    mask = jnp.broadcast_to(valid[None, None, :], (B, 1, cache.slots))
+        valid = slot_ids[None, :] <= pos[:, None]
+    mask = valid[:, None, :]                                    # (B, 1, slots)
 
     q = q.reshape(B, 1, n_kv, G, head_dim)
     out = _grouped_attend(q, k.astype(q.dtype), v.astype(q.dtype), mask)

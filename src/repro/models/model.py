@@ -92,6 +92,30 @@ def init_decode_state(cfg: ModelConfig, batch: int, slots: int,
     raise KeyError(cfg.family)
 
 
+def decode_state_batch_axes(cfg: ModelConfig):
+    """Pytree (matching ``init_decode_state``'s structure) of the BATCH axis
+    per state leaf — the axis indexed by sequence slot. Slot serving
+    (``DecodeEngine.step_slots``) uses this to write-mask, gather, and reset
+    individual sequences' state rows without knowing each family's layout.
+    ``index`` reads as axis 0 of the per-row ``(B,)`` vector form (scalar
+    index states cannot be slot-masked — positions must be per row).
+    """
+    from repro.models.attention import KVCache
+    from repro.models.mamba2 import HybridState
+    from repro.models.rwkv6 import RWKVState
+    from repro.models.whisper import EncDecState
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        return KVCache(k=1, v=1, index=0)
+    if cfg.family == "ssm":
+        return RWKVState(shift_tm=1, shift_cm=1, wkv=1, index=0)
+    if cfg.family == "hybrid":
+        return HybridState(conv=1, ssm=1, kv=1, vv=1, index=0)
+    if cfg.family == "encdec":
+        return EncDecState(k=1, v=1, memory=0, index=0)
+    raise KeyError(cfg.family)
+
+
 def decode_apply(params: dict, cfg: ModelConfig, token: Array, state, *,
                  window: int = 0):
     if cfg.family == "dense":

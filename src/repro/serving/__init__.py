@@ -1,29 +1,51 @@
-"""repro.serving — serving engines, the solver-zoo cache, and the gateway.
+"""repro.serving — TWO engines behind one gateway front-end.
 
-``engine``  — ``FlowSampler`` (one budget), ``AnytimeFlowSampler`` (budget-
-              routed multi-NFE serving from one artifact), ``DecodeEngine``;
+The serving stack batches both of the repo's engines through the same
+queue/batcher machinery (``GatewayBase``: intake, serve thread, drain,
+stats):
+
+* FLOW — ``FlowSampler`` / ``AnytimeFlowSampler`` (the paper's product:
+  m-forward BNS sampling, budget-routed multi-NFE serving from one
+  artifact), fronted by ``Gateway`` (budget-coalescing padded flush
+  batches) and ``ContinuousGateway`` (requests join in-flight anytime
+  trajectories at exit boundaries).
+* DECODE — ``DecodeEngine`` (autoregressive decode with KV-cache /
+  recurrent state, jit'd multi-token ``greedy`` plus the slot-masked
+  ``step_slots`` API), fronted by ``DecodeGateway`` (continuous batching
+  over per-sequence state slots: finished sequences free their row, queued
+  sequences are admitted at the next engine step, per-slot stop
+  conditions).
+
+Module map:
+
+``engine``  — ``FlowSampler``, ``AnytimeFlowSampler``, ``DecodeEngine``;
 ``zoo``     — ``SolverZoo``, the LRU SolverSpec -> SolverArtifact cache with
               directory scan, lazy distill-on-miss, preload and spill;
-``gateway`` — ``Gateway``/``BatchScheduler``, the multi-user front-end:
-              async request queue, budget-coalescing padded batches, mixed-
-              budget shared-trajectory dispatch, serving metrics;
+``gateway`` — ``GatewayBase``/``Gateway``/``BatchScheduler``: async request
+              queue, budget-coalescing padded batches, mixed-budget shared-
+              trajectory dispatch, shared serving metrics;
+``continuous`` — ``ContinuousGateway``/``ContinuousScheduler``, flow-side
+              continuous batching at anytime exit boundaries;
+``decode``  — ``DecodeGateway``/``DecodeRequest``/``DecodeResponse``,
+              decode-side continuous batching over fixed state slots;
 ``sharded`` — mesh placement for gateway batches (params via
               ``distributed.sharding``, batches split along the data axes);
-``continuous`` — ``ContinuousGateway``/``ContinuousScheduler``, continuous
-              batching: requests join in-flight anytime trajectories at
-              exit boundaries instead of waiting for the next flush.
+``toy``     — protocol-complete toy sampler/engine for benchmarks + tests.
 """
 from repro.serving.continuous import ContinuousGateway, ContinuousScheduler
+from repro.serving.decode import DecodeGateway, DecodeRequest, DecodeResponse
 from repro.serving.engine import (
     AnytimeFlowSampler,
     DecodeEngine,
     FlowSampler,
+    greedy_demo,
     nearest_budget,
     nearest_latent_tokens,
 )
 from repro.serving.gateway import (
     BatchScheduler,
     Gateway,
+    GatewayBase,
     GatewayStats,
     Request,
     RequestQueue,
@@ -32,7 +54,8 @@ from repro.serving.gateway import (
 from repro.serving.zoo import SolverZoo, ZooStats
 
 __all__ = ["AnytimeFlowSampler", "BatchScheduler", "ContinuousGateway",
-           "ContinuousScheduler", "DecodeEngine", "FlowSampler", "Gateway",
-           "GatewayStats", "Request", "RequestQueue", "Response",
-           "SolverZoo", "ZooStats", "nearest_budget",
-           "nearest_latent_tokens"]
+           "ContinuousScheduler", "DecodeEngine", "DecodeGateway",
+           "DecodeRequest", "DecodeResponse", "FlowSampler", "Gateway",
+           "GatewayBase", "GatewayStats", "Request", "RequestQueue",
+           "Response", "SolverZoo", "ZooStats", "greedy_demo",
+           "nearest_budget", "nearest_latent_tokens"]

@@ -105,19 +105,25 @@ class ContinuousScheduler(BatchScheduler):
 
     def plan_start(self, pending: Sequence[_Entry], now: float,
                    force: bool = False) -> list[_Entry]:
-        """The FIFO slate opening a new trajectory: entries sharing the
-        oldest entry's sample shape, up to ``max_slots``, once the slots
-        would fill or the oldest same-shape entry has aged out (the same
-        full-or-aged rule ``BatchScheduler.plan`` applies to flushes)."""
-        pending = sorted(pending, key=lambda e: e.uid)
-        if not pending:
-            return []
-        shape = pending[0].shape_key
-        same = [e for e in pending if e.shape_key == shape]
-        aged = any(now - e.t_submit >= self.max_wait_s for e in same)
-        if not (force or aged or len(same) >= self.max_slots):
-            return []
-        return same[:self.max_slots]
+        """The FIFO slate opening a new trajectory: same-shape entries, up
+        to ``max_slots``, once the slots would fill or the oldest entry of
+        that shape has aged out (the same full-or-aged rule
+        ``BatchScheduler.plan`` applies to flushes).
+
+        Shape groups are considered INDEPENDENTLY, oldest group first —
+        gating the slate on the overall-oldest entry's shape let one unaged
+        singleton park a full (or aged) slate of another shape forever
+        (head-of-line blocking across shapes). Mixed-shape traffic now
+        starts whichever shape group is ready; the passed-over group stays
+        pending and opens the next trajectory."""
+        groups: dict[tuple, list[_Entry]] = {}
+        for e in sorted(pending, key=lambda e: e.uid):
+            groups.setdefault(e.shape_key, []).append(e)
+        for same in groups.values():     # insertion order = oldest-first
+            aged = any(now - e.t_submit >= self.max_wait_s for e in same)
+            if force or aged or len(same) >= self.max_slots:
+                return same[:self.max_slots]
+        return []
 
     def plan_joins(self, pending: Sequence[_Entry], boundary: int,
                    free_slots: int, shape_key: tuple) -> list[_Entry]:
@@ -233,18 +239,19 @@ class ContinuousGateway(Gateway):
                 starters = self.scheduler.plan_start(
                     self.queue.snapshot(), self.clock(), force=force)
                 if starters:
-                    self.queue.remove({e.uid for e in starters})
+                    self._take(starters)
                     try:
                         self._start_trajectory(starters, self.clock())
                     except BaseException as exc:  # noqa: BLE001
                         self._fail_entries(starters, exc, count_all=True)
+                        self._settle(len(starters))
                         self._traj = None
                     ran += 1
             # interleave flushes: whatever neither joined nor started still
             # obeys the flush-only rules (full buckets now, partials aged)
             batches = self.scheduler.plan(
                 self.queue.snapshot(), self.clock(), force=force)
-            self.queue.remove({e.uid for b in batches for e in b.entries})
+            self._take([e for b in batches for e in b.entries])
         return ran + self._run_batches(batches)
 
     def _start_trajectory(self, starters: list, now: float) -> None:
@@ -295,7 +302,7 @@ class ContinuousGateway(Gateway):
                 self.queue.snapshot(), boundary, len(traj.free_slots()),
                 traj.shape_key)
             if joiners:
-                self.queue.remove({e.uid for e in joiners})
+                self._take(joiners)
                 try:
                     self._admit(traj, joiners, boundary)
                 except BaseException as exc:  # noqa: BLE001
@@ -304,6 +311,7 @@ class ContinuousGateway(Gateway):
                     # own carry is untouched (assigned only after every
                     # scatter lands), so the in-flight slots roll on.
                     self._fail_entries(joiners, exc, count_all=True)
+                    self._settle(len(joiners))
         if not traj.active():
             self._traj = None
 
@@ -316,6 +324,7 @@ class ContinuousGateway(Gateway):
             s.completed += 1
             s.sum_wait_ms += wait_ms
             s.max_wait_ms = max(s.max_wait_ms, wait_ms)
+            self._inflight -= 1      # taken at plan_start/plan_joins
         response = Response(latents=row, meta={
             "requested_budget": e.requested,
             "served_budget": e.served,
@@ -372,15 +381,13 @@ class ContinuousGateway(Gateway):
         alive — the trajectory twin of ``_run_batches``' per-batch guard."""
         traj, self._traj = self._traj, None
         if traj is not None:
-            self._fail_entries([e for _, e in traj.active()], exc,
-                               count_all=True)
+            entries = [e for _, e in traj.active()]
+            self._fail_entries(entries, exc, count_all=True)
+            self._settle(len(entries))
 
     # -- lifecycle -----------------------------------------------------------
 
-    def drain(self) -> None:
-        """Graceful drain: refuse new requests, flush every pending one AND
-        run the in-flight trajectory to completion."""
-        with self._intake_lock:
-            self._closed = True
-        while self.queue.depth() or self._traj is not None:
-            self.pump(force=True)
+    def _drained(self) -> bool:
+        """Drain additionally runs the in-flight trajectory to completion
+        (its slots are in flight anyway — belt and braces)."""
+        return super()._drained() and self._traj is None

@@ -1,0 +1,300 @@
+"""Decode-side gateway: continuous batching over ``DecodeEngine``.
+
+The flow gateways batch the paper's BNS sampler; this module batches the
+serving stack's SECOND engine — autoregressive decode with KV-cache /
+recurrent state. Callers ``submit`` a ``DecodeRequest(prompt, max_tokens)``
+and get a ``Future[DecodeResponse]``; the gateway multiplexes every accepted
+sequence onto the rows of ONE fixed-slot batched decode state
+(``DecodeEngine.init_slot_state``), so each engine step costs one backbone
+forward for the whole slot batch regardless of how many sequences ride it.
+
+Continuous slot refill
+----------------------
+* Each sequence owns a STATE SLOT: one row of the batched KV/recurrent
+  state, at its own decode position (the per-row ``index`` vector — the
+  decode twin of PR 4's trajectory slots, with per-slot write masks instead
+  of exit boundaries).
+* A sequence finishing (``max_tokens`` reached or ``stop_token`` emitted)
+  resolves its future immediately and FREES its slot; queued sequences are
+  admitted into freed slots at the very next engine step — the batch never
+  drains to empty before refilling (run-to-completion batching does, and
+  pays ``max(lengths)`` wall-steps per wave; see ``refill=False`` and
+  ``benchmarks/decode_bench.py``).
+* Admission resets the slot's state row to zeros (``reset_slots``) and
+  feeds the prompt token by token (teacher-forced prefill), then greedy
+  decode continues from the prompt's last token. Rows are independent
+  through the backbone and each row carries its own position, so a
+  sequence admitted into a freed slot produces tokens BIT-IDENTICAL to
+  decoding it alone (MoE: in the no-capacity-drop regime, as for batched
+  decode generally).
+
+Stop conditions are per slot: ``max_tokens`` caps generation (finish_reason
+``"length"``), ``stop_token`` ends it early (``"stop"``; the stop token is
+not included in the returned tokens).
+
+Stats ride the shared ``GatewayStats``: ``forwards`` counts engine steps
+(one backbone forward each), ``tokens_out``/``tokens_per_s`` the generated
+tokens, ``slot_occupancy`` the active-slot share of every step taken;
+``trajectories`` counts engine-batch lifetimes (idle -> busy -> idle) and
+``joins`` the sequences admitted while other slots were mid-flight — the
+continuous-refill events.
+
+``GatewayBase`` supplies intake, the serve-thread lifecycle, drain (waits on
+in-flight sequences, not just queue depth), and the ``stats()`` snapshot.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from concurrent.futures import Future
+from typing import Callable, Optional, Sequence, Union
+
+import numpy as np
+
+from repro.serving.gateway import GatewayBase
+
+
+@dataclasses.dataclass
+class DecodeRequest:
+    """One user's decode request: prompt tokens (at least one; fed
+    teacher-forced), a generation cap, and an optional stop token."""
+
+    prompt: Union[Sequence[int], np.ndarray]
+    max_tokens: int = 16
+    stop_token: Optional[int] = None
+
+
+@dataclasses.dataclass
+class DecodeResponse:
+    """Generated tokens plus serving metadata.
+
+    ``meta`` records: finish_reason ("length" | "stop"), prompt_len,
+    new_tokens, steps (engine steps this sequence was resident for =
+    backbone forwards it shared), slot, join_step (engine step at
+    admission; > 0 means the sequence joined an in-flight batch), wait_ms
+    (queue time — waits end at admission).
+    """
+
+    tokens: np.ndarray
+    meta: dict
+
+
+@dataclasses.dataclass
+class _DecodeEntry:
+    uid: int
+    prompt: np.ndarray
+    max_tokens: int
+    stop_token: Optional[int]
+    t_submit: float
+    future: Future
+    t_admit: Optional[float] = None
+    join_step: int = 0          # engine step at admission (0 = opened batch)
+
+
+@dataclasses.dataclass
+class _Slot:
+    """Host bookkeeping for one occupied state row: the sequence it serves,
+    how much of its prompt has been fed, and what it has generated."""
+
+    entry: _DecodeEntry
+    pos: int = 1                # prompt tokens already fed
+    emitted: list = dataclasses.field(default_factory=list)
+
+
+class DecodeGateway(GatewayBase):
+    """Continuous-batching front-end over one ``DecodeEngine``.
+
+    ``submit(DecodeRequest) -> Future[DecodeResponse]``; ``pump()`` is one
+    engine tick: admit queued sequences into free slots, then run one
+    write-masked decode step over the slot batch (``engine.step_slots``)
+    and advance each active sequence (prefill feed, greedy continue, or
+    finish). ``start()``/``drain()``/``shutdown()`` come from
+    ``GatewayBase``; the unit tests and ``benchmarks/decode_bench.py``
+    drive ``pump`` directly with a fake clock.
+
+    ``refill=False`` degrades admission to run-to-completion batching (new
+    sequences wait until EVERY slot is free) — the baseline the decode
+    benchmark gates continuous refill against.
+
+    The engine only needs the slot protocol (``init_slot_state``,
+    ``step_slots``, ``reset_slots``) — ``DecodeEngine`` for real backbones,
+    ``repro.serving.toy.ToyDecodeEngine`` for deterministic simulation.
+    """
+
+    def __init__(self, engine, *, max_slots: int = 8, cache_slots: int = 128,
+                 dtype=None, refill: bool = True,
+                 clock: Callable[[], float] = time.monotonic):
+        if max_slots < 1:
+            raise ValueError("max_slots must be >= 1")
+        if getattr(getattr(engine, "cfg", None), "family", None) == "encdec":
+            # encdec decode cross-attends per-sequence ENCODER MEMORY the
+            # slot protocol has no hook to supply (init_slot_state zero-
+            # fills it) — serving would silently produce garbage tokens
+            raise TypeError(
+                "DecodeGateway cannot serve encoder-decoder engines: the "
+                "slot state has no per-request encoder memory; decode "
+                "encdec batches through DecodeEngine.greedy with a "
+                "prefilled state instead")
+        super().__init__(clock=clock)
+        self.engine = engine
+        self.max_slots = max_slots
+        self.refill = refill
+        # non-windowed KV-cache families clamp writes past the cache's last
+        # physical slot (silently degraded tokens) — reject over-length
+        # requests at submit instead (None = unbounded: ring buffer,
+        # recurrent state, toy engines)
+        self._capacity = (cache_slots
+                          if getattr(engine, "seq_capacity_bounded", False)
+                          else None)
+        state_kw = {} if dtype is None else {"dtype": dtype}
+        self._state = engine.init_slot_state(max_slots, cache_slots,
+                                             **state_kw)
+        self._slots: list[Optional[_Slot]] = [None] * max_slots
+        self._feed = np.zeros((max_slots,), np.int32)   # next token per slot
+        self._steps = 0                                  # engine steps run
+
+    # -- intake ---------------------------------------------------------------
+
+    def submit(self, request: Optional[DecodeRequest] = None, **kw) -> Future:
+        """Enqueue one sequence; returns a Future[DecodeResponse]."""
+        if request is None:
+            request = DecodeRequest(**kw)
+        prompt = np.asarray(request.prompt, np.int32).reshape(-1)
+        if prompt.size < 1:
+            raise ValueError("prompt needs at least one token")
+        if request.max_tokens < 1:
+            raise ValueError("max_tokens must be >= 1")
+        # worst-case positions used (length-finish): (P-1) prefill steps +
+        # max_tokens generation steps write positions 0..P+T-2
+        if (self._capacity is not None
+                and prompt.size + request.max_tokens - 1 > self._capacity):
+            raise ValueError(
+                f"prompt ({prompt.size}) + max_tokens "
+                f"({request.max_tokens}) exceeds the decode cache capacity "
+                f"({self._capacity} slots); raise cache_slots or lower "
+                "max_tokens")
+        entry = _DecodeEntry(uid=next(self._uid), prompt=prompt,
+                             max_tokens=int(request.max_tokens),
+                             stop_token=request.stop_token,
+                             t_submit=self.clock(), future=Future())
+        return self._enqueue(entry)
+
+    # -- engine tick ----------------------------------------------------------
+
+    def pump(self, force: bool = False) -> int:
+        """One engine tick: admit into free slots, one masked decode step."""
+        with self._plan_lock:
+            self._admit()
+            active = np.array([s is not None for s in self._slots])
+            if not active.any():
+                return 0
+            try:
+                nxt, state = self.engine.step_slots(self._feed.copy(),
+                                                    self._state, active)
+            except BaseException as exc:  # noqa: BLE001 — see _fail_slots
+                self._fail_slots(exc)
+                return 1
+            self._state = state
+            nxt = np.asarray(nxt)
+            self._steps += 1
+            with self._stats_lock:
+                s = self.stats_raw
+                s.forwards += 1          # one backbone forward per step
+                s.batches += 1
+                s.real_rows += int(active.sum())
+                s.padded_rows += self.max_slots
+                s.slot_steps_active += int(active.sum())
+                s.slot_steps_total += self.max_slots
+            for i, slot in enumerate(self._slots):
+                if slot is not None:
+                    self._advance_slot(i, slot, int(nxt[i]))
+            return 1
+
+    def _admit(self) -> None:
+        """Admit queued sequences (FIFO) into free slots: reset each freed
+        row to the zero state and feed the sequence's first prompt token on
+        the next step. Admission is immediate — the latency win — unless
+        ``refill=False`` holds new sequences until the whole batch drains."""
+        free = [i for i, s in enumerate(self._slots) if s is None]
+        busy = self.max_slots - len(free)
+        if not free or (not self.refill and busy):
+            return
+        pending = sorted(self.queue.snapshot(),
+                         key=lambda e: e.uid)[:len(free)]
+        if not pending:
+            return
+        self._take(pending)
+        assigned = list(zip(free, pending))
+        mask = np.zeros((self.max_slots,), bool)
+        for i, _ in assigned:
+            mask[i] = True
+        self._state = self.engine.reset_slots(self._state, mask)
+        now = self.clock()
+        for i, e in assigned:
+            e.t_admit, e.join_step = now, self._steps
+            self._slots[i] = _Slot(entry=e)
+            self._feed[i] = e.prompt[0]
+        with self._stats_lock:
+            s = self.stats_raw
+            if busy:
+                s.joins += len(assigned)   # continuous refill mid-flight
+            else:
+                s.trajectories += 1        # opened a fresh engine batch
+
+    def _advance_slot(self, si: int, slot: _Slot, tok: int) -> None:
+        """Advance one active sequence given the model's prediction ``tok``
+        for the token its row was just fed."""
+        e = slot.entry
+        if slot.pos < len(e.prompt):
+            # prefill: the prediction is discarded, the next prompt token
+            # is fed teacher-forced
+            self._feed[si] = e.prompt[slot.pos]
+            slot.pos += 1
+            return
+        if e.stop_token is not None and tok == e.stop_token:
+            self._finish(si, slot, "stop")
+            return
+        slot.emitted.append(tok)
+        if len(slot.emitted) >= e.max_tokens:
+            self._finish(si, slot, "length")
+            return
+        self._feed[si] = tok
+
+    def _finish(self, si: int, slot: _Slot, reason: str) -> None:
+        """Resolve one sequence's future and free its slot — the next
+        ``_admit`` can scatter a fresh sequence into the row."""
+        e = slot.entry
+        wait_ms = (e.t_admit - e.t_submit) * 1e3
+        with self._stats_lock:
+            s = self.stats_raw
+            s.completed += 1
+            s.tokens_out += len(slot.emitted)
+            s.sum_wait_ms += wait_ms
+            s.max_wait_ms = max(s.max_wait_ms, wait_ms)
+            self._inflight -= 1        # taken at admission
+        response = DecodeResponse(
+            tokens=np.asarray(slot.emitted, np.int32),
+            meta={
+                "finish_reason": reason,
+                "prompt_len": int(len(e.prompt)),
+                "new_tokens": len(slot.emitted),
+                "steps": self._steps - e.join_step,
+                "slot": si,
+                "join_step": e.join_step,
+                "wait_ms": wait_ms,
+            })
+        try:
+            e.future.set_result(response)
+        except Exception:              # cancelled: the batch rolls on
+            pass
+        self._slots[si] = None
+
+    def _fail_slots(self, exc: BaseException) -> None:
+        """Surface a failing engine step into every resident sequence's
+        future and free all slots, keeping the serve thread alive (the
+        decode twin of ``ContinuousGateway._fail_trajectory``). Freed rows
+        hold stale state; admission resets them before reuse."""
+        entries = [s.entry for s in self._slots if s is not None]
+        self._fail_entries(entries, exc, count_all=True)
+        self._settle(len(entries))
+        self._slots = [None] * self.max_slots

@@ -23,11 +23,16 @@ Budget-routing contract: the sampler owns the anytime solver's served
     budgets at once (mixed-budget batches, evaluation).
 
 ``DecodeEngine`` — batched autoregressive decode with KV cache / recurrent
-state (the ``serve_step`` the decode dry-run shapes lower).
+state (the ``serve_step`` the decode dry-run shapes lower). ``greedy`` is a
+jit'd ``lax.scan`` multi-token program; the slot API (``init_slot_state`` /
+``step_slots`` / ``reset_slots``) serves independent sequences from the rows
+of one fixed-slot batched state — the substrate of the decode-side
+continuous-batching gateway (``repro.serving.decode.DecodeGateway``).
 """
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Callable, Optional
 
 import jax
@@ -270,6 +275,25 @@ class AnytimeFlowSampler:
 
 @dataclasses.dataclass
 class DecodeEngine:
+    """Batched autoregressive decode with KV cache / recurrent state.
+
+    Two serving surfaces:
+
+    * ``greedy(prompt, state, num_steps)`` — run-to-completion batched
+      decode: one jit'd ``lax.scan`` program per ``num_steps``, compiled
+      once and cached (the old host-side per-token Python loop paid a
+      device dispatch round-trip per token).
+    * slot serving — ``init_slot_state`` builds a fixed-slot batched state
+      whose rows are INDEPENDENT sequences at their own decode positions
+      (per-row ``index`` vector); ``step_slots`` advances only the rows
+      picked by the active mask (write-masked state update) and
+      ``reset_slots`` re-zeroes freed rows for the next admission. Rows
+      are independent through the backbone, so a slot's tokens are
+      bit-identical to decoding its sequence alone (MoE: in the
+      no-capacity-drop regime, as for batched decode generally). This is
+      the substrate of ``repro.serving.decode.DecodeGateway``.
+    """
+
     params: dict
     cfg: ModelConfig
     window: int = 0
@@ -280,16 +304,110 @@ class DecodeEngine:
                                   window=self.window)
 
         self._step = jax.jit(_step)
+        self._greedy_fns: dict[int, Callable] = {}
+
+        def _mask_rows(mask, new, old):
+            """Per-leaf row select: ``mask`` picks rows (along each leaf's
+            batch axis) that take ``new``; other rows keep ``old``."""
+            axes = M.decode_state_batch_axes(self.cfg)
+
+            def keep(ax, n, o):
+                shape = [1] * n.ndim
+                shape[ax] = mask.shape[0]
+                return jnp.where(mask.reshape(shape), n, o)
+
+            return jax.tree.map(keep, axes, new, old)
+
+        def _step_slots(params, token, state, active):
+            logits, new = M.decode_apply(params, self.cfg, token, state,
+                                         window=self.window)
+            state = _mask_rows(active, new, state)
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32), state
+
+        self._step_slots = jax.jit(_step_slots)
+
+        def _reset_slots(state, free):
+            zeros = jax.tree.map(jnp.zeros_like, state)
+            return _mask_rows(free, zeros, state)
+
+        self._reset_slots = jax.jit(_reset_slots)
 
     def init_state(self, batch: int, slots: int, dtype=jnp.float32):
         return M.init_decode_state(self.cfg, batch, slots, dtype)
 
+    @property
+    def seq_capacity_bounded(self) -> bool:
+        """True when decode positions must fit the cache's physical slots:
+        the non-windowed KV-cache families silently clamp writes to the
+        last slot past capacity (degraded tokens, no error). Sliding-window
+        ring buffers and pure recurrent state decode unbounded lengths."""
+        return self.window == 0 and self.cfg.family != "ssm"
+
+    def step(self, token: Array, state):
+        """One batched decode step: token (B,) -> (logits (B, V), state)."""
+        return self._step(self.params, token, state)
+
     def greedy(self, prompt: Array, state, num_steps: int) -> tuple[Array, object]:
-        """prompt: (B,) last prompt token. Returns (B, num_steps) tokens."""
-        outs = []
-        token = prompt
-        for _ in range(num_steps):
-            logits, state = self._step(self.params, token, state)
-            token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-            outs.append(token)
-        return jnp.stack(outs, axis=1), state
+        """prompt: (B,) last prompt token. Returns (B, num_steps) tokens.
+
+        The whole multi-token loop is ONE jit'd ``lax.scan`` program per
+        ``num_steps`` (cached), so a serving session pays one compile and
+        then zero host round-trips inside the decode loop.
+        """
+        fn = self._greedy_fns.get(num_steps)
+        if fn is None:
+            def _greedy(params, token, state):
+                def body(carry, _):
+                    token, state = carry
+                    logits, state = M.decode_apply(params, self.cfg, token,
+                                                   state, window=self.window)
+                    token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+                    return (token, state), token
+
+                (_, state), toks = jax.lax.scan(body, (token, state), None,
+                                                length=num_steps)
+                return jnp.swapaxes(toks, 0, 1), state
+
+            fn = self._greedy_fns[num_steps] = jax.jit(_greedy)
+        return fn(self.params, prompt, state)
+
+    # -- slot serving (decode-side continuous batching) ----------------------
+
+    def init_slot_state(self, slots: int, cache_slots: int,
+                        dtype=jnp.float32):
+        """Fixed-slot batched decode state with PER-ROW positions: row i
+        serves an independent sequence; ``index`` is a (slots,) vector so
+        sequences admitted at different times sit at different positions."""
+        state = M.init_decode_state(self.cfg, slots, cache_slots, dtype)
+        return state._replace(index=jnp.zeros((slots,), jnp.int32))
+
+    def step_slots(self, token: Array, state, active: Array):
+        """One write-masked decode step over the slot batch.
+
+        ``token`` (slots,) feeds each row; rows where ``active`` is False
+        still flow through the backbone (fixed batch shape — one compiled
+        program regardless of occupancy) but their state rows and positions
+        are left untouched. Returns (next greedy token (slots,), state)."""
+        return self._step_slots(self.params, token, state, active)
+
+    def reset_slots(self, state, free: Array):
+        """Scatter a fresh zero state into the rows where ``free`` is True
+        (``init_decode_state`` is all-zeros), readying them for admission
+        of a new sequence at position 0."""
+        return self._reset_slots(state, free)
+
+
+def greedy_demo(engine: DecodeEngine, batch: int, steps: int,
+                cache_slots: int, prompt: Optional[Array] = None
+                ) -> tuple[Array, float]:
+    """Shared solo-decode demo loop (``launch/serve.py --mode decode`` and
+    ``examples/serve_decode.py`` previously each had their own copy): fresh
+    state, ``steps`` greedy tokens, returns (tokens, ms_per_token)."""
+    state = engine.init_state(batch, cache_slots)
+    if prompt is None:
+        prompt = jnp.zeros((batch,), jnp.int32)
+    t0 = time.time()
+    tokens, _ = engine.greedy(prompt, state, steps)
+    jax.block_until_ready(tokens)
+    dt_ms = (time.time() - t0) / steps * 1e3
+    return tokens, dt_ms

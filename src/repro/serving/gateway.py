@@ -53,6 +53,11 @@ this gateway so queued requests are admitted into IN-FLIGHT anytime
 trajectories at exit boundaries instead of waiting for the next flush; its
 scheduler adds slot admission/release planning on top of ``BatchScheduler``
 and its pump interleaves joins with these flushes.
+
+``GatewayBase`` holds everything sampler-agnostic (intake, serve thread,
+drain with in-flight accounting, locked stats snapshot) — it also fronts
+the DECODE engine via ``repro.serving.decode.DecodeGateway``, so both of
+the repo's engines serve through one queue/lifecycle/stats stack.
 """
 from __future__ import annotations
 
@@ -300,9 +305,180 @@ class GatewayStats:
     join_forwards: int = 0     # forwards spent computing join prefixes
     slot_steps_active: int = 0  # occupied slot-steps across trajectory legs
     slot_steps_total: int = 0   # max_slots * steps across trajectory legs
+    # decode serving (zero under the flow gateways):
+    tokens_out: int = 0        # generated tokens delivered to clients
 
 
-class Gateway:
+class GatewayBase:
+    """Shared request-queue front-end: thread-safe intake, the serve-thread
+    lifecycle, drain, in-flight accounting, and aggregate ``stats()`` — the
+    machinery common to the flow gateways (``Gateway``/``ContinuousGateway``)
+    and the decode gateway (``repro.serving.decode.DecodeGateway``).
+
+    Subclasses implement ``submit`` (build an entry, hand it to
+    ``_enqueue``) and ``pump`` (plan one tick: pull planned entries off the
+    queue with ``_take``, and ``_settle`` them once their futures resolve
+    or fail).
+    """
+
+    def __init__(self, clock: Callable[[], float] = time.monotonic):
+        self.clock = clock
+        self.queue = RequestQueue()
+        self.stats_raw = GatewayStats(started=clock())
+        self._uid = itertools.count()
+        self._plan_lock = threading.Lock()
+        self._intake_lock = threading.Lock()   # closed-check + push atomic
+        self._stats_lock = threading.Lock()    # drain + serve thread both run
+        #                                        _execute; '+=' is not atomic
+        self._inflight = 0   # entries off the queue, futures still unresolved
+        self._closed = False
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+
+    # -- intake ---------------------------------------------------------------
+
+    def _enqueue(self, entry) -> Future:
+        """Push one entry; the closed check and the push are one atomic step
+        wrt ``drain()`` — once drain flips ``_closed`` (under this lock), no
+        entry can slip in after its final flush and strand an unresolved
+        future. The submitted counter moves under ``_stats_lock`` like every
+        other counter, and BEFORE the push, so no ``stats()`` snapshot can
+        show ``completed > submitted``."""
+        with self._intake_lock:
+            if self._closed:
+                raise RuntimeError("gateway is draining; no new requests")
+            with self._stats_lock:
+                self.stats_raw.submitted += 1
+            self.queue.push(entry)
+        return entry.future
+
+    # -- in-flight accounting -------------------------------------------------
+
+    def _take(self, entries: Sequence) -> None:
+        """Remove planned entries from the queue and mark them IN FLIGHT.
+        ``drain()`` waits on this count, not just queue depth: entries a
+        concurrent serve-thread pump has removed and is still executing are
+        invisible to the queue, and the old depth-only loop could return
+        with their futures unresolved.
+
+        The increment happens BEFORE the queue removal (and ``_drained``
+        reads depth before in-flight): an entry is therefore visible to at
+        least one of the two checks at every instant of the hand-off —
+        counting it twice momentarily is safe, missing it is the race."""
+        with self._stats_lock:
+            self._inflight += len(entries)
+        self.queue.remove({e.uid for e in entries})
+
+    def _settle(self, n: int) -> None:
+        """Mark ``n`` taken entries resolved (result or exception set)."""
+        with self._stats_lock:
+            self._inflight -= n
+
+    def _fail_entries(self, entries: Sequence, exc: BaseException,
+                      count_all: bool = False) -> None:
+        """Surface ``exc`` into every still-unresolved future. A future the
+        client already cancelled rejects ``set_exception``; that must not
+        keep the failure from reaching its batch-mates."""
+        failed = 0
+        for e in entries:
+            try:
+                e.future.set_exception(exc)
+                failed += 1
+            except Exception:       # cancelled/raced future: nothing to do
+                failed += int(count_all)
+        with self._stats_lock:
+            self.stats_raw.failed += failed
+
+    # -- scheduling -----------------------------------------------------------
+
+    def pump(self, force: bool = False) -> int:
+        raise NotImplementedError
+
+    # -- lifecycle ------------------------------------------------------------
+
+    def serve_forever(self, poll_s: float = 0.001) -> None:
+        """Pump until ``stop``; sleeps ``poll_s`` when there is no work."""
+        while not self._stop.is_set():
+            if self.pump() == 0:
+                time.sleep(poll_s)
+
+    def start(self, poll_s: float = 0.001) -> threading.Thread:
+        if self._thread is not None and self._thread.is_alive():
+            return self._thread
+        self._stop.clear()
+        self._thread = threading.Thread(
+            target=self.serve_forever, kwargs={"poll_s": poll_s},
+            name="gateway-serve", daemon=True)
+        self._thread.start()
+        return self._thread
+
+    def _drained(self) -> bool:
+        # depth FIRST, in-flight second — the mirror of _take's ordering.
+        # If depth reads 0 because a concurrent _take just removed the
+        # entry, its in-flight increment already happened, so the second
+        # read catches it (unless it also settled, i.e. resolved — drained).
+        if self.queue.depth():
+            return False
+        with self._stats_lock:
+            return self._inflight == 0
+
+    def drain(self) -> None:
+        """Graceful drain: refuse new requests, then pump until every
+        accepted request has RESOLVED — queue empty AND nothing in flight
+        (a batch a concurrent serve-thread pump is still executing counts;
+        spinning on queue depth alone returned early on exactly that)."""
+        with self._intake_lock:
+            self._closed = True        # no submit can pass the check now
+        while not self._drained():
+            if self.pump(force=True) == 0:
+                time.sleep(5e-4)       # a concurrent pump holds the work
+
+    def stop(self) -> None:
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join(timeout=10)
+            self._thread = None
+
+    def shutdown(self) -> None:
+        self.drain()
+        self.stop()
+
+    # -- metrics --------------------------------------------------------------
+
+    def stats(self) -> dict[str, Any]:
+        """Aggregate serving metrics as one flat dict. The counters are
+        SNAPSHOT under ``_stats_lock`` (they mutate from both the serve
+        thread and drain), so derived ratios are internally consistent."""
+        with self._stats_lock:
+            s = dataclasses.replace(self.stats_raw)
+        elapsed = max(self.clock() - s.started, 1e-9)
+        return {
+            "queue_depth": self.queue.depth(),
+            "submitted": s.submitted,
+            "completed": s.completed,
+            "failed": s.failed,
+            "batches": s.batches,
+            "mixed_batches": s.mixed_batches,
+            "forwards": s.forwards,
+            "nfe_per_request": s.forwards / max(s.completed, 1),
+            "occupancy": s.real_rows / max(s.padded_rows, 1),
+            "mean_wait_ms": s.sum_wait_ms / max(s.completed, 1),
+            "max_wait_ms": s.max_wait_ms,
+            "throughput_rps": s.completed / elapsed,
+            # continuous batching (all zero under the flush-only gateway)
+            "trajectories": s.trajectories,
+            "legs": s.legs,
+            "joins": s.joins,
+            "join_rate": s.joins / max(s.completed, 1),
+            "slot_occupancy": (s.slot_steps_active / s.slot_steps_total
+                               if s.slot_steps_total else 0.0),
+            # decode serving (zero under the flow gateways)
+            "tokens_out": s.tokens_out,
+            "tokens_per_s": s.tokens_out / elapsed,
+        }
+
+
+class Gateway(GatewayBase):
     """Multi-user front-end over one budget-routing sampler.
 
     ``submit(request) -> Future[Response]``; ``pump()`` plans and executes
@@ -319,6 +495,7 @@ class Gateway:
                  mixed_budget_policy: str = "auto", strict_nfe: bool = False,
                  mesh=None, clock: Callable[[], float] = time.monotonic,
                  key: Optional[Array] = None):
+        super().__init__(clock=clock)
         self.sampler = sampler
         can_mix = (hasattr(sampler, "sample_all_from")
                    and len(sampler.budgets) > 1)
@@ -327,17 +504,6 @@ class Gateway:
             policy=mixed_budget_policy, can_mix=can_mix,
             top_budget=max(sampler.budgets))
         self.strict_nfe = strict_nfe
-        self.clock = clock
-        self.queue = RequestQueue()
-        self.stats_raw = GatewayStats(started=clock())
-        self._uid = itertools.count()
-        self._plan_lock = threading.Lock()
-        self._intake_lock = threading.Lock()   # closed-check + push atomic
-        self._stats_lock = threading.Lock()    # drain + serve thread both run
-        #                                        _execute; '+=' is not atomic
-        self._closed = False
-        self._stop = threading.Event()
-        self._thread: Optional[threading.Thread] = None
         self._base_key = key if key is not None else jax.random.PRNGKey(0)
         self._place = None
         if mesh is not None:
@@ -394,15 +560,7 @@ class Gateway:
                        requested=requested, served=served,
                        shape_key=shape_key, t_submit=self.clock(),
                        future=Future())
-        # the closed check and the push are one atomic step wrt drain():
-        # once drain flips _closed (under this lock), no entry can slip in
-        # after its final flush and strand an unresolved future
-        with self._intake_lock:
-            if self._closed:
-                raise RuntimeError("gateway is draining; no new requests")
-            self.queue.push(entry)
-            self.stats_raw.submitted += 1
-        return entry.future
+        return self._enqueue(entry)
 
     # -- scheduling / execution --------------------------------------------
 
@@ -411,10 +569,9 @@ class Gateway:
         with self._plan_lock:
             batches = self.scheduler.plan(
                 self.queue.snapshot(), self.clock(), force=force)
-            # remove exactly the batched entries — a submit landing after
+            # take exactly the batched entries — a submit landing after
             # the snapshot stays queued for the next pump, never dropped
-            self.queue.remove(
-                {e.uid for b in batches for e in b.entries})
+            self._take([e for b in batches for e in b.entries])
         return self._run_batches(batches)
 
     def _run_batches(self, batches: Sequence[Batch]) -> int:
@@ -428,22 +585,9 @@ class Gateway:
                 self._execute(batch)
             except BaseException as exc:  # noqa: BLE001 — must not strand
                 self._fail_entries(batch.entries, exc)
+            finally:
+                self._settle(len(batch.entries))
         return len(batches)
-
-    def _fail_entries(self, entries: Sequence[_Entry], exc: BaseException,
-                      count_all: bool = False) -> None:
-        """Surface ``exc`` into every still-unresolved future. A future the
-        client already cancelled rejects ``set_exception``; that must not
-        keep the failure from reaching its batch-mates."""
-        failed = 0
-        for e in entries:
-            try:
-                e.future.set_exception(exc)
-                failed += 1
-            except Exception:       # cancelled/raced future: nothing to do
-                failed += int(count_all)
-        with self._stats_lock:
-            self.stats_raw.failed += failed
 
     def _execute(self, batch: Batch) -> None:
         import numpy as np
@@ -499,66 +643,3 @@ class Gateway:
                 e.future.set_result(response)
             except Exception:   # cancelled mid-batch: batch-mates still land
                 pass
-
-    # -- lifecycle ----------------------------------------------------------
-
-    def serve_forever(self, poll_s: float = 0.001) -> None:
-        """Pump until ``stop``; sleeps ``poll_s`` when there is no work."""
-        while not self._stop.is_set():
-            if self.pump() == 0:
-                time.sleep(poll_s)
-
-    def start(self, poll_s: float = 0.001) -> threading.Thread:
-        if self._thread is not None and self._thread.is_alive():
-            return self._thread
-        self._stop.clear()
-        self._thread = threading.Thread(
-            target=self.serve_forever, kwargs={"poll_s": poll_s},
-            name="gateway-serve", daemon=True)
-        self._thread.start()
-        return self._thread
-
-    def drain(self) -> None:
-        """Graceful drain: refuse new requests, flush every pending one."""
-        with self._intake_lock:
-            self._closed = True        # no submit can pass the check now
-        while self.queue.depth():
-            self.pump(force=True)
-
-    def stop(self) -> None:
-        self._stop.set()
-        if self._thread is not None:
-            self._thread.join(timeout=10)
-            self._thread = None
-
-    def shutdown(self) -> None:
-        self.drain()
-        self.stop()
-
-    # -- metrics ------------------------------------------------------------
-
-    def stats(self) -> dict[str, Any]:
-        """Aggregate serving metrics as one flat dict."""
-        s = self.stats_raw
-        elapsed = max(self.clock() - s.started, 1e-9)
-        return {
-            "queue_depth": self.queue.depth(),
-            "submitted": s.submitted,
-            "completed": s.completed,
-            "failed": s.failed,
-            "batches": s.batches,
-            "mixed_batches": s.mixed_batches,
-            "forwards": s.forwards,
-            "nfe_per_request": s.forwards / max(s.completed, 1),
-            "occupancy": s.real_rows / max(s.padded_rows, 1),
-            "mean_wait_ms": s.sum_wait_ms / max(s.completed, 1),
-            "max_wait_ms": s.max_wait_ms,
-            "throughput_rps": s.completed / elapsed,
-            # continuous batching (all zero under the flush-only gateway)
-            "trajectories": s.trajectories,
-            "legs": s.legs,
-            "joins": s.joins,
-            "join_rate": s.joins / max(s.completed, 1),
-            "slot_occupancy": (s.slot_steps_active / s.slot_steps_total
-                               if s.slot_steps_total else 0.0),
-        }

@@ -25,6 +25,7 @@ from typing import Callable, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import ns_solver, schedulers, toy
 from repro.core.anytime import (
@@ -38,6 +39,21 @@ from repro.core.anytime import (
 from repro.serving.engine import nearest_budget
 
 Array = jax.Array
+
+
+class FakeClock:
+    """Deterministic clock for gateway simulation: ``gateway.clock`` is any
+    zero-arg callable, so tests and benchmarks advance time explicitly (or
+    from an engine/sampler forward hook) instead of sleeping."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, seconds: float) -> None:
+        self.t += seconds
 
 
 class ToyAnytimeSampler:
@@ -111,3 +127,60 @@ class CountingToySampler(ToyAnytimeSampler):
 
     def on_forward(self) -> None:
         self.forwards += 1
+
+
+class ToyDecodeEngine:
+    """Slot-protocol toy engine for the decode gateway (``init_slot_state``,
+    ``step_slots``, ``reset_slots`` — what ``DecodeGateway`` needs), shared
+    by ``benchmarks/decode_bench.py`` and the decode-gateway tests.
+
+    The "model" is a deterministic affine map over the vocabulary,
+    ``next = (a * token + b + position) % vocab`` — row-independent like the
+    real backbones, and position-dependent so positional bugs (a joiner
+    inheriting a freed slot's stale index) change the emitted tokens. State
+    is just the per-slot position vector; everything runs in numpy, so the
+    ``on_step`` hook (fake clock / wall-step counting) fires exactly once
+    per engine step with zero compile noise.
+    """
+
+    def __init__(self, vocab: int = 97, a: int = 31, b: int = 7,
+                 on_step: Optional[Callable[[], None]] = None):
+        self.vocab, self.a, self.b = vocab, a, b
+        self.on_step = on_step
+        self.steps = 0
+
+    def init_slot_state(self, slots: int, cache_slots: int, dtype=None):
+        return np.zeros((slots,), np.int64)        # per-slot position
+
+    def step_slots(self, token, state, active):
+        self.steps += 1
+        if self.on_step is not None:
+            self.on_step()
+        token = np.asarray(token, np.int64)
+        active = np.asarray(active)
+        nxt = (self.a * token + self.b + state) % self.vocab
+        return nxt.astype(np.int32), np.where(active, state + 1, state)
+
+    def reset_slots(self, state, free):
+        return np.where(np.asarray(free), 0, state)
+
+    def solo_tokens(self, prompt, max_tokens: int,
+                    stop_token: Optional[int] = None) -> list[int]:
+        """Reference: decode one sequence alone (the bit-identity oracle
+        for slot-refill tests)."""
+        out: list[int] = []
+        pos, tok = 0, int(prompt[0])
+        fed = 1
+        while True:
+            nxt = (self.a * tok + self.b + pos) % self.vocab
+            pos += 1
+            if fed < len(prompt):
+                tok = int(prompt[fed])
+                fed += 1
+                continue
+            if stop_token is not None and nxt == stop_token:
+                return out
+            out.append(int(nxt))
+            if len(out) >= max_tokens:
+                return out
+            tok = int(nxt)

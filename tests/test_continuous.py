@@ -12,21 +12,10 @@ from repro.core.anytime import init_anytime
 from repro.serving import AnytimeFlowSampler, ContinuousGateway, Request
 from repro.serving.continuous import ContinuousScheduler
 from repro.serving.gateway import _Entry
-from repro.serving.toy import CountingToySampler
+from repro.serving.toy import CountingToySampler, FakeClock
 from repro.solvers import SolverArtifact, SolverSpec
 
 BUDGETS = (2, 4, 8)
-
-
-class FakeClock:
-    def __init__(self):
-        self.t = 0.0
-
-    def __call__(self):
-        return self.t
-
-    def advance(self, seconds):
-        self.t += seconds
 
 
 class CountingCarrySampler(CountingToySampler):
@@ -479,3 +468,35 @@ def test_backbone_sharded_continuous_matches_unsharded(backbone):
                                np.asarray(ref2[0]), atol=1e-5, rtol=1e-5)
     np.testing.assert_allclose(np.asarray(futs[1].result().latents),
                                np.asarray(ref4[0]), atol=1e-5, rtol=1e-5)
+
+
+def test_plan_start_shape_groups_independent():
+    """Satellite fix (PR 5): a full (or aged) slate of one shape must not
+    wait behind an unaged singleton of another shape — the old plan gated
+    the slate on the overall-oldest entry's shape (head-of-line blocking).
+    Shape groups are now considered independently, oldest group first."""
+    s = ContinuousScheduler(max_slots=2, boundaries=BUDGETS, max_wait_ms=10.0)
+
+    def e(uid, shape, t=0.0):
+        return _Entry(uid=uid, tokens=None, x0=jnp.zeros(shape),
+                      requested=4, served=4, shape_key=(None, shape),
+                      t_submit=t, future=None)
+
+    lone_a = e(0, (3,))
+    full_b = [e(1, (2,)), e(2, (2,))]
+    # old behavior: the slate was gated on entry 0's shape -> nothing starts
+    assert [x.uid for x in s.plan_start([lone_a, *full_b],
+                                        now=0.005)] == [1, 2]
+    # an AGED group behind the young singleton starts too
+    aged_b = e(3, (2,), t=-0.02)
+    assert [x.uid for x in s.plan_start([lone_a, aged_b],
+                                        now=0.005)] == [3]
+    # both shapes ready: the oldest group wins (FIFO across shapes)
+    full_a = [e(5, (3,)), e(6, (3,))]
+    assert [x.uid for x in s.plan_start([*full_b, *full_a],
+                                        now=0.0)] == [1, 2]
+    # force starts the oldest group even when nothing is ready
+    assert [x.uid for x in s.plan_start([lone_a, e(9, (2,))],
+                                        now=0.0, force=True)] == [0]
+    # nothing ready, no force: still waits
+    assert s.plan_start([lone_a], now=0.005) == []

@@ -1,0 +1,309 @@
+"""Decode-side continuous batching: the ``DecodeEngine`` slot API
+(per-row positions, write-masked steps, slot resets) and the
+``DecodeGateway`` front-end (FIFO admission into freed slots, per-slot stop
+conditions, wall-step accounting, drain)."""
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import model as M
+from repro.serving.decode import DecodeGateway, DecodeRequest
+from repro.serving.engine import DecodeEngine
+from repro.serving.toy import FakeClock, ToyDecodeEngine
+
+
+def _engine(arch="yi-6b"):
+    cfg = get_config(arch, smoke=True)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    return DecodeEngine(params=params, cfg=cfg)
+
+
+def _solo_tokens(engine, prompt, n):
+    """Reference: teacher-force ``prompt`` through the plain (scalar-index)
+    decode path, then greedy — independent of the slot machinery."""
+    state = engine.init_state(1, 32)
+    for tok in prompt[:-1]:
+        _, state = engine.step(jnp.asarray([tok], jnp.int32), state)
+    toks, _ = engine.greedy(jnp.asarray([prompt[-1]], jnp.int32), state, n)
+    return np.asarray(toks)[0].tolist()
+
+
+# -- engine slot API ---------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", ["yi-6b", "rwkv6-7b"])
+def test_step_slots_join_bit_identical_to_solo(arch):
+    """A sequence admitted into a freed slot mid-flight (its row reset, its
+    own per-row position starting at 0) must decode bit-identically to
+    decoding it alone — the decode twin of the PR 4 join invariant."""
+    eng = _engine(arch)
+    S = 3
+    state = eng.init_slot_state(S, 32)
+    feed = np.zeros((S,), np.int32)
+    active = np.zeros((S,), bool)
+    feed[0], active[0] = 3, True          # slot 0 runs from step 0
+    outs = []
+    for step in range(9):
+        if step == 4:                     # slot 1 joins 4 steps in
+            free = np.zeros((S,), bool)
+            free[1] = True
+            state = eng.reset_slots(state, free)
+            feed[1], active[1] = 7, True
+        nxt, state = eng.step_slots(feed, state, active)
+        nxt = np.asarray(nxt)
+        feed = np.where(active, nxt, feed).astype(np.int32)
+        outs.append(nxt.copy())
+    outs = np.stack(outs)
+    assert outs[:, 0].tolist() == _solo_tokens(eng, [3], 9)
+    assert outs[4:, 1].tolist() == _solo_tokens(eng, [7], 5)
+
+
+def test_step_slots_inactive_rows_frozen():
+    """Masked-out rows keep state AND position; re-activating them resumes
+    exactly where they stopped."""
+    eng = _engine("rwkv6-7b")
+    state = eng.init_slot_state(2, 16)
+    feed = np.asarray([3, 7], np.int32)
+    both = np.ones((2,), bool)
+    nxt, state = eng.step_slots(feed, state, both)
+    idx_after = np.asarray(state.index)
+    assert idx_after.tolist() == [1, 1]
+    # freeze row 1 for two steps; row 0 decodes on
+    only0 = np.asarray([True, False])
+    row1 = [np.asarray(leaf)[:, 1].copy() for leaf in
+            (state.shift_tm, state.shift_cm, state.wkv)]
+    for _ in range(2):
+        nxt, state = eng.step_slots(np.asarray(nxt), state, only0)
+    assert np.asarray(state.index).tolist() == [3, 1]
+    for got, want in zip((state.shift_tm, state.shift_cm, state.wkv), row1):
+        np.testing.assert_array_equal(np.asarray(got)[:, 1], want)
+
+
+def test_greedy_scan_matches_stepwise_loop():
+    """The jit'd lax.scan greedy equals the per-token step loop (same ops,
+    one program) — and caches one program per num_steps."""
+    eng = _engine("yi-6b")
+    prompt = jnp.asarray([3, 7], jnp.int32)
+    toks, _ = eng.greedy(prompt, eng.init_state(2, 16), 5)
+    state = eng.init_state(2, 16)
+    token, outs = prompt, []
+    for _ in range(5):
+        logits, state = eng.step(token, state)
+        token = jnp.argmax(logits, -1).astype(jnp.int32)
+        outs.append(token)
+    np.testing.assert_array_equal(np.asarray(toks),
+                                  np.asarray(jnp.stack(outs, axis=1)))
+    assert 5 in eng._greedy_fns
+
+
+# -- gateway over the toy engine (deterministic fake clock) ------------------
+
+
+def _drive(gw, futures):
+    while not all(f.done() for f in futures):
+        gw.pump()
+
+
+def test_gateway_mixed_lengths_match_solo_oracle():
+    """Continuous refill over mixed output lengths: every sequence's tokens
+    equal its solo decode, finished slots are refilled mid-flight."""
+    eng = ToyDecodeEngine()
+    gw = DecodeGateway(eng, max_slots=2, cache_slots=16)
+    reqs = [DecodeRequest(prompt=[i + 1, i + 2], max_tokens=t)
+            for i, t in enumerate([3, 9, 5, 2, 7])]
+    futures = [gw.submit(r) for r in reqs]
+    _drive(gw, futures)
+    for r, f in zip(reqs, futures):
+        assert f.result().tokens.tolist() == eng.solo_tokens(r.prompt,
+                                                             r.max_tokens)
+    s = gw.stats()
+    assert s["completed"] == len(reqs)
+    assert s["joins"] > 0                       # slots were refilled
+    assert any(f.result().meta["join_step"] > 0 for f in futures)
+
+
+def test_gateway_wall_step_accounting():
+    """One engine step = one backbone forward for the whole slot batch: a
+    full batch of equal-length sequences costs prompt-1+max_tokens steps
+    TOTAL, not per sequence."""
+    eng = ToyDecodeEngine()
+    gw = DecodeGateway(eng, max_slots=4, cache_slots=16)
+    futures = [gw.submit(DecodeRequest(prompt=[i + 1, i + 2], max_tokens=6))
+               for i in range(4)]
+    _drive(gw, futures)
+    assert gw.stats()["forwards"] == 1 + 6      # (P-1) + T
+    assert eng.steps == 7
+    assert gw.stats()["tokens_out"] == 4 * 6
+
+
+def test_gateway_refill_strictly_beats_run_to_completion():
+    """At mixed output lengths, continuous slot refill finishes the same
+    request list in strictly fewer wall-steps than run-to-completion
+    batching (refill=False) — and serves identical tokens."""
+    reqs = [([1 + i], t) for i, t in enumerate([16, 2, 2, 2] * 4)]
+
+    def total_steps(refill):
+        eng = ToyDecodeEngine()
+        gw = DecodeGateway(eng, max_slots=4, cache_slots=16, refill=refill)
+        futures = [gw.submit(DecodeRequest(prompt=p, max_tokens=t))
+                   for p, t in reqs]
+        _drive(gw, futures)
+        toks = [f.result().tokens.tolist() for f in futures]
+        return gw.stats()["forwards"], toks
+
+    cont_steps, cont_toks = total_steps(True)
+    rtc_steps, rtc_toks = total_steps(False)
+    assert cont_toks == rtc_toks
+    assert cont_steps < rtc_steps
+
+
+def test_gateway_stop_token_per_slot():
+    eng = ToyDecodeEngine()
+    ref = eng.solo_tokens([5], 10)
+    stop = ref[3]
+    gw = DecodeGateway(eng, max_slots=2, cache_slots=16)
+    f_stop = gw.submit(DecodeRequest(prompt=[5], max_tokens=10,
+                                     stop_token=stop))
+    f_len = gw.submit(DecodeRequest(prompt=[5], max_tokens=10))
+    _drive(gw, [f_stop, f_len])
+    assert f_stop.result().tokens.tolist() == ref[:3]   # stop tok excluded
+    assert f_stop.result().meta["finish_reason"] == "stop"
+    assert f_len.result().tokens.tolist() == ref
+    assert f_len.result().meta["finish_reason"] == "length"
+
+
+def test_gateway_wait_ends_at_admission():
+    """Waits are queue time (fake clock): a request admitted into a freed
+    slot waited for exactly the steps it queued through."""
+    clock = FakeClock()
+    eng = ToyDecodeEngine(on_step=lambda: clock.advance(0.001))
+    gw = DecodeGateway(eng, max_slots=1, cache_slots=16, clock=clock)
+    f1 = gw.submit(DecodeRequest(prompt=[3], max_tokens=4))
+    f2 = gw.submit(DecodeRequest(prompt=[9], max_tokens=2))
+    _drive(gw, [f1, f2])
+    assert f1.result().meta["wait_ms"] == 0.0
+    # f2 queued while f1 held the only slot for 4 steps of 1 ms
+    assert f2.result().meta["wait_ms"] == pytest.approx(4.0)
+    assert gw.stats()["max_wait_ms"] == pytest.approx(4.0)
+
+
+def test_gateway_validates_requests():
+    gw = DecodeGateway(ToyDecodeEngine(), max_slots=1, cache_slots=4)
+    with pytest.raises(ValueError):
+        gw.submit(DecodeRequest(prompt=[], max_tokens=4))
+    with pytest.raises(ValueError):
+        gw.submit(DecodeRequest(prompt=[3], max_tokens=0))
+    with pytest.raises(ValueError):
+        DecodeGateway(ToyDecodeEngine(), max_slots=0, cache_slots=4)
+
+
+def test_gateway_engine_failure_reaches_futures():
+    """A raising engine step fails every resident sequence's future and
+    frees the slots — the serve loop survives (decode twin of the
+    trajectory-failure guard)."""
+
+    class BoomEngine(ToyDecodeEngine):
+        def step_slots(self, token, state, active):
+            raise RuntimeError("boom")
+
+    gw = DecodeGateway(BoomEngine(), max_slots=2, cache_slots=4)
+    f = gw.submit(DecodeRequest(prompt=[3], max_tokens=4))
+    assert gw.pump() == 1
+    with pytest.raises(RuntimeError, match="boom"):
+        f.result(timeout=1)
+    assert gw.stats()["failed"] == 1
+    assert gw._drained()                        # nothing left in flight
+    # slots freed; a new submit is servable once the engine recovers
+    assert all(s is None for s in gw._slots)
+
+
+def test_gateway_drain_resolves_everything():
+    gw = DecodeGateway(ToyDecodeEngine(), max_slots=2, cache_slots=16)
+    futures = [gw.submit(DecodeRequest(prompt=[i + 1], max_tokens=3 + i))
+               for i in range(5)]
+    gw.drain()
+    assert all(f.done() for f in futures)
+    with pytest.raises(RuntimeError):
+        gw.submit(DecodeRequest(prompt=[1], max_tokens=1))
+
+
+# -- gateway over the real engine --------------------------------------------
+
+
+def test_gateway_real_engine_threaded_bit_identity():
+    """End-to-end over the real backbone with the serve thread: mixed
+    lengths on a 2-slot pool; a sequence admitted into a freed slot decodes
+    bit-identically to the plain scalar-index decode path."""
+    eng = _engine("yi-6b")
+    gw = DecodeGateway(eng, max_slots=2, cache_slots=32)
+    gw.start()
+    lengths = (4, 6, 3)
+    futures = [gw.submit(DecodeRequest(prompt=[3, 7], max_tokens=t))
+               for t in lengths]
+    gw.shutdown()
+    ref = _solo_tokens(eng, [3, 7], max(lengths))
+    for t, f in zip(lengths, futures):
+        assert f.result().tokens.tolist() == ref[:t]
+    s = gw.stats()
+    assert s["completed"] == 3
+    assert s["joins"] >= 1                      # the third prompt joined
+
+
+def test_gateway_drain_waits_for_inflight_slots():
+    """Drain must wait for sequences RESIDENT IN SLOTS (taken off the
+    queue, futures unresolved), not just queue depth."""
+    release = threading.Event()
+
+    class SlowEngine(ToyDecodeEngine):
+        def step_slots(self, token, state, active):
+            release.wait(timeout=5)
+            return super().step_slots(token, state, active)
+
+    gw = DecodeGateway(SlowEngine(), max_slots=2, cache_slots=8)
+    gw.start()
+    f = gw.submit(DecodeRequest(prompt=[3], max_tokens=2))
+    # wait until the serve thread has admitted it (queue empty, slot busy)
+    for _ in range(1000):
+        if gw.queue.depth() == 0 and any(s is not None for s in gw._slots):
+            break
+        import time
+        time.sleep(0.001)
+    t = threading.Thread(target=gw.shutdown)
+    t.start()
+    assert not f.done()                         # drain is genuinely waiting
+    release.set()
+    t.join(timeout=10)
+    assert not t.is_alive()
+    assert f.done() and f.result().meta["finish_reason"] == "length"
+
+
+def test_gateway_rejects_requests_exceeding_cache_capacity():
+    """Non-windowed KV-cache engines clamp writes past the cache's last
+    physical slot (silently degraded tokens) — the gateway must reject
+    over-length requests at submit instead."""
+    eng = _engine("yi-6b")
+    gw = DecodeGateway(eng, max_slots=2, cache_slots=8)
+    with pytest.raises(ValueError, match="cache capacity"):
+        gw.submit(DecodeRequest(prompt=[3, 7], max_tokens=8))
+    # exactly at capacity: positions 0..7 fit the 8 slots
+    f = gw.submit(DecodeRequest(prompt=[3, 7], max_tokens=7))
+    _drive(gw, [f])
+    assert f.result().tokens.tolist() == _solo_tokens(eng, [3, 7], 7)
+    # unbounded engines (recurrent state / toy) accept any length
+    DecodeGateway(ToyDecodeEngine(), max_slots=1, cache_slots=4).submit(
+        DecodeRequest(prompt=[3], max_tokens=64))
+    assert _engine("rwkv6-7b").seq_capacity_bounded is False
+
+
+def test_gateway_rejects_encdec_engines():
+    """The slot protocol has no hook for per-request encoder memory, so an
+    encoder-decoder engine must be rejected loudly, not served garbage."""
+    cfg = get_config("whisper-medium", smoke=True)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    with pytest.raises(TypeError, match="encoder-decoder"):
+        DecodeGateway(DecodeEngine(params=params, cfg=cfg), max_slots=1,
+                      cache_slots=8)

@@ -10,21 +10,10 @@ import pytest
 from repro.core.anytime import init_anytime
 from repro.serving import AnytimeFlowSampler, Gateway, Request
 from repro.serving.gateway import BatchScheduler
-from repro.serving.toy import CountingToySampler
+from repro.serving.toy import CountingToySampler, FakeClock
 from repro.solvers import SolverArtifact, SolverSpec
 
 BUDGETS = (2, 4)
-
-
-class FakeClock:
-    def __init__(self):
-        self.t = 0.0
-
-    def __call__(self):
-        return self.t
-
-    def advance(self, seconds):
-        self.t += seconds
 
 
 def _gateway(sampler=None, **kw):
@@ -550,3 +539,80 @@ def test_gateway_with_kernel_update_fn_matches_reference(backbone):
         np.testing.assert_allclose(np.asarray(f.result().latents),
                                    np.asarray(direct[i]),
                                    atol=1e-4, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Concurrency satellites (PR 5): drain vs in-flight batches, stats locking
+# ---------------------------------------------------------------------------
+
+
+def test_drain_waits_for_inflight_batch():
+    """Regression: drain() used to spin on queue depth alone — a batch a
+    concurrent serve-thread pump had removed and was still executing was
+    invisible, so drain could return with unresolved futures. It now waits
+    on the in-flight count too."""
+    import threading
+    import time
+
+    release = threading.Event()
+    entered = threading.Event()
+
+    class Blocking(CountingToySampler):
+        def sample_from(self, batch, x0, budget):
+            entered.set()
+            release.wait(timeout=5)
+            return super().sample_from(batch, x0, budget)
+
+    gw, _, clock = _gateway(Blocking(), max_batch=2)
+    gw.start()
+    futs = [gw.submit(Request(budget=2, x0=_x0(i))) for i in range(2)]
+    assert entered.wait(timeout=5)          # serve thread is executing
+    assert gw.queue.depth() == 0            # entries already off the queue
+    t = threading.Thread(target=gw.drain)
+    t.start()
+    time.sleep(0.05)
+    assert t.is_alive()                     # drain genuinely waits here
+    assert not any(f.done() for f in futs)
+    release.set()
+    t.join(timeout=10)
+    assert not t.is_alive()
+    assert all(f.done() for f in futs)
+    gw.stop()
+
+
+def test_stats_snapshot_consistent_under_concurrent_traffic():
+    """Satellite fix: ``submitted`` moves under ``_stats_lock`` like every
+    other counter (it used to ride ``_intake_lock``) and ``stats()``
+    snapshots under the lock — no snapshot may show more completions than
+    submissions, and no submit may be lost."""
+    import threading
+
+    gw, _, clock = _gateway(max_batch=4)
+    gw.start()
+    N, T = 20, 6
+
+    def worker(base):
+        for i in range(N):
+            gw.submit(Request(budget=2, x0=_x0(base * N + i)))
+
+    threads = [threading.Thread(target=worker, args=(t,)) for t in range(T)]
+    bad = []
+
+    def reader():
+        for _ in range(300):
+            s = gw.stats()
+            if s["completed"] + s["failed"] > s["submitted"]:
+                bad.append(s)
+
+    r = threading.Thread(target=reader)
+    for th in threads:
+        th.start()
+    r.start()
+    for th in threads:
+        th.join()
+    r.join()
+    gw.shutdown()
+    assert not bad, f"inconsistent snapshots: {bad[:2]}"
+    s = gw.stats()
+    assert s["submitted"] == N * T
+    assert s["completed"] == N * T

@@ -136,3 +136,20 @@ def test_decode_mode_smoke():
                "--steps", "3", "--slots", "16")
     assert res.returncode == 0, res.stderr
     assert "decoded 3 tokens x 2 seqs" in res.stdout
+
+
+def test_decode_mode_gateway_continuous_batching():
+    """--mode decode --gateway serves concurrent prompts through the
+    continuous-batching decode gateway: mixed lengths on a small slot pool
+    force mid-flight admission (joins) and the stats line reports
+    tokens/occupancy."""
+    res = _run("--arch", "yi-6b", "--mode", "decode", "--gateway",
+               "--max-slots", "2", "--requests", "5",
+               "--decode-lengths", "6,2,4", "--slots", "16")
+    assert res.returncode == 0, res.stderr
+    out = res.stdout
+    assert out.count("request ") == 5
+    assert "decode gateway stats: completed=5" in out
+    assert "slot_occupancy=" in out and "tokens/s=" in out
+    # a freed slot was refilled mid-flight at least once
+    assert "joins=0" not in out
