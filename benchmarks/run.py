@@ -10,6 +10,8 @@
   continuous_bench     — continuous batching vs flush-only (p95 wait, NFE)
   decode_bench         — decode gateway: continuous slot refill vs
                          run-to-completion batching (wall-steps)
+  fleet_bench          — fleet federation: work stealing vs static
+                         affinity routing (p95 wait, parallel hosts)
   roofline             — §Roofline terms from the dry-run artifacts
 
 Prints ``name,us_per_call,derived`` CSV lines; paper-claim PASS/FAIL notes go
@@ -17,7 +19,8 @@ to log lines prefixed with '#'.
 
 Regression gating (CI bench-regression job):
 
-  python benchmarks/run.py --quick --only gateway,kernel,continuous,decode \\
+  python benchmarks/run.py --quick \\
+      --only gateway,kernel,continuous,decode,fleet \\
       --json-dir bench-fresh --check-against benchmarks/baselines
 
 runs just the gated benches, writes their fresh summary JSONs, and exits
@@ -189,6 +192,23 @@ def _continuous(quick, csv, summaries):
                                "metrics": continuous_bench.metrics(rows)}
 
 
+@_timed("fleet_bench")
+def _fleet(quick, csv, summaries):
+    from benchmarks import fleet_bench
+    rows = fleet_bench.run(requests=48 if quick else 96, log=log)
+    notes = fleet_bench.check_claims(rows)
+    for note in notes:
+        log(note)
+    for r in rows:
+        csv.append((f"fleet/{r['mix']}", r["steal_p95_wait_ms"] * 1e3,
+                    f"p95_ratio={r['p95_ratio']:.2f};"
+                    f"forwards_ratio={r['forwards_ratio']:.3f};"
+                    f"steal_share={r['steal_share']:.2f}"))
+    summaries["fleet"] = {"bench": "fleet", "rows": rows,
+                          "claims": notes,
+                          "metrics": fleet_bench.metrics(rows)}
+
+
 def _roofline(quick, csv, summaries):
     try:
         import os
@@ -225,6 +245,7 @@ SECTIONS = {
     "gateway": _gateway,
     "continuous": _continuous,
     "decode": _decode,
+    "fleet": _fleet,
     "roofline": _roofline,
 }
 

@@ -1,0 +1,16 @@
+"""repro.distributed — sharding rules, ambient sharding context, and the
+emulated multi-host substrate the serving fleet tier tests on.
+
+``sharding``  — parameter/activation PartitionSpec tables (Megatron + FSDP);
+``context``   — ambient mesh context for model-internal constraints;
+``emulate``   — ``emulate_hosts(n)`` (CPU split into n XLA devices, set
+                before jax init) and ``host_meshes(n)`` (per-host mesh
+                construction for ``repro.serving.fleet``).
+
+Only ``emulate`` is re-exported here: it must be importable without pulling
+in jax-touching modules, because ``emulate_hosts`` has to run before jax
+initializes its backends.
+"""
+from repro.distributed.emulate import emulate_hosts, host_meshes, jax_initialized
+
+__all__ = ["emulate_hosts", "host_meshes", "jax_initialized"]

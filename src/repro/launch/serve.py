@@ -30,7 +30,9 @@ mixed-budget flushes may ride the anytime shared trajectory
 (params via distributed.sharding, batches along the data axes). Each
 response prints its (requested, served) budget pair — drift is recorded in
 metadata, not just warned. --kernel-update routes the solver update through
-the Pallas ns_update kernel.
+the Pallas ns_update kernel. --fleet N federates N per-host gateways behind
+one ``repro.serving.fleet.FleetGateway`` (sharded request queue, affinity
+routing, work stealing) — the summary adds a fleet stats line.
 
 Decode mode serves batched greedy decode (jit'd multi-token scan). With
 --gateway it becomes a multi-user continuous-batching service
@@ -205,21 +207,28 @@ def serve_flow(args) -> None:
 def _serve_gateway(args, sampler, cond, request_budgets) -> None:
     """Multi-user serving: every request is one coalesced-batch submit."""
     from repro.serving.continuous import ContinuousGateway
+    from repro.serving.fleet import FleetGateway
     from repro.serving.gateway import Gateway, Request
     from repro.serving.sharded import serving_mesh
 
-    if args.continuous:
-        gw = ContinuousGateway(sampler, max_slots=args.max_slots,
-                               max_batch=args.max_batch,
-                               max_wait_ms=args.max_wait_ms,
-                               mixed_budget_policy=args.mixed_budget_policy,
-                               strict_nfe=args.strict_nfe,
-                               mesh=serving_mesh(args.mesh))
+    def make_host():
+        # the solver artifact is tiny, so every fleet host serves the SAME
+        # sampler object — replication is free, distribution is the work
+        if args.continuous:
+            return ContinuousGateway(
+                sampler, max_slots=args.max_slots, max_batch=args.max_batch,
+                max_wait_ms=args.max_wait_ms,
+                mixed_budget_policy=args.mixed_budget_policy,
+                strict_nfe=args.strict_nfe, mesh=serving_mesh(args.mesh))
+        return Gateway(sampler, max_batch=args.max_batch,
+                       max_wait_ms=args.max_wait_ms,
+                       mixed_budget_policy=args.mixed_budget_policy,
+                       strict_nfe=args.strict_nfe, mesh=serving_mesh(args.mesh))
+
+    if args.fleet > 1:
+        gw = FleetGateway({f"h{i}": make_host() for i in range(args.fleet)})
     else:
-        gw = Gateway(sampler, max_batch=args.max_batch,
-                     max_wait_ms=args.max_wait_ms,
-                     mixed_budget_policy=args.mixed_budget_policy,
-                     strict_nfe=args.strict_nfe, mesh=serving_mesh(args.mesh))
+        gw = make_host()
     gw.start()
     t0 = time.time()
     futures = []
@@ -251,8 +260,13 @@ def _serve_gateway(args, sampler, cond, request_budgets) -> None:
     if args.continuous:
         print(f"continuous stats: trajectories={s['trajectories']} "
               f"legs={s['legs']} joins={s['joins']} "
-              f"join_rate={s['join_rate']:.2f} "
-              f"slot_occupancy={s['slot_occupancy']:.2f}")
+              f"join_rate={s['join_rate']:.2f}"
+              + ("" if args.fleet > 1 else
+                 f" slot_occupancy={s['slot_occupancy']:.2f}"))
+    if args.fleet > 1:
+        routed = " ".join(f"{h}={n}" for h, n in sorted(s["routed"].items()))
+        print(f"fleet stats: hosts={s['hosts']} steals={s['steals']} "
+              f"rerouted={s['rerouted']} routed: {routed}")
 
 
 def serve_decode(args) -> None:
@@ -338,6 +352,10 @@ def main() -> None:
     ap.add_argument("--gateway", action="store_true",
                     help="serve requests through the coalescing batch "
                          "gateway (one single-sample submit per request)")
+    ap.add_argument("--fleet", type=int, default=1,
+                    help="gateway: federate this many per-host gateways "
+                         "behind one FleetGateway (sharded queue, affinity "
+                         "routing, work stealing); 1 = single gateway")
     ap.add_argument("--max-batch", type=int, default=8,
                     help="gateway: coalesce at most this many requests")
     ap.add_argument("--max-wait-ms", type=float, default=10.0,

@@ -1,4 +1,5 @@
-"""repro.serving — TWO engines behind one gateway front-end.
+"""repro.serving — TWO engines behind one gateway front-end, scaled out
+by a fleet tier.
 
 The serving stack batches both of the repo's engines through the same
 queue/batcher machinery (``GatewayBase``: intake, serve thread, drain,
@@ -16,6 +17,30 @@ stats):
   sequences are admitted at the next engine step, per-slot stop
   conditions).
 
+Five layers, bottom up — each consumes the one below and widens the
+concurrency it can absorb:
+
+1. **sampler** (``engine``) — one jit'd dispatch: a padded batch in,
+   samples/tokens out, exactly m backbone forwards per BNS batch;
+2. **gateway** (``gateway``) — one process: async intake queue, budget/
+   shape coalescing into padded flush batches, mixed-budget shared-
+   trajectory dispatch;
+3. **continuous** (``continuous``) — one device's idle gaps: queued flow
+   requests join IN-FLIGHT anytime trajectories at exit boundaries
+   instead of waiting for the next flush;
+4. **decode** (``decode``) — one engine's state slots: token-level
+   continuous batching for the autoregressive engine, admit/retire per
+   step;
+5. **fleet** (``fleet``) — many hosts: ``FleetGateway`` federates per-host
+   gateways behind one submit — the fleet-wide queue is SHARDED across
+   the per-host queues, ``FleetRouter`` homes requests by budget/shape
+   affinity (HRW hashing keeps assignments deterministic and jit caches
+   hot), ``WorkStealer`` migrates queued work off overloaded shards, and
+   hosts join/leave gracefully (bounded drain, no dropped futures).
+   Routing never changes a sample: rows are independent and the fleet
+   shares one uid namespace + base key, so every sample stays
+   bit-identical to the single-gateway path.
+
 Module map:
 
 ``engine``  — ``FlowSampler``, ``AnytimeFlowSampler``, ``DecodeEngine``;
@@ -23,11 +48,17 @@ Module map:
               directory scan, lazy distill-on-miss, preload and spill;
 ``gateway`` — ``GatewayBase``/``Gateway``/``BatchScheduler``: async request
               queue, budget-coalescing padded batches, mixed-budget shared-
-              trajectory dispatch, shared serving metrics;
+              trajectory dispatch, shared serving metrics, fleet federation
+              hooks (``federate``/``load``/``steal``/``inject``, bounded
+              ``drain(timeout=)`` raising ``DrainTimeout``);
 ``continuous`` — ``ContinuousGateway``/``ContinuousScheduler``, flow-side
               continuous batching at anytime exit boundaries;
 ``decode``  — ``DecodeGateway``/``DecodeRequest``/``DecodeResponse``,
               decode-side continuous batching over fixed state slots;
+``fleet``   — ``FleetGateway``/``FleetRouter``/``WorkStealer``: multi-host
+              federation, sharded request queue, affinity routing, work
+              stealing, graceful host join/leave (emulated-host CI via
+              ``repro.distributed.emulate``);
 ``sharded`` — mesh placement for gateway batches (params via
               ``distributed.sharding``, batches split along the data axes);
 ``toy``     — protocol-complete toy sampler/engine for benchmarks + tests.
@@ -42,11 +73,14 @@ from repro.serving.engine import (
     nearest_budget,
     nearest_latent_tokens,
 )
+from repro.serving.fleet import FleetGateway, FleetRouter, WorkStealer
 from repro.serving.gateway import (
     BatchScheduler,
+    DrainTimeout,
     Gateway,
     GatewayBase,
     GatewayStats,
+    HostLoad,
     Request,
     RequestQueue,
     Response,
@@ -55,7 +89,8 @@ from repro.serving.zoo import SolverZoo, ZooStats
 
 __all__ = ["AnytimeFlowSampler", "BatchScheduler", "ContinuousGateway",
            "ContinuousScheduler", "DecodeEngine", "DecodeGateway",
-           "DecodeRequest", "DecodeResponse", "FlowSampler", "Gateway",
-           "GatewayBase", "GatewayStats", "Request", "RequestQueue",
-           "Response", "SolverZoo", "ZooStats", "greedy_demo",
+           "DecodeRequest", "DecodeResponse", "DrainTimeout", "FleetGateway",
+           "FleetRouter", "FlowSampler", "Gateway", "GatewayBase",
+           "GatewayStats", "HostLoad", "Request", "RequestQueue", "Response",
+           "SolverZoo", "WorkStealer", "ZooStats", "greedy_demo",
            "nearest_budget", "nearest_latent_tokens"]

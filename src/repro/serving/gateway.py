@@ -58,6 +58,17 @@ and its pump interleaves joins with these flushes.
 drain with in-flight accounting, locked stats snapshot) — it also fronts
 the DECODE engine via ``repro.serving.decode.DecodeGateway``, so both of
 the repo's engines serve through one queue/lifecycle/stats stack.
+
+Fleet federation (``repro.serving.fleet``): a ``FleetGateway`` treats each
+per-host gateway's queue as one SHARD of a fleet-wide request queue. The
+hooks it rides live here on ``GatewayBase``: ``load()`` (a point-in-time
+queue-depth/in-flight snapshot the work stealer balances on), ``steal()`` /
+``inject()`` (atomically migrate QUEUED — never in-flight — entries between
+shards), ``federate()`` (share one uid namespace and base PRNG key across
+hosts so migrated entries keep their identity and folded noise keys match
+the single-gateway path bit-for-bit), and ``drain(timeout=)`` (bounded
+drain for graceful host leave — raises ``DrainTimeout`` with a stats
+snapshot instead of hanging on a wedged engine).
 """
 from __future__ import annotations
 
@@ -74,6 +85,31 @@ import jax.numpy as jnp
 Array = jax.Array
 
 POLICIES = ("never", "auto", "always")
+
+
+class DrainTimeout(RuntimeError):
+    """``drain(timeout=...)`` expired with work still unresolved. Carries
+    the ``stats()`` snapshot taken at expiry (plus the in-flight count) so
+    the caller can see WHAT was stuck — a fleet host-leave logs it and
+    moves on instead of hanging the whole fleet behind one wedged engine."""
+
+    def __init__(self, message: str, stats: dict):
+        super().__init__(message)
+        self.stats = stats
+
+
+@dataclasses.dataclass(frozen=True)
+class HostLoad:
+    """Point-in-time load snapshot of one gateway (= one fleet queue
+    shard): entries still queued and entries taken but unresolved. The
+    work stealer balances on these — only ``queue_depth`` is stealable."""
+
+    queue_depth: int
+    inflight: int
+
+    @property
+    def total(self) -> int:
+        return self.queue_depth + self.inflight
 
 
 @dataclasses.dataclass
@@ -307,6 +343,9 @@ class GatewayStats:
     slot_steps_total: int = 0   # max_slots * steps across trajectory legs
     # decode serving (zero under the flow gateways):
     tokens_out: int = 0        # generated tokens delivered to clients
+    # fleet federation (zero outside a FleetGateway):
+    stolen_in: int = 0         # queued entries migrated INTO this shard
+    stolen_out: int = 0        # queued entries migrated OUT of this shard
 
 
 class GatewayBase:
@@ -389,6 +428,59 @@ class GatewayBase:
         with self._stats_lock:
             self.stats_raw.failed += failed
 
+    # -- fleet federation hooks (repro.serving.fleet) ------------------------
+
+    def federate(self, uid_counter, base_key: Optional[Array] = None) -> None:
+        """Adopt a fleet-shared uid namespace (and base PRNG key).
+
+        Entries migrated between shard queues are identified by uid alone
+        (``RequestQueue.remove``/``_take``); per-host counters would
+        collide, so every host in a fleet draws from ONE counter. Sharing
+        the base key keeps the no-x0/no-key noise path bit-identical to a
+        single gateway: the folded key depends on the fleet-wide submission
+        index, which the shared counter makes exactly the index a lone
+        gateway would have used. Call before any traffic is submitted."""
+        self._uid = uid_counter
+        if base_key is not None and hasattr(self, "_base_key"):
+            self._base_key = base_key
+
+    def load(self) -> HostLoad:
+        """Load snapshot for fleet routing/stealing decisions."""
+        with self._stats_lock:
+            inflight = self._inflight
+        return HostLoad(queue_depth=self.queue.depth(), inflight=inflight)
+
+    def steal(self, max_n: Optional[int] = None) -> list:
+        """Atomically pop up to ``max_n`` QUEUED entries (oldest first;
+        ``None`` = all). Runs under ``_plan_lock``, the same lock every
+        pump plans under, so a stolen entry was never planned into a batch
+        or trajectory — in-flight work is structurally unstealable. The
+        entries' futures stay live; the thief resolves them."""
+        with self._plan_lock:
+            pending = sorted(self.queue.snapshot(),
+                             key=lambda e: (e.t_submit, e.uid))
+            taken = pending if max_n is None else pending[:max_n]
+            self.queue.remove({e.uid for e in taken})
+        if taken:
+            with self._stats_lock:
+                self.stats_raw.stolen_out += len(taken)
+        return taken
+
+    def inject(self, entries: Sequence) -> None:
+        """Accept entries stolen from another shard into this queue. The
+        closed check mirrors ``_enqueue`` (an entry injected after drain's
+        final flush would strand its future) but ``submitted`` does NOT
+        move — the home shard already counted the request; fleet totals
+        stay one-count-per-request."""
+        with self._intake_lock:
+            if self._closed:
+                raise RuntimeError(
+                    "gateway is draining; cannot accept migrated entries")
+            with self._stats_lock:
+                self.stats_raw.stolen_in += len(entries)
+            for e in entries:
+                self.queue.push(e)
+
     # -- scheduling -----------------------------------------------------------
 
     def pump(self, force: bool = False) -> int:
@@ -422,14 +514,33 @@ class GatewayBase:
         with self._stats_lock:
             return self._inflight == 0
 
-    def drain(self) -> None:
+    def drain(self, timeout: Optional[float] = None) -> None:
         """Graceful drain: refuse new requests, then pump until every
         accepted request has RESOLVED — queue empty AND nothing in flight
         (a batch a concurrent serve-thread pump is still executing counts;
-        spinning on queue depth alone returned early on exactly that)."""
+        spinning on queue depth alone returned early on exactly that).
+
+        ``timeout`` (wall seconds, measured on ``time.monotonic`` — the
+        gateway clock may be fake and frozen) bounds the wait: a wedged
+        engine raises ``DrainTimeout`` carrying the stats snapshot instead
+        of hanging forever — fleet host-leave needs the bound. The gateway
+        STAYS closed after the raise; call ``drain`` again to keep waiting,
+        or inspect ``exc.stats`` to see what is stuck."""
         with self._intake_lock:
             self._closed = True        # no submit can pass the check now
+        deadline = (None if timeout is None
+                    else time.monotonic() + max(timeout, 0.0))
         while not self._drained():
+            if deadline is not None and time.monotonic() >= deadline:
+                with self._stats_lock:
+                    inflight = self._inflight
+                snap = self.stats()
+                raise DrainTimeout(
+                    f"drain timed out after {timeout:g}s: "
+                    f"queue_depth={snap['queue_depth']} "
+                    f"inflight={inflight} "
+                    f"completed={snap['completed']}/{snap['submitted']}",
+                    snap)
             if self.pump(force=True) == 0:
                 time.sleep(5e-4)       # a concurrent pump holds the work
 
@@ -439,8 +550,8 @@ class GatewayBase:
             self._thread.join(timeout=10)
             self._thread = None
 
-    def shutdown(self) -> None:
-        self.drain()
+    def shutdown(self, timeout: Optional[float] = None) -> None:
+        self.drain(timeout=timeout)
         self.stop()
 
     # -- metrics --------------------------------------------------------------
@@ -475,6 +586,9 @@ class GatewayBase:
             # decode serving (zero under the flow gateways)
             "tokens_out": s.tokens_out,
             "tokens_per_s": s.tokens_out / elapsed,
+            # fleet federation (zero outside a FleetGateway)
+            "stolen_in": s.stolen_in,
+            "stolen_out": s.stolen_out,
         }
 
 

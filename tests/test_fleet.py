@@ -1,0 +1,534 @@
+"""Fleet tier: deterministic HRW routing, work-stealer planning, fleet
+bit-identity vs the single-gateway oracle (explicit-x0 and folded-key
+paths), steal-under-imbalance, join/leave mid-traffic, bounded host-leave
+drain, and emulated multi-device hosts (real backbone, own mesh per host).
+"""
+import os
+import subprocess
+import sys
+from types import SimpleNamespace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.distributed import emulate_hosts, host_meshes
+from repro.serving import (
+    DrainTimeout,
+    FleetGateway,
+    FleetRouter,
+    Gateway,
+    HostLoad,
+    Request,
+    WorkStealer,
+)
+from repro.serving.fleet import default_affinity, entry_affinity
+from repro.serving.toy import CountingToySampler, FakeClock
+
+BUDGETS = (2, 4)
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _sampler(budgets=BUDGETS):
+    s = CountingToySampler(budgets=budgets)
+    # the folded-key path asks the sampler for the latent dim; the toy field
+    # is 2-D
+    s.cfg = SimpleNamespace(latent_dim=2)
+    return s
+
+
+def _fleet(n=4, budgets=BUDGETS, stealer=None, steal=False, **host_kw):
+    """n toy hosts on ONE shared fake clock (simulated time is fleet-wide)."""
+    clock = FakeClock()
+    host_kw.setdefault("max_batch", 8)
+    host_kw.setdefault("max_wait_ms", 10.0)
+    host_kw.setdefault("mixed_budget_policy", "never")
+    hosts = {f"h{i}": Gateway(_sampler(budgets), clock=clock, **host_kw)
+             for i in range(n)}
+    fleet = FleetGateway(hosts, stealer=stealer, steal=steal)
+    return fleet, clock
+
+
+def _single(budgets=BUDGETS, **kw):
+    clock = FakeClock()
+    kw.setdefault("max_batch", 8)
+    kw.setdefault("max_wait_ms", 10.0)
+    kw.setdefault("mixed_budget_policy", "never")
+    return Gateway(_sampler(budgets), clock=clock, **kw), clock
+
+
+def _x0(i, shape=(2,)):
+    return jax.random.normal(jax.random.PRNGKey(100 + i), shape)
+
+
+def _drain_fake(gw, clock):
+    """Drain on a fake clock: age every partial group, then pump to empty."""
+    clock.advance(1.0)
+    gw.drain()
+
+
+# ---------------------------------------------------------------------------
+# FleetRouter (pure HRW routing)
+# ---------------------------------------------------------------------------
+
+
+def test_router_deterministic_across_instances():
+    hosts = ["h0", "h1", "h2", "h3"]
+    keys = [("flow", b, None, (2,)) for b in (2, 4, 8, 16)] \
+        + [("decode", 1 << i) for i in range(5)]
+    a, b = FleetRouter(hosts), FleetRouter(hosts)
+    assert [a.route(k) for k in keys] == [b.route(k) for k in keys]
+    # seed changes the assignment function (not necessarily every key)
+    c = FleetRouter(hosts, seed=1)
+    assert any(a.route(k) != c.route(k)
+               for k in [("flow", i, None, (2,)) for i in range(64)])
+
+
+def test_router_spreads_keys_across_hosts():
+    r = FleetRouter(["h0", "h1", "h2", "h3"])
+    homes = {r.route(("flow", i, None, (2,))) for i in range(64)}
+    assert homes == {"h0", "h1", "h2", "h3"}
+
+
+def test_router_remove_rehomes_only_the_removed_hosts_keys():
+    r = FleetRouter(["h0", "h1", "h2", "h3"])
+    keys = [("flow", i, None, (2,)) for i in range(64)]
+    before = {k: r.route(k) for k in keys}
+    r.remove("h2")
+    for k in keys:
+        if before[k] != "h2":
+            assert r.route(k) == before[k]     # survivors keep their keys
+        else:
+            assert r.route(k) != "h2"
+
+
+def test_router_add_moves_keys_only_to_the_new_host():
+    r = FleetRouter(["h0", "h1", "h2"])
+    keys = [("flow", i, None, (2,)) for i in range(64)]
+    before = {k: r.route(k) for k in keys}
+    r.add("h3")
+    moved = {k for k in keys if r.route(k) != before[k]}
+    assert moved and all(r.route(k) == "h3" for k in moved)
+
+
+def test_router_validation():
+    r = FleetRouter(["h0"])
+    with pytest.raises(ValueError):
+        r.add("h0")
+    with pytest.raises(RuntimeError):
+        FleetRouter().route(("flow", 2, None, (2,)))
+
+
+# ---------------------------------------------------------------------------
+# Affinity keys
+# ---------------------------------------------------------------------------
+
+
+def test_default_affinity_groups_flow_by_budget_and_shape():
+    a = default_affinity(Request(budget=4, x0=_x0(0)))
+    b = default_affinity(Request(budget=4, x0=_x0(1)))
+    assert a == b == ("flow", 4, None, (2,))
+    assert default_affinity(Request(budget=2, x0=_x0(0))) != a
+    # budget None resolves to the sampler's top budget at routing time
+    assert default_affinity(Request(x0=_x0(0)), top_budget=4) == a
+    toks = jnp.zeros((3,), jnp.int32)
+    assert default_affinity(Request(tokens=toks, budget=4)) == \
+        ("flow", 4, (3,), None)
+
+
+def test_default_affinity_buckets_decode_by_max_tokens():
+    req = SimpleNamespace(prompt=[1, 2], max_tokens=5)
+    assert default_affinity(req) == ("decode", 8)
+    assert default_affinity(SimpleNamespace(prompt=[1], max_tokens=8)) == \
+        ("decode", 8)
+    assert default_affinity(SimpleNamespace(prompt=[1], max_tokens=9)) == \
+        ("decode", 16)
+    with pytest.raises(TypeError):
+        default_affinity(object())
+
+
+def test_entry_affinity_matches_submit_time_key():
+    """A queued entry re-homes (on host leave) to the SAME key its request
+    routed on — explicit-budget requests migrate where new ones route."""
+    gw, clock = _single()
+    gw.submit(Request(budget=2, x0=_x0(0)))
+    e = gw.queue.snapshot()[0]
+    assert entry_affinity(e) == \
+        default_affinity(Request(budget=2, x0=_x0(0)))
+
+
+# ---------------------------------------------------------------------------
+# WorkStealer (pure planning)
+# ---------------------------------------------------------------------------
+
+
+def _loads(**depths):
+    return {h: HostLoad(queue_depth=d, inflight=0)
+            for h, d in depths.items()}
+
+
+def test_stealer_pairs_idle_thieves_with_deepest_victims():
+    s = WorkStealer(min_queue=2, max_steal=8, idle_depth=0)
+    moves = s.plan(_loads(h0=12, h1=0, h2=0, h3=0))
+    # each thief hits the then-deepest shard; amounts halve the victim
+    assert moves == [("h0", "h1", 6), ("h0", "h2", 3), ("h0", "h3", 2)]
+
+
+def test_stealer_respects_min_queue_and_max_steal():
+    s = WorkStealer(min_queue=4, max_steal=2)
+    assert s.plan(_loads(h0=3, h1=0)) == []          # victim too shallow
+    assert s.plan(_loads(h0=9, h1=0)) == [("h0", "h1", 2)]   # capped
+    assert WorkStealer(max_steal=0).plan(_loads(h0=9, h1=0)) == []
+
+
+def test_stealer_busy_hosts_are_not_thieves():
+    s = WorkStealer()
+    loads = {"h0": HostLoad(12, 0), "h1": HostLoad(0, 3),
+             "h2": HostLoad(1, 0)}
+    assert s.plan(loads) == []       # h1 has work in flight, h2 has a queue
+    # explicit thieves override idleness detection (fake-clock benches know
+    # device busyness the snapshot cannot see)
+    assert s.plan(loads, thieves=["h2"]) == [("h0", "h2", 6)]
+
+
+def test_stealer_is_deterministic():
+    s = WorkStealer()
+    loads = _loads(h0=7, h1=7, h2=0, h3=0)
+    assert s.plan(loads) == s.plan(dict(reversed(list(loads.items()))))
+
+
+# ---------------------------------------------------------------------------
+# FleetGateway: routing + bit-identity vs the single-gateway oracle
+# ---------------------------------------------------------------------------
+
+
+def test_fleet_mixed_budget_trace_bit_identical_to_single_gateway():
+    """THE acceptance invariant: a mixed-budget trace served by a 4-host
+    fleet resolves every sample bit-identically to one Gateway serving the
+    same trace — routing, batch composition, and padding never perturb a
+    row."""
+    fleet, fclock = _fleet(4)
+    single, sclock = _single()
+    reqs = [Request(budget=BUDGETS[i % 2], x0=_x0(i)) for i in range(24)]
+    ff = [fleet.submit(r) for r in reqs]
+    sf = [single.submit(r) for r in reqs]
+    # affinity groups each budget on one host; both budget groups are live
+    homes = {fleet.home(r) for r in reqs}
+    assert len(homes) == 2
+    fclock.advance(1.0)
+    fleet.drain()
+    _drain_fake(single, sclock)
+    for f, s in zip(ff, sf):
+        np.testing.assert_array_equal(np.asarray(f.result().latents),
+                                      np.asarray(s.result().latents))
+    st = fleet.stats()
+    assert st["submitted"] == st["completed"] == 24
+    assert sum(st["routed"].values()) == 24
+
+
+def test_fleet_folded_key_path_bit_identical_to_single_gateway():
+    """No-x0 requests draw noise from fold_in(base_key, uid): the fleet's
+    shared uid counter + base key make each request's folded key exactly
+    what a lone gateway would have used at the same submission index."""
+    fleet, fclock = _fleet(3)
+    single, sclock = _single()
+    toks = jnp.zeros((3,), jnp.int32)
+    reqs = [Request(tokens=toks, budget=BUDGETS[i % 2]) for i in range(12)]
+    ff = [fleet.submit(r) for r in reqs]
+    sf = [single.submit(r) for r in reqs]
+    fclock.advance(1.0)
+    fleet.drain()
+    _drain_fake(single, sclock)
+    for f, s in zip(ff, sf):
+        np.testing.assert_array_equal(np.asarray(f.result().latents),
+                                      np.asarray(s.result().latents))
+
+
+def test_fleet_same_trace_same_seed_is_deterministic():
+    """Two fresh fleets, same trace: identical host assignments AND
+    identical sample bytes (HRW is unsalted, the toy solver is seeded)."""
+    toks = jnp.zeros((3,), jnp.int32)
+
+    def run():
+        fleet, clock = _fleet(4)
+        reqs = [Request(tokens=toks, budget=BUDGETS[i % 2])
+                for i in range(16)]
+        homes = [fleet.home(r) for r in reqs]
+        futs = [fleet.submit(r) for r in reqs]
+        clock.advance(1.0)
+        fleet.drain()
+        return homes, [np.asarray(f.result().latents) for f in futs]
+
+    homes_a, lat_a = run()
+    homes_b, lat_b = run()
+    assert homes_a == homes_b
+    for a, b in zip(lat_a, lat_b):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_fleet_submit_and_stats_plumbing():
+    fleet, clock = _fleet(2)
+    futs = [fleet.submit(budget=2, x0=_x0(i)) for i in range(3)]   # kwargs
+    clock.advance(1.0)
+    assert fleet.pump() > 0
+    assert all(f.done() for f in futs)
+    st = fleet.stats()
+    assert st["hosts"] == 2 and st["completed"] == 3
+    assert st["queue_depth"] == 0
+    assert set(st["per_host"]) == {"h0", "h1"}
+    assert 0.0 < st["occupancy"] <= 1.0
+    fleet.shutdown()
+    with pytest.raises(RuntimeError, match="draining"):
+        fleet.submit(budget=2, x0=_x0(9))
+
+
+# ---------------------------------------------------------------------------
+# Work stealing end-to-end
+# ---------------------------------------------------------------------------
+
+
+def test_steal_rebalances_deep_shard_onto_idle_hosts():
+    """One hot affinity key piles 12 requests on one shard; a steal round
+    spreads them across the idle hosts — and every sample still matches the
+    single-gateway oracle bit-for-bit (migration moves bookkeeping, never
+    noise)."""
+    fleet, fclock = _fleet(4, stealer=WorkStealer(min_queue=2, max_steal=8))
+    single, sclock = _single()
+    reqs = [Request(budget=2, x0=_x0(i)) for i in range(12)]
+    home = fleet.home(reqs[0])
+    ff = [fleet.submit(r) for r in reqs]
+    sf = [single.submit(r) for r in reqs]
+    assert fleet.stats()["queue_depths"][home] == 12
+    moved = fleet.steal_round()
+    assert moved == 11                    # 6 + 3 + 2 across the three thieves
+    depths = fleet.stats()["queue_depths"]
+    assert depths[home] == 1
+    assert sorted(d for h, d in depths.items() if h != home) == [2, 3, 6]
+    fclock.advance(1.0)
+    fleet.drain()
+    _drain_fake(single, sclock)
+    for f, s in zip(ff, sf):
+        np.testing.assert_array_equal(np.asarray(f.result().latents),
+                                      np.asarray(s.result().latents))
+    st = fleet.stats()
+    assert st["steals"] == 11 and st["steal_rounds"] == 1
+    assert st["stolen_out"] == st["stolen_in"] == 11
+    assert st["per_host"][home]["stolen_out"] == 11
+    # one count per request fleet-wide, no matter where entries migrated
+    assert st["submitted"] == st["completed"] == 12
+
+
+def test_steal_never_touches_inflight_entries():
+    """``steal`` pops QUEUED entries only: an entry a pump has taken (still
+    unresolved) is structurally unstealable."""
+    gw, clock = _single()
+    gw.submit(Request(budget=2, x0=_x0(0)))
+    gw.submit(Request(budget=2, x0=_x0(1)))
+    taken = gw.queue.snapshot()[:1]
+    gw._take(taken)                       # simulate a planned batch in flight
+    stolen = gw.steal(None)
+    assert [e.uid for e in stolen] == [1]     # only the still-queued entry
+    assert gw.load().inflight == 1
+    gw._settle(1)                         # avoid wedging the toy gateway
+    taken[0].future.set_result(None)
+
+
+def test_steal_round_skips_when_balanced_or_disabled():
+    fleet, clock = _fleet(2, steal=False)
+    fleet.submit(budget=2, x0=_x0(0))
+    assert fleet.steal_round() == 0           # stealer disabled
+    fleet2, _ = _fleet(2, stealer=WorkStealer())
+    fleet2.submit(budget=2, x0=_x0(0))
+    assert fleet2.steal_round() == 0          # victim below min_queue
+
+
+# ---------------------------------------------------------------------------
+# Host join / leave
+# ---------------------------------------------------------------------------
+
+
+def test_join_and_leave_mid_traffic_no_dropped_futures():
+    """Submit, grow the fleet, submit more, retire the busiest host: its
+    queued shard re-homes to the survivors, every future resolves, and the
+    samples still match the single-gateway oracle bit-for-bit."""
+    fleet, fclock = _fleet(3)
+    single, sclock = _single()
+    reqs = [Request(budget=BUDGETS[i % 2], x0=_x0(i)) for i in range(18)]
+    sf = [single.submit(r) for r in reqs]
+    ff = [fleet.submit(r) for r in reqs[:9]]
+    fleet.add_host("h3", Gateway(_sampler(), clock=fclock, max_batch=8,
+                                 max_wait_ms=10.0,
+                                 mixed_budget_policy="never"))
+    assert fleet.hosts == ("h0", "h1", "h2", "h3")
+    ff += [fleet.submit(r) for r in reqs[9:]]
+    victim = fleet.home(Request(budget=2, x0=_x0(0)))
+    queued = fleet.stats()["queue_depths"][victim]
+    assert queued > 0
+    fleet.remove_host(victim)
+    assert victim not in fleet.hosts
+    st = fleet.stats()
+    assert st["rerouted"] == queued
+    # nothing lost: every queued entry is in some surviving shard
+    assert st["queue_depth"] == 18
+    # migrated budget-2 entries landed where new same-key submits now route
+    new_home = fleet.home(Request(budget=2, x0=_x0(0)))
+    assert st["queue_depths"][new_home] > 0
+    fclock.advance(1.0)
+    fleet.drain()
+    _drain_fake(single, sclock)
+    assert all(f.done() for f in ff)
+    for f, s in zip(ff, sf):
+        np.testing.assert_array_equal(np.asarray(f.result().latents),
+                                      np.asarray(s.result().latents))
+
+
+def test_remove_host_bounded_drain_raises_on_wedged_engine():
+    fleet, clock = _fleet(2)
+    req = Request(budget=2, x0=_x0(0))
+    home = fleet.home(req)
+    fleet.submit(req)
+    gw = fleet._hosts[home].gateway
+    gw._take(gw.queue.snapshot())         # wedge: in flight, never resolving
+    with pytest.raises(DrainTimeout) as err:
+        fleet.remove_host(home, timeout=0.05)
+    assert err.value.stats["queue_depth"] == 0
+    assert "inflight=1" in str(err.value)
+    assert home not in fleet.hosts        # routing left BEFORE the drain
+
+
+def test_membership_validation():
+    fleet, clock = _fleet(2)
+    with pytest.raises(ValueError, match="already"):
+        fleet.add_host("h0", Gateway(_sampler(), clock=clock))
+    with pytest.raises(KeyError):
+        fleet.remove_host("nope")
+    fleet.remove_host("h1")
+    with pytest.raises(RuntimeError, match="last host"):
+        fleet.remove_host("h0")
+    with pytest.raises(ValueError, match="at least one host"):
+        FleetGateway({})
+
+
+def test_threaded_fleet_serves_on_real_clock():
+    """start() runs per-host serve threads + the balancer; futures resolve
+    without manual pumping; shutdown drains everything."""
+    hosts = {f"h{i}": Gateway(_sampler(), max_batch=4, max_wait_ms=5.0,
+                              mixed_budget_policy="never")
+             for i in range(2)}
+    fleet = FleetGateway(hosts, stealer=WorkStealer(min_queue=1))
+    fleet.start(poll_s=0.001, balance_s=0.001)
+    futs = [fleet.submit(budget=BUDGETS[i % 2], x0=_x0(i)) for i in range(6)]
+    for f in futs:
+        assert f.result(timeout=30).latents.shape == (2,)
+    fleet.shutdown(timeout=30)
+    assert fleet.stats()["completed"] == 6
+
+
+# ---------------------------------------------------------------------------
+# Emulated multi-device hosts (repro.distributed.emulate)
+# ---------------------------------------------------------------------------
+
+
+def test_emulate_hosts_raises_once_jax_is_initialized():
+    jax.devices()                         # force backend init
+    with pytest.raises(RuntimeError, match="already initialized"):
+        emulate_hosts(4)
+    with pytest.raises(ValueError):
+        emulate_hosts(0)
+
+
+def test_host_meshes_raises_without_enough_devices():
+    n = len(jax.devices())
+    with pytest.raises(RuntimeError, match="emulate_hosts"):
+        host_meshes(n + 1)
+    with pytest.raises(ValueError):
+        host_meshes(0)
+
+
+def test_emulate_hosts_subprocess_splits_cpu():
+    """The success path needs a fresh process (this one initialized jax at
+    collection): emulate_hosts(6) before the first jax touch yields 6
+    devices."""
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    code = ("from repro.distributed import emulate_hosts\n"
+            "emulate_hosts(6)\n"
+            "import jax\n"
+            "print(len(jax.devices()))\n")
+    res = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, timeout=300, env=env, cwd=REPO)
+    assert res.returncode == 0, res.stderr
+    assert res.stdout.strip().splitlines()[-1] == "6"
+
+
+@pytest.mark.skipif(len(jax.devices()) < 4,
+                    reason="needs >=4 devices (CI fleet job sets XLA_FLAGS="
+                           "--xla_force_host_platform_device_count=8)")
+def test_host_meshes_partition_is_disjoint_and_even():
+    meshes = host_meshes(4)
+    assert len(meshes) == 4
+    seen = set()
+    for m in meshes:
+        assert m.axis_names == ("data", "model")
+        ids = {d.id for d in m.devices.flat}
+        assert not ids & seen
+        seen |= ids
+    assert len(seen) == 4 * (len(jax.devices()) // 4)
+
+
+@pytest.mark.integration
+@pytest.mark.skipif(len(jax.devices()) < 4,
+                    reason="needs >=4 devices (CI fleet job sets XLA_FLAGS="
+                           "--xla_force_host_platform_device_count=8)")
+def test_fleet_on_emulated_hosts_matches_single_gateway():
+    """Acceptance run on the real backbone: 4 emulated hosts, each gateway
+    sharded on its OWN per-host mesh, serving a mixed-budget trace — every
+    sample matches the single (unsharded) Gateway serving the same trace."""
+    from repro.configs import get_config
+    from repro.core.anytime import init_anytime
+    from repro.core.schedulers import fm_ot
+    from repro.data.synthetic import DataConfig, SyntheticTokens
+    from repro.models import model as M
+    from repro.serving import AnytimeFlowSampler
+    from repro.solvers import SolverArtifact, SolverSpec
+
+    cfg = get_config("yi-6b", smoke=True)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    batch = SyntheticTokens(cfg, DataConfig(batch_size=8, seq_len=8)).batch(0)
+    art = SolverArtifact(
+        spec=SolverSpec("midpoint", mode="anytime", budgets=BUDGETS),
+        params=init_anytime(None, BUDGETS, "nested"), val_psnr=0.0)
+
+    def make_sampler():
+        return AnytimeFlowSampler.from_artifact(
+            art, params=params, cfg=cfg, sched=fm_ot())
+
+    clock = FakeClock()
+    meshes = host_meshes(4)
+    hosts = {f"h{i}": Gateway(make_sampler(), mesh=meshes[i], max_batch=4,
+                              max_wait_ms=10.0, mixed_budget_policy="never",
+                              clock=clock)
+             for i in range(4)}
+    fleet = FleetGateway(hosts, stealer=WorkStealer(min_queue=1))
+    single = Gateway(make_sampler(), max_batch=4, max_wait_ms=10.0,
+                     mixed_budget_policy="never", clock=FakeClock())
+    toks = batch["tokens"]
+    x0 = jax.random.normal(jax.random.PRNGKey(5), (8, 8, cfg.latent_dim))
+    reqs = [Request(tokens=toks[i], budget=BUDGETS[i % 2], x0=x0[i])
+            for i in range(8)]
+    ff = [fleet.submit(r) for r in reqs]
+    sf = [single.submit(r) for r in reqs]
+    assert len({fleet.home(r) for r in reqs}) >= 2
+    clock.advance(1.0)
+    fleet.drain()
+    single.drain()
+    for f, s in zip(ff, sf):
+        # 2-device data splits genuinely reassociate reductions (unlike the
+        # single-host 1x1-mesh test), so allclose, not array_equal
+        np.testing.assert_allclose(np.asarray(f.result().latents),
+                                   np.asarray(s.result().latents),
+                                   atol=1e-5, rtol=1e-5)
+    assert fleet.stats()["completed"] == 8

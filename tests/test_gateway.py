@@ -580,6 +580,28 @@ def test_drain_waits_for_inflight_batch():
     gw.stop()
 
 
+def test_drain_timeout_raises_with_stats_instead_of_hanging():
+    """Satellite fix: drain(timeout=) bounds the wait on a wedged engine —
+    it raises DrainTimeout carrying the stats snapshot (fleet host-leave
+    depends on this), and the gateway STAYS closed afterwards."""
+    from repro.serving import DrainTimeout
+
+    gw, sampler, clock = _gateway()
+    gw.submit(Request(budget=2, x0=_x0(0)))
+    entry = gw.queue.snapshot()
+    gw._take(entry)                # wedge: in flight, future never resolves
+    with pytest.raises(DrainTimeout) as err:
+        gw.drain(timeout=0.05)
+    assert "inflight=1" in str(err.value)
+    assert err.value.stats["submitted"] == 1
+    assert err.value.stats["completed"] == 0
+    with pytest.raises(RuntimeError, match="draining"):
+        gw.submit(Request(budget=2, x0=_x0(1)))   # still closed
+    gw._settle(1)                  # unwedge: drain can now finish cleanly
+    entry[0].future.set_result(None)
+    gw.drain(timeout=5.0)
+
+
 def test_stats_snapshot_consistent_under_concurrent_traffic():
     """Satellite fix: ``submitted`` moves under ``_stats_lock`` like every
     other counter (it used to ride ``_intake_lock``) and ``stats()``

@@ -115,6 +115,21 @@ def test_flow_mode_gateway_mesh_host(anytime_artifact):
     assert "gateway stats: completed=2" in res.stdout
 
 
+def test_flow_mode_fleet_gateway(anytime_artifact):
+    """--fleet 2 serves the stream through a two-host FleetGateway: all
+    requests complete and the summary reports the fleet routing stats."""
+    res = _run("--arch", "yi-6b", "--mode", "flow",
+               "--solver-artifact", anytime_artifact, "--gateway",
+               "--fleet", "2", "--max-batch", "2", "--max-wait-ms", "50",
+               "--request-budgets", "2,4", "--requests", "4",
+               "--batch", "2", "--seq", "4")
+    assert res.returncode == 0, res.stderr
+    out = res.stdout
+    assert "gateway stats: completed=4" in out
+    assert "fleet stats: hosts=2" in out
+    assert "routed:" in out
+
+
 def test_flow_mode_continuous_gateway(anytime_artifact):
     """--continuous serves the stream through the continuous-batching
     gateway: requests ride shared trajectories and the summary reports
