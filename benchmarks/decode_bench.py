@@ -15,11 +15,25 @@ list; the only difference is admission policy:
   the PR 3-style flush baseline transplanted to decode.
 
 At mixed output lengths continuous refill must STRICTLY beat
-run-to-completion on total wall-steps (every step is one backbone forward,
-so wall-steps IS the serving cost); at uniform lengths the two coincide and
-continuous must never be worse. Every simulated sequence's tokens are also
-checked against the solo-decode oracle — the refill machinery may not
-change a single token.
+run-to-completion on total wall-steps (every engine invocation is one
+backbone forward, so wall-steps IS the serving cost); at uniform lengths
+the two coincide and continuous must never be worse. Every simulated
+sequence's tokens are also checked against the solo-decode oracle — the
+refill machinery may not change a single token.
+
+Two further comparisons ride the same simulation:
+
+* CHUNKED PREFILL — the continuous gateway is also run with
+  ``prefill_chunk=0`` (legacy token-by-token teacher forcing). A prefill
+  call consumes a whole chunk of prompt tokens in ONE engine invocation,
+  so at the workload's mixed prompt lengths (1-24 tokens) chunking must
+  STRICTLY reduce total wall-steps; ``prefill_calls``/``prefill_tokens``
+  break the saving out.
+* PAGED KV — a paged run (``page_size=8``) exercises the gateway's
+  ``PageAllocator`` for real: pages are reserved at admission and freed at
+  finish, so ``peak_kv_per_slot`` (high-water pages x page_size /
+  max_slots) must come in UNDER the dense per-slot allocation
+  (cache_slots), and tokens must still match the oracle exactly.
 
 ``--check`` exits non-zero when a claim FAILs; ``--json out.json`` writes
 the summary + regression metrics CI publishes and gates on
@@ -44,24 +58,36 @@ MIXES = {
 }
 
 
+# prompt lengths (cycled per request): mixed so chunked prefill has real
+# work — a 24-token prompt costs 23 teacher-forced wall-steps but one
+# prefill call. Max prompt 24 + max output 32 - 1 = 55 < cache_slots 64.
+PROMPT_LENS = (2, 24, 6, 1, 12, 18)
+
+CACHE_SLOTS = 64       # dense per-slot KV allocation the paged run must beat
+PAGE_SIZE = 8          # page granularity for the paged simulation
+
+
 def workload(requests: int, mix: str):
-    """Deterministic request list: varied prompts (length 1-3) and the
-    mix's cycled max_tokens."""
+    """Deterministic request list: varied prompt lengths (``PROMPT_LENS``
+    cycled) and the mix's cycled max_tokens."""
     lens = MIXES[mix]
     out = []
     for i in range(requests):
-        prompt = [(7 * i + 3 + j) % 97 for j in range(1 + i % 3)]
+        plen = PROMPT_LENS[i % len(PROMPT_LENS)]
+        prompt = [(7 * i + 3 + j) % 97 for j in range(plen)]
         out.append((prompt, lens[i % len(lens)]))
     return out
 
 
 def simulate(requests: int, mix: str, max_slots: int, step_ms: float,
-             refill: bool):
+             refill: bool, prefill_chunk: int = 64, page_size: int = 0):
     """Drive one gateway to completion over the whole (saturated) queue."""
     clock = FakeClock()
-    engine = ToyDecodeEngine(on_step=lambda: clock.advance(step_ms / 1e3))
-    gw = DecodeGateway(engine, max_slots=max_slots, cache_slots=64,
-                       refill=refill, clock=clock)
+    engine = ToyDecodeEngine(on_step=lambda: clock.advance(step_ms / 1e3),
+                             page_size=page_size)
+    gw = DecodeGateway(engine, max_slots=max_slots, cache_slots=CACHE_SLOTS,
+                       refill=refill, prefill_chunk=prefill_chunk,
+                       clock=clock)
     futures, oracle = [], []
     for prompt, max_tokens in workload(requests, mix):
         futures.append(gw.submit(DecodeRequest(prompt=prompt,
@@ -79,6 +105,10 @@ def simulate(requests: int, mix: str, max_slots: int, step_ms: float,
         "p95_wait_ms": float(np.percentile(waits, 95)),
         "mean_wait_ms": float(waits.mean()),
         "tokens_out": s["tokens_out"],
+        "tokens_per_s": s["tokens_per_s"],
+        "prefill_calls": s["prefill_calls"],
+        "prefill_tokens": s["prefill_tokens"],
+        "peak_kv_per_slot": s.get("peak_kv_per_slot", 0.0),
         "joins": s["joins"],
         "matches": matches,
     }
@@ -90,6 +120,13 @@ def run(requests: int = 64, max_slots: int = 8, step_ms: float = 2.0,
     for mix in MIXES:
         cont = simulate(requests, mix, max_slots, step_ms, refill=True)
         rtc = simulate(requests, mix, max_slots, step_ms, refill=False)
+        # teacher-forced control: continuous refill, but prompts fed one
+        # token per wall-step (the pre-chunked-prefill gateway)
+        tf = simulate(requests, mix, max_slots, step_ms, refill=True,
+                      prefill_chunk=0)
+        # paged control: same chunked/continuous gateway over a page pool
+        paged = simulate(requests, mix, max_slots, step_ms, refill=True,
+                         page_size=PAGE_SIZE)
         row = {
             "mix": mix,
             "requests": requests,
@@ -97,25 +134,40 @@ def run(requests: int = 64, max_slots: int = 8, step_ms: float = 2.0,
             "step_ms": step_ms,
             "rtc_wall_steps": rtc["wall_steps"],
             "cont_wall_steps": cont["wall_steps"],
+            "tf_wall_steps": tf["wall_steps"],
             "wall_step_ratio": rtc["wall_steps"]
             / max(cont["wall_steps"], 1),
+            "prefill_ratio": tf["wall_steps"] / max(cont["wall_steps"], 1),
+            "prefill_calls": cont["prefill_calls"],
+            "prefill_tokens": cont["prefill_tokens"],
             "rtc_occupancy": rtc["occupancy"],
             "cont_occupancy": cont["occupancy"],
             "rtc_p95_wait_ms": rtc["p95_wait_ms"],
             "cont_p95_wait_ms": cont["p95_wait_ms"],
+            "cont_tokens_per_s": cont["tokens_per_s"],
             "joins": cont["joins"],
             "tokens_out": cont["tokens_out"],
             "rtc_tokens_out": rtc["tokens_out"],
             "cont_matches": cont["matches"],
             "rtc_matches": rtc["matches"],
+            "paged_matches": paged["matches"],
+            "paged_wall_steps": paged["wall_steps"],
+            "paged_peak_kv_per_slot": paged["peak_kv_per_slot"],
+            "cache_slots": CACHE_SLOTS,
+            "page_size": PAGE_SIZE,
         }
         rows.append(row)
         log(f"{mix}: wall-steps {row['rtc_wall_steps']} (run-to-completion)"
             f" -> {row['cont_wall_steps']} (continuous, "
-            f"{row['wall_step_ratio']:.2f}x fewer); occupancy "
+            f"{row['wall_step_ratio']:.2f}x fewer); teacher-forced prefill "
+            f"{row['tf_wall_steps']} -> chunked {row['cont_wall_steps']} "
+            f"({row['prefill_ratio']:.2f}x fewer, {row['prefill_calls']} "
+            f"prefill calls / {row['prefill_tokens']} tokens); occupancy "
             f"{row['rtc_occupancy']:.2f} -> {row['cont_occupancy']:.2f}; "
             f"p95 wait {row['rtc_p95_wait_ms']:.0f}ms -> "
-            f"{row['cont_p95_wait_ms']:.0f}ms; {row['joins']} joins")
+            f"{row['cont_p95_wait_ms']:.0f}ms; {row['joins']} joins; paged "
+            f"peak KV/slot {row['paged_peak_kv_per_slot']:.1f} vs dense "
+            f"{CACHE_SLOTS}")
     return rows
 
 
@@ -123,17 +175,29 @@ def check_claims(rows):
     notes = []
     for r in rows:
         n = r["requests"]
-        ok = r["cont_matches"] == n and r["rtc_matches"] == n
+        ok = (r["cont_matches"] == n and r["rtc_matches"] == n
+              and r["paged_matches"] == n)
         notes.append(f"[{'PASS' if ok else 'FAIL'}] {r['mix']}: every served "
                      f"sequence matches the solo-decode oracle "
                      f"({r['cont_matches']}/{n} continuous, "
-                     f"{r['rtc_matches']}/{n} run-to-completion)")
+                     f"{r['rtc_matches']}/{n} run-to-completion, "
+                     f"{r['paged_matches']}/{n} paged)")
         if r["mix"] == "mixed":
             ok = r["wall_step_ratio"] > 1.0
             notes.append(f"[{'PASS' if ok else 'FAIL'}] continuous slot "
                          f"refill STRICTLY beats run-to-completion on total "
                          f"wall-steps at mixed output lengths "
                          f"(got {r['wall_step_ratio']:.2f}x)")
+            ok = r["prefill_ratio"] > 1.0
+            notes.append(f"[{'PASS' if ok else 'FAIL'}] chunked prefill "
+                         f"STRICTLY reduces wall-steps vs teacher-forced "
+                         f"prompt feeding at mixed prompt lengths "
+                         f"(got {r['prefill_ratio']:.2f}x)")
+            ok = r["paged_peak_kv_per_slot"] < r["cache_slots"]
+            notes.append(f"[{'PASS' if ok else 'FAIL'}] paged KV peak "
+                         f"resident memory per slot beats the dense "
+                         f"allocation ({r['paged_peak_kv_per_slot']:.1f} < "
+                         f"{r['cache_slots']} cache slots)")
             ok = r["joins"] > 0
             notes.append(f"[{'PASS' if ok else 'FAIL'}] mixed workload "
                          f"exercises mid-flight admission "
@@ -153,11 +217,15 @@ def metrics(rows):
     for r in rows:
         out[f"{r['mix']}.wall_step_ratio"] = {
             "value": round(r["wall_step_ratio"], 4), "higher_better": True}
+        out[f"{r['mix']}.prefill_ratio"] = {
+            "value": round(r["prefill_ratio"], 4), "higher_better": True}
         out[f"{r['mix']}.cont_occupancy"] = {
             "value": round(r["cont_occupancy"], 4), "higher_better": True}
-    out["mixed.joins"] = {
-        "value": next(r["joins"] for r in rows if r["mix"] == "mixed"),
-        "higher_better": True}
+    mixed = next(r for r in rows if r["mix"] == "mixed")
+    out["mixed.joins"] = {"value": mixed["joins"], "higher_better": True}
+    out["mixed.paged_kv_per_slot"] = {
+        "value": round(mixed["paged_peak_kv_per_slot"], 4),
+        "higher_better": False}
     return out
 
 
@@ -181,7 +249,9 @@ def main() -> None:
     for r in rows:
         print(f"decode/{r['mix']},{r['cont_wall_steps']},"
               f"wall_step_ratio={r['wall_step_ratio']:.2f};"
-              f"occupancy={r['cont_occupancy']:.2f};joins={r['joins']}")
+              f"prefill_ratio={r['prefill_ratio']:.2f};"
+              f"occupancy={r['cont_occupancy']:.2f};joins={r['joins']};"
+              f"paged_kv_per_slot={r['paged_peak_kv_per_slot']:.1f}")
     if args.json:
         with open(args.json, "w") as f:
             json.dump({"bench": "decode", "rows": rows, "claims": notes,

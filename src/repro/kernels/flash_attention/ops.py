@@ -1,11 +1,12 @@
-"""Jit'd wrapper for flash attention with layout adaptation to the model's
-(B, L, H, hd) convention and kernel/ref dispatch."""
+"""Jit'd wrappers for the attention kernels with layout adaptation to the
+model's conventions and kernel/ref dispatch."""
 from __future__ import annotations
 
 import jax
 
 from repro.kernels.flash_attention.flash_attention import flash_attention
-from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.flash_attention.paged_attention import paged_attention
+from repro.kernels.flash_attention.ref import attention_ref, paged_attention_ref
 
 
 def attend(q, k, v, *, causal: bool = True, use_kernel: bool = True,
@@ -21,3 +22,16 @@ def attend(q, k, v, *, causal: bool = True, use_kernel: bool = True,
             interpret = jax.default_backend() != "tpu"
         out = flash_attention(qt, kt, vt, causal=causal, interpret=interpret)
     return out.transpose(0, 2, 1, 3)
+
+
+def paged_attend(q, k_pages, v_pages, block_table, lengths, *,
+                 use_kernel: bool = True, interpret: bool | None = None):
+    """One-token paged decode attention; q: (B, KV, G, hd) grouped heads,
+    k_pages/v_pages: (num_pages, page_size, KV, hd), block_table: (B, nb),
+    lengths: (B,). Kernel/oracle dispatch mirrors ``attend``."""
+    if not use_kernel:
+        return paged_attention_ref(q, k_pages, v_pages, block_table, lengths)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return paged_attention(q, k_pages, v_pages, block_table, lengths,
+                           interpret=interpret)

@@ -1,4 +1,5 @@
-"""Pure-jnp oracle for flash attention (GQA, causal)."""
+"""Pure-jnp oracles for flash attention (GQA, causal) and paged decode
+attention (block-table gather)."""
 import jax
 import jax.numpy as jnp
 
@@ -17,3 +18,26 @@ def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
     w = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bkgqs,bksh->bkgqh", w, v.astype(jnp.float32))
     return o.reshape(B, H, Lq, hd).astype(q.dtype)
+
+
+def paged_attention_ref(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+                        block_table: jax.Array,
+                        lengths: jax.Array) -> jax.Array:
+    """Dense-gather oracle for the paged decode kernel.
+
+    q: (B, KV, G, hd); k_pages/v_pages: (num_pages, page_size, KV, hd);
+    block_table: (B, nb) int32; lengths: (B,) valid positions per row.
+    """
+    B, KV, G, hd = q.shape
+    ps = k_pages.shape[1]
+    nb = block_table.shape[1]
+    # (B, nb, ps, KV, hd) -> (B, nb*ps, KV, hd): row b's logical positions
+    k = k_pages[block_table].reshape(B, nb * ps, KV, hd).astype(jnp.float32)
+    v = v_pages[block_table].reshape(B, nb * ps, KV, hd).astype(jnp.float32)
+    qf = q.astype(jnp.float32) * hd ** -0.5
+    s = jnp.einsum("bkgh,bskh->bkgs", qf, k)
+    valid = jnp.arange(nb * ps)[None, :] < lengths[:, None]
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskh->bkgh", w, v)
+    return o.astype(q.dtype)

@@ -41,7 +41,11 @@ submitted to a fixed pool of --max-slots state slots; finished sequences
 free their slot and queued prompts are admitted at the very next engine
 step, bit-identical to decoding each prompt alone. --decode-lengths cycles
 per-request max_tokens (mixed output lengths are where continuous refill
-beats run-to-completion batching).
+beats run-to-completion batching). --page-size switches the KV cache to a
+shared paged pool (--paged-kernel routes attention through the Pallas
+paged-attention kernel), --prefill-chunk controls batched chunked prompt
+prefill (0 = token-by-token teacher forcing), and --temperature/--top-k/
+--top-p sample instead of greedy argmax (temperature 0 = greedy).
 """
 from __future__ import annotations
 
@@ -274,7 +278,9 @@ def serve_decode(args) -> None:
     params = M.init_params(jax.random.PRNGKey(args.seed), cfg)
     if args.ckpt:
         params = checkpointer.restore(args.ckpt, params)
-    engine = DecodeEngine(params=params, cfg=cfg, window=args.window)
+    engine = DecodeEngine(params=params, cfg=cfg, window=args.window,
+                          page_size=args.page_size,
+                          paged_kernel=args.paged_kernel)
     if args.gateway:
         _serve_decode_gateway(args, engine, cfg)
         return
@@ -286,17 +292,25 @@ def serve_decode(args) -> None:
 def _serve_decode_gateway(args, engine, cfg) -> None:
     """Continuous decode batching: every request is one prompt -> state slot."""
     from repro.serving.decode import DecodeGateway, DecodeRequest
+    from repro.serving.engine import SamplingParams
 
     lengths = args.decode_lengths or (args.steps, max(1, args.steps // 2))
+    sampling = None
+    if args.temperature > 0.0 or args.top_k > 0 or args.top_p < 1.0:
+        sampling = SamplingParams(temperature=args.temperature,
+                                  top_k=args.top_k, top_p=args.top_p)
     gw = DecodeGateway(engine, max_slots=args.max_slots,
-                       cache_slots=args.slots)
+                       cache_slots=args.slots,
+                       prefill_chunk=args.prefill_chunk,
+                       key=jax.random.PRNGKey(args.seed))
     gw.start()
     t0 = time.time()
     futures = []
     for req in range(args.requests):
         prompt = [(3 * req + 1) % cfg.vocab, (5 * req + 2) % cfg.vocab]
         futures.append(gw.submit(DecodeRequest(
-            prompt=prompt, max_tokens=lengths[req % len(lengths)])))
+            prompt=prompt, max_tokens=lengths[req % len(lengths)],
+            sampling=sampling)))
     gw.shutdown()
     for i, fut in enumerate(futures):
         meta = fut.result().meta
@@ -309,7 +323,13 @@ def _serve_decode_gateway(args, engine, cfg) -> None:
           f"steps={s['forwards']} tokens={s['tokens_out']} "
           f"tokens/s={s['tokens_out'] / max(wall, 1e-9):.1f} "
           f"slot_occupancy={s['slot_occupancy']:.2f} joins={s['joins']} "
+          f"prefill_calls={s['prefill_calls']} "
           f"mean_wait={s['mean_wait_ms']:.1f}ms")
+    if "page_size" in s:
+        print(f"paged kv: page_size={s['page_size']} "
+              f"peak_pages={s['peak_pages']} "
+              f"peak_kv_per_slot={s['peak_kv_per_slot']:.1f} "
+              f"(dense would be {args.slots})")
 
 
 def _budget_list(text: str) -> tuple[int, ...]:
@@ -373,6 +393,25 @@ def main() -> None:
                     help="decode gateway: per-request max_tokens, cycled "
                          "over --requests (default: --steps and --steps/2 — "
                          "mixed lengths exercise continuous slot refill)")
+    ap.add_argument("--page-size", type=int, default=0,
+                    help="decode: paged KV cache page size in tokens "
+                         "(0 = dense per-slot cache); must divide --slots")
+    ap.add_argument("--paged-kernel", action="store_true",
+                    help="decode: route paged attention through the Pallas "
+                         "paged-attention kernel (interpret mode off-TPU)")
+    ap.add_argument("--prefill-chunk", type=int, default=64,
+                    help="decode gateway: batched prefill chunk width in "
+                         "tokens (0 = legacy token-by-token teacher "
+                         "forcing)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="decode gateway: sampling temperature "
+                         "(0 = greedy argmax)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="decode gateway: keep only the k most likely "
+                         "tokens before sampling (0 = no cap)")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="decode gateway: nucleus sampling threshold "
+                         "(1.0 = no cap)")
     ap.add_argument("--mixed-budget-policy", default="auto",
                     choices=["never", "auto", "always"],
                     help="gateway: route multi-budget flushes through the "

@@ -30,6 +30,37 @@ class KVCache(NamedTuple):
         return self.k.shape[1]
 
 
+class PagedKVCache(NamedTuple):
+    """vLLM-style paged KV cache: K/V live in a SHARED pool of fixed-size
+    pages and each sequence row owns a block-table row mapping its logical
+    block index to a physical page id, so resident cache memory per slot is
+    the pages the sequence actually uses, not ``max_seq_len`` dense rows.
+
+    Page 0 is RESERVED as the trash page: freed/inactive rows' block-table
+    entries point at it, so the write a masked-out row still computes inside
+    the one compiled ``step_slots`` program lands in a page nobody attends
+    over (the pool has no per-row axis, so it cannot be write-masked the way
+    the dense cache's rows are — see ``DecodeEngine._mask_rows``). The page
+    allocator (``repro.serving.decode.PageAllocator``) never hands page 0
+    out.
+    """
+
+    k_pages: Array      # (L, num_pages, page_size, KV, hd) shared pool
+    v_pages: Array      # (L, num_pages, page_size, KV, hd)
+    block_table: Array  # (B, blocks_per_slot) int32 physical page ids
+    index: Array        # (B,) int32 tokens already decoded per row
+
+    @property
+    def page_size(self) -> int:
+        return self.k_pages.shape[-3]
+
+    @property
+    def capacity(self) -> int:
+        """Logical positions addressable per row (block-table width x page
+        size) — the paged analogue of ``KVCache.slots``."""
+        return self.block_table.shape[1] * self.page_size
+
+
 def init_kv_cache(batch: int, slots: int, n_kv: int, head_dim: int,
                   dtype=jnp.bfloat16) -> KVCache:
     shape = (batch, slots, n_kv, head_dim)
@@ -223,6 +254,78 @@ def decode_attention(
     out = _grouped_attend(q, k.astype(q.dtype), v.astype(q.dtype), mask)
     out = out.reshape(B, 1, n_heads * head_dim) @ p["wo"]
     return out, KVCache(k=k, v=v, index=pos + 1)
+
+
+def decode_attention_paged(
+    p: dict,
+    x: Array,                    # (B, 1, d) — the new token
+    k_pages: Array,              # (num_pages, page_size, KV, hd) one layer
+    v_pages: Array,
+    block_table: Array,          # (B, nb) int32 page ids
+    pos: Array,                  # (B,) int32 decode position per row
+    *,
+    n_heads: int,
+    n_kv: int,
+    head_dim: int,
+    rope_theta: float,
+    norm_eps: float = 1e-5,
+    kernel: bool = False,
+) -> tuple[Array, Array, Array]:
+    """One-token decode over one layer's slice of a paged KV cache.
+
+    The new K/V land at page ``block_table[b, pos // page_size]`` offset
+    ``pos % page_size``; attention then runs over the row's own pages only.
+    ``kernel=False`` is the dense-gather fallback — it reassembles the
+    row-major (B, nb*ps, KV, hd) layout and reuses ``_grouped_attend``, so
+    with ``nb * page_size == cache_slots`` its output is BIT-IDENTICAL to
+    ``decode_attention`` over the dense cache (same shapes, same ops; masked
+    positions are NEG_INF in both paths, so pool garbage never leaks).
+    ``kernel=True`` routes through the Pallas paged-attention kernel
+    (``kernels.flash_attention.paged_attention``), which DMAs pages via a
+    scalar-prefetched block table instead of gathering a dense copy.
+
+    Returns (out, k_pages, v_pages); the caller advances ``index``.
+    """
+    B, Lq, _ = x.shape
+    assert Lq == 1
+    G = n_heads // n_kv
+    ps = k_pages.shape[1]
+    nb = block_table.shape[1]
+    q = _split_heads(x @ p["wq"], n_heads, head_dim)
+    k_new = _split_heads(x @ p["wk"], n_kv, head_dim)
+    v_new = _split_heads(x @ p["wv"], n_kv, head_dim)
+    if "q_norm" in p:
+        q = rms_norm(q, p["q_norm"], norm_eps)
+        k_new = rms_norm(k_new, p["k_norm"], norm_eps)
+    posb = pos[:, None]                                         # (B, 1)
+    q = apply_rope(q, posb, rope_theta)
+    k_new = apply_rope(k_new, posb, rope_theta)
+
+    # write the new K/V into each row's own page (clamped like the dense
+    # non-windowed path; the gateway rejects over-capacity requests).
+    # Inactive rows' block tables point at the reserved trash page 0.
+    posw = jnp.minimum(pos, nb * ps - 1)
+    rows = jnp.arange(B)
+    page = block_table[rows, posw // ps]                        # (B,)
+    off = posw % ps
+    k_pages = k_pages.at[page, off].set(k_new[:, 0].astype(k_pages.dtype))
+    v_pages = v_pages.at[page, off].set(v_new[:, 0].astype(v_pages.dtype))
+
+    qg = q.reshape(B, n_kv, G, head_dim)
+    if kernel:
+        from repro.kernels.flash_attention.ops import paged_attend
+
+        out = paged_attend(qg, k_pages, v_pages, block_table, pos + 1)
+        out = out.reshape(B, 1, n_heads * head_dim).astype(x.dtype)
+    else:
+        # dense-gather fallback: row b's logical positions, page-major
+        k = k_pages[block_table].reshape(B, nb * ps, n_kv, head_dim)
+        v = v_pages[block_table].reshape(B, nb * ps, n_kv, head_dim)
+        valid = jnp.arange(nb * ps)[None, :] <= pos[:, None]
+        out = _grouped_attend(qg[:, None], k.astype(q.dtype),
+                              v.astype(q.dtype), valid[:, None, :])
+        out = out.reshape(B, 1, n_heads * head_dim)
+    return out @ p["wo"], k_pages, v_pages
 
 
 def cross_attention_forward(

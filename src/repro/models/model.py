@@ -92,19 +92,44 @@ def init_decode_state(cfg: ModelConfig, batch: int, slots: int,
     raise KeyError(cfg.family)
 
 
-def decode_state_batch_axes(cfg: ModelConfig):
+PAGED_FAMILIES = ("dense", "moe", "vlm")   # KV-cache families that can page
+
+
+def init_paged_decode_state(cfg: ModelConfig, batch: int, num_pages: int,
+                            page_size: int, blocks_per_slot: int,
+                            dtype=jnp.bfloat16):
+    """Paged decode state (``PagedKVCache``) for the KV-cache families.
+    Recurrent/hybrid/encdec state has no pageable KV axis — the SSM family's
+    state is already O(1) per slot, and hybrid/encdec are rejected upstream
+    (``DecodeEngine``)."""
+    if cfg.family not in PAGED_FAMILIES:
+        raise TypeError(f"paged KV cache not supported for {cfg.family!r} "
+                        f"(pageable families: {PAGED_FAMILIES})")
+    return transformer.init_paged_caches(cfg, batch, num_pages, page_size,
+                                         blocks_per_slot, dtype)
+
+
+def decode_state_batch_axes(cfg: ModelConfig, paged: bool = False):
     """Pytree (matching ``init_decode_state``'s structure) of the BATCH axis
     per state leaf — the axis indexed by sequence slot. Slot serving
     (``DecodeEngine.step_slots``) uses this to write-mask, gather, and reset
     individual sequences' state rows without knowing each family's layout.
     ``index`` reads as axis 0 of the per-row ``(B,)`` vector form (scalar
     index states cannot be slot-masked — positions must be per row).
+
+    ``paged=True``: the page POOL leaves have no per-row axis and read as
+    ``-1`` — they cannot be row-masked; isolation comes from exclusive
+    page ownership plus the reserved trash page (see ``PagedKVCache``), so
+    masked steps take the new pool unconditionally and resets leave it
+    untouched.
     """
-    from repro.models.attention import KVCache
+    from repro.models.attention import KVCache, PagedKVCache
     from repro.models.mamba2 import HybridState
     from repro.models.rwkv6 import RWKVState
     from repro.models.whisper import EncDecState
 
+    if paged and cfg.family in PAGED_FAMILIES:
+        return PagedKVCache(k_pages=-1, v_pages=-1, block_table=0, index=0)
     if cfg.family in ("dense", "moe", "vlm"):
         return KVCache(k=1, v=1, index=0)
     if cfg.family == "ssm":
@@ -117,11 +142,14 @@ def decode_state_batch_axes(cfg: ModelConfig):
 
 
 def decode_apply(params: dict, cfg: ModelConfig, token: Array, state, *,
-                 window: int = 0):
+                 window: int = 0, paged_kernel: bool = False):
     if cfg.family == "dense":
-        return transformer.decode_step(params, cfg, token, state, window=window)
+        return transformer.decode_step(params, cfg, token, state,
+                                       window=window,
+                                       paged_kernel=paged_kernel)
     if cfg.family == "moe":
-        return moe.decode_step(params, cfg, token, state, window=window)
+        return moe.decode_step(params, cfg, token, state, window=window,
+                               paged_kernel=paged_kernel)
     if cfg.family == "ssm":
         return rwkv6.decode_step(params, cfg, token, state)
     if cfg.family == "hybrid":
@@ -129,7 +157,8 @@ def decode_apply(params: dict, cfg: ModelConfig, token: Array, state, *,
     if cfg.family == "encdec":
         return whisper.decode_step(params, cfg, token, state)
     if cfg.family == "vlm":
-        return vlm.decode_step(params, cfg, token, state, window=window)
+        return vlm.decode_step(params, cfg, token, state, window=window,
+                               paged_kernel=paged_kernel)
     raise KeyError(cfg.family)
 
 

@@ -22,7 +22,14 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.models.attention import KVCache, attention_forward, decode_attention, init_attention
+from repro.models.attention import (
+    KVCache,
+    PagedKVCache,
+    attention_forward,
+    decode_attention,
+    decode_attention_paged,
+    init_attention,
+)
 from repro.models.layers import dense_init, rms_norm, stack_layer_params
 from repro.models.transformer import cast_params, init_flow_head
 
@@ -205,25 +212,45 @@ def lm_forward(params: dict, cfg: ModelConfig, tokens: Array,
     return h @ params["lm_head"], aux
 
 
-def decode_step(params: dict, cfg: ModelConfig, token: Array, caches: KVCache,
-                *, window: int = 0) -> tuple[Array, KVCache]:
+def decode_step(params: dict, cfg: ModelConfig, token: Array, caches,
+                *, window: int = 0, paged_kernel: bool = False):
     h = params["embed"][token][:, None, :]
     hd = cfg.resolved_head_dim
-    attn_kw = dict(n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, head_dim=hd,
-                   rope_theta=cfg.rope_theta, window=window, norm_eps=cfg.norm_eps)
+    paged = isinstance(caches, PagedKVCache)
+    if paged:
+        pos = jnp.broadcast_to(caches.index, (h.shape[0],)).astype(jnp.int32)
+        attn_kw = dict(n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, head_dim=hd,
+                       rope_theta=cfg.rope_theta, norm_eps=cfg.norm_eps,
+                       kernel=paged_kernel)
+    else:
+        attn_kw = dict(n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, head_dim=hd,
+                       rope_theta=cfg.rope_theta, window=window,
+                       norm_eps=cfg.norm_eps)
 
     def body(carry, xs):
         h = carry
         layer_p, k_c, v_c = xs
-        cache = KVCache(k=k_c, v=v_c, index=caches.index)
-        attn_out, cache = decode_attention(
-            layer_p["attn"], rms_norm(h, layer_p["norm1"], cfg.norm_eps),
-            cache, **attn_kw)
+        hn = rms_norm(h, layer_p["norm1"], cfg.norm_eps)
+        if paged:
+            attn_out, k_c, v_c = decode_attention_paged(
+                layer_p["attn"], hn, k_c, v_c, caches.block_table, pos,
+                **attn_kw)
+        else:
+            cache = KVCache(k=k_c, v=v_c, index=caches.index)
+            attn_out, cache = decode_attention(layer_p["attn"], hn, cache,
+                                               **attn_kw)
+            k_c, v_c = cache.k, cache.v
         h = h + attn_out
         mlp_out, _ = moe_mlp(layer_p["moe"],
                              rms_norm(h, layer_p["norm2"], cfg.norm_eps), cfg)
-        return h + mlp_out, (cache.k, cache.v)
+        return h + mlp_out, (k_c, v_c)
 
-    h, (ks, vs) = jax.lax.scan(body, h, (params["layers"], caches.k, caches.v))
+    kv_in = (caches.k_pages, caches.v_pages) if paged else (caches.k, caches.v)
+    h, (ks, vs) = jax.lax.scan(body, h, (params["layers"],) + kv_in)
     h = rms_norm(h, params["final_norm"], cfg.norm_eps)[:, 0, :]
-    return h @ params["lm_head"], KVCache(k=ks, v=vs, index=caches.index + 1)
+    logits = h @ params["lm_head"]
+    if paged:
+        return logits, PagedKVCache(k_pages=ks, v_pages=vs,
+                                    block_table=caches.block_table,
+                                    index=pos + 1)
+    return logits, KVCache(k=ks, v=vs, index=caches.index + 1)

@@ -23,8 +23,10 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.models.attention import (
     KVCache,
+    PagedKVCache,
     attention_forward,
     decode_attention,
+    decode_attention_paged,
     init_attention,
     init_kv_cache,
 )
@@ -148,32 +150,73 @@ def init_caches(cfg: ModelConfig, batch: int, slots: int, dtype=jnp.bfloat16) ->
     )
 
 
-def decode_step(params: dict, cfg: ModelConfig, token: Array, caches: KVCache,
-                *, window: int = 0) -> tuple[Array, KVCache]:
-    """One-token decode: token (B,) int32 -> (logits (B, V), new caches)."""
+def init_paged_caches(cfg: ModelConfig, batch: int, num_pages: int,
+                      page_size: int, blocks_per_slot: int,
+                      dtype=jnp.bfloat16) -> PagedKVCache:
+    """Paged decode state: a shared (L, num_pages, page_size, KV, hd) pool
+    plus a zeroed per-row block table — all rows start on the reserved
+    trash page 0 (see ``PagedKVCache``) until the gateway's page allocator
+    assigns them real pages at admission."""
+    hd = cfg.resolved_head_dim
+    shape = (cfg.n_layers, num_pages, page_size, cfg.n_kv_heads, hd)
+    return PagedKVCache(
+        k_pages=jnp.zeros(shape, dtype),
+        v_pages=jnp.zeros(shape, dtype),
+        block_table=jnp.zeros((batch, blocks_per_slot), jnp.int32),
+        index=jnp.zeros((batch,), jnp.int32),
+    )
+
+
+def decode_step(params: dict, cfg: ModelConfig, token: Array, caches,
+                *, window: int = 0,
+                paged_kernel: bool = False):
+    """One-token decode: token (B,) int32 -> (logits (B, V), new caches).
+
+    ``caches`` is a dense ``KVCache`` or a ``PagedKVCache``; the layer scan
+    carries each layer's cache slice either way (dense rows vs page-pool
+    slices + the shared block table)."""
     h = params["embed"][token][:, None, :]                     # (B, 1, d)
     hd = cfg.resolved_head_dim
-    attn_kw = dict(n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, head_dim=hd,
-                   rope_theta=cfg.rope_theta, window=window,
-                   norm_eps=cfg.norm_eps)
+    paged = isinstance(caches, PagedKVCache)
+    if paged:
+        pos = jnp.broadcast_to(caches.index, (h.shape[0],)).astype(jnp.int32)
+        attn_kw = dict(n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, head_dim=hd,
+                       rope_theta=cfg.rope_theta, norm_eps=cfg.norm_eps,
+                       kernel=paged_kernel)
+    else:
+        attn_kw = dict(n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, head_dim=hd,
+                       rope_theta=cfg.rope_theta, window=window,
+                       norm_eps=cfg.norm_eps)
 
     def body(carry, xs):
         h = carry
         layer_p, k_c, v_c = xs
-        cache = KVCache(k=k_c, v=v_c, index=caches.index)
         hn = rms_norm(h, layer_p["norm1"], cfg.norm_eps)
-        attn_out, cache = decode_attention(layer_p["attn"], hn, cache, **attn_kw)
+        if paged:
+            attn_out, k_c, v_c = decode_attention_paged(
+                layer_p["attn"], hn, k_c, v_c, caches.block_table, pos,
+                **attn_kw)
+        else:
+            cache = KVCache(k=k_c, v=v_c, index=caches.index)
+            attn_out, cache = decode_attention(layer_p["attn"], hn, cache,
+                                               **attn_kw)
+            k_c, v_c = cache.k, cache.v
         if cfg.parallel_block:
             h = h + attn_out + swiglu(hn, **layer_p["mlp"])
         else:
             h = h + attn_out
             h = h + swiglu(rms_norm(h, layer_p["norm2"], cfg.norm_eps),
                            **layer_p["mlp"])
-        return h, (cache.k, cache.v)
+        return h, (k_c, v_c)
 
-    h, (ks, vs) = jax.lax.scan(body, h, (params["layers"], caches.k, caches.v))
+    kv_in = (caches.k_pages, caches.v_pages) if paged else (caches.k, caches.v)
+    h, (ks, vs) = jax.lax.scan(body, h, (params["layers"],) + kv_in)
     h = rms_norm(h, params["final_norm"], cfg.norm_eps)[:, 0, :]
     logits = h @ (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    if paged:
+        return logits, PagedKVCache(k_pages=ks, v_pages=vs,
+                                    block_table=caches.block_table,
+                                    index=pos + 1)
     return logits, KVCache(k=ks, v=vs, index=caches.index + 1)
 
 

@@ -51,7 +51,8 @@ def init_state(cfg: ModelConfig, batch: int, slots: int,
     return transformer.init_caches(cfg, batch, slots, dtype)
 
 
-def decode_step(params: dict, cfg: ModelConfig, token: Array, caches: KVCache,
-                *, window: int = 0):
+def decode_step(params: dict, cfg: ModelConfig, token: Array, caches,
+                *, window: int = 0, paged_kernel: bool = False):
     """Text decode after the multimodal prefix is already in the cache."""
-    return transformer.decode_step(params, cfg, token, caches, window=window)
+    return transformer.decode_step(params, cfg, token, caches, window=window,
+                                   paged_kernel=paged_kernel)

@@ -12,10 +12,14 @@ stats):
   trajectories at exit boundaries).
 * DECODE — ``DecodeEngine`` (autoregressive decode with KV-cache /
   recurrent state, jit'd multi-token ``greedy`` plus the slot-masked
-  ``step_slots`` API), fronted by ``DecodeGateway`` (continuous batching
-  over per-sequence state slots: finished sequences free their row, queued
-  sequences are admitted at the next engine step, per-slot stop
-  conditions).
+  ``step_slots``/``prefill_slots`` API; ``page_size > 0`` swaps the dense
+  per-slot cache for a shared paged pool + block tables, optionally through
+  the Pallas paged-attention kernel; per-request ``SamplingParams`` add
+  temperature/top-k/top-p beside greedy), fronted by ``DecodeGateway``
+  (continuous batching over per-sequence state slots: finished sequences
+  free their row AND their KV pages, queued sequences are admitted at the
+  next engine step with chunked batched prefill, per-slot stop conditions,
+  cancelled futures released at the next pump).
 
 Five layers, bottom up — each consumes the one below and widens the
 concurrency it can absorb:
@@ -43,7 +47,10 @@ concurrency it can absorb:
 
 Module map:
 
-``engine``  — ``FlowSampler``, ``AnytimeFlowSampler``, ``DecodeEngine``;
+``engine``  — ``FlowSampler``, ``AnytimeFlowSampler``, ``DecodeEngine``
+              (paged KV via ``page_size``/``paged_kernel``), plus
+              ``SamplingParams``/``sample_tokens`` (temperature / top-k /
+              top-p, Gumbel-max over sorted-logit cutoffs);
 ``zoo``     — ``SolverZoo``, the LRU SolverSpec -> SolverArtifact cache with
               directory scan, lazy distill-on-miss, preload and spill;
 ``gateway`` — ``GatewayBase``/``Gateway``/``BatchScheduler``: async request
@@ -53,8 +60,11 @@ Module map:
               ``drain(timeout=)`` raising ``DrainTimeout``);
 ``continuous`` — ``ContinuousGateway``/``ContinuousScheduler``, flow-side
               continuous batching at anytime exit boundaries;
-``decode``  — ``DecodeGateway``/``DecodeRequest``/``DecodeResponse``,
-              decode-side continuous batching over fixed state slots;
+``decode``  — ``DecodeGateway``/``DecodeRequest``/``DecodeResponse`` and
+              ``PageAllocator``: decode-side continuous batching over fixed
+              state slots — chunked batched prefill, paged-KV page
+              accounting (reserve at admission, free on finish, head-of-
+              line blocking), per-request sampling routing;
 ``fleet``   — ``FleetGateway``/``FleetRouter``/``WorkStealer``: multi-host
               federation, sharded request queue, affinity routing, work
               stealing, graceful host join/leave (emulated-host CI via
@@ -64,14 +74,21 @@ Module map:
 ``toy``     — protocol-complete toy sampler/engine for benchmarks + tests.
 """
 from repro.serving.continuous import ContinuousGateway, ContinuousScheduler
-from repro.serving.decode import DecodeGateway, DecodeRequest, DecodeResponse
+from repro.serving.decode import (
+    DecodeGateway,
+    DecodeRequest,
+    DecodeResponse,
+    PageAllocator,
+)
 from repro.serving.engine import (
     AnytimeFlowSampler,
     DecodeEngine,
     FlowSampler,
+    SamplingParams,
     greedy_demo,
     nearest_budget,
     nearest_latent_tokens,
+    sample_tokens,
 )
 from repro.serving.fleet import FleetGateway, FleetRouter, WorkStealer
 from repro.serving.gateway import (
@@ -91,6 +108,7 @@ __all__ = ["AnytimeFlowSampler", "BatchScheduler", "ContinuousGateway",
            "ContinuousScheduler", "DecodeEngine", "DecodeGateway",
            "DecodeRequest", "DecodeResponse", "DrainTimeout", "FleetGateway",
            "FleetRouter", "FlowSampler", "Gateway", "GatewayBase",
-           "GatewayStats", "HostLoad", "Request", "RequestQueue", "Response",
-           "SolverZoo", "WorkStealer", "ZooStats", "greedy_demo",
-           "nearest_budget", "nearest_latent_tokens"]
+           "GatewayStats", "HostLoad", "PageAllocator", "Request",
+           "RequestQueue", "Response", "SamplingParams", "SolverZoo",
+           "WorkStealer", "ZooStats", "greedy_demo", "nearest_budget",
+           "nearest_latent_tokens", "sample_tokens"]

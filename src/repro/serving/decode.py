@@ -20,24 +20,66 @@ Continuous slot refill
   drains to empty before refilling (run-to-completion batching does, and
   pays ``max(lengths)`` wall-steps per wave; see ``refill=False`` and
   ``benchmarks/decode_bench.py``).
-* Admission resets the slot's state row to zeros (``reset_slots``) and
-  feeds the prompt token by token (teacher-forced prefill), then greedy
-  decode continues from the prompt's last token. Rows are independent
-  through the backbone and each row carries its own position, so a
-  sequence admitted into a freed slot produces tokens BIT-IDENTICAL to
-  decoding it alone (MoE: in the no-capacity-drop regime, as for batched
-  decode generally).
+* Rows are independent through the backbone and each row carries its own
+  position, so a sequence admitted into a freed slot produces tokens
+  BIT-IDENTICAL to decoding it alone (MoE: in the no-capacity-drop regime,
+  as for batched decode generally).
+
+Chunked batched prefill
+-----------------------
+Prompts are fed through ``engine.prefill_slots``: every pump tick runs at
+most ONE prefill call covering up to ``prefill_chunk`` prompt tokens for
+ALL prefilling rows at once, then one decode step over the rows that are
+past their prompt. A 100-token prompt therefore costs ~``100/chunk`` engine
+invocations instead of 100 decode-step ticks, and sequences mid-generation
+keep emitting every tick while long prompts stream in beside them. Chunk
+widths are bucketed to powers of two so a serving session compiles at most
+``log2(prefill_chunk)`` prefill programs. ``prefill_chunk=0`` restores the
+legacy token-by-token teacher-forced feed (the decode benchmark's
+comparison baseline). The prefill scan body is the same ``decode_apply``
+as ``step_slots``, so generated tokens are bit-identical either way.
+
+Paged KV cache
+--------------
+A paged engine (``DecodeEngine(page_size=N)``) swaps the dense
+``(slots, cache_slots, ...)`` cache rows for a shared page pool plus a
+per-row block table (``PagedKVCache``). The gateway owns the
+``PageAllocator``: admission reserves ``ceil((P + max_tokens - 1) /
+page_size)`` pages up front (FIFO head-of-line blocking when the pool runs
+short — a sequence never starts unless it can finish), finish/cancel/fail
+returns them, and every free immediately resets the row so its stale block
+table points back at the reserved trash page 0 before the freed pages can
+be reallocated. Resident KV memory therefore tracks ACTUAL sequence
+lengths, not ``max_slots * cache_slots`` worst case — the pool can be
+sized to the expected load (``total_pages``) and admission degrades to
+queueing, never to corruption.
+
+Sampling
+--------
+``DecodeRequest.sampling`` (a ``SamplingParams``) switches a sequence from
+greedy to temperature / top-k / top-p sampling. Randomness is keyed per
+SEQUENCE as ``fold_in(base_key, uid)`` and per STEP by folding in the
+emitted-token count, so a request's tokens depend only on (base key, uid,
+step): reproducible across restarts, batch compositions, and fleet
+re-routing (``GatewayBase.federate`` shares the base key fleet-wide).
+Mixed batches cost one program — greedy rows ride the sampled step at
+temperature 0, which is an exact argmax.
 
 Stop conditions are per slot: ``max_tokens`` caps generation (finish_reason
 ``"length"``), ``stop_token`` ends it early (``"stop"``; the stop token is
-not included in the returned tokens).
+not included in the returned tokens). A CANCELLED future releases its slot
+(and pages) at the next pump instead of decoding to completion — cancelled
+sequences count under ``cancelled``, never ``completed``/``tokens_out``.
 
-Stats ride the shared ``GatewayStats``: ``forwards`` counts engine steps
-(one backbone forward each), ``tokens_out``/``tokens_per_s`` the generated
-tokens, ``slot_occupancy`` the active-slot share of every step taken;
+Stats ride the shared ``GatewayStats``: ``forwards`` counts engine
+invocations (prefill calls + decode steps — the wall-step unit),
+``prefill_calls``/``prefill_tokens`` the chunked-prefill share,
+``tokens_out``/``tokens_per_s`` the generated tokens (settled futures
+only), ``slot_occupancy`` the active-slot share of every step taken;
 ``trajectories`` counts engine-batch lifetimes (idle -> busy -> idle) and
 ``joins`` the sequences admitted while other slots were mid-flight — the
-continuous-refill events.
+continuous-refill events. Paged gateways add ``pages_in_use`` /
+``peak_pages`` / ``page_size`` to the ``stats()`` snapshot.
 
 ``GatewayBase`` supplies intake, the serve-thread lifecycle, drain (waits on
 in-flight sequences, not just queue depth), and the ``stats()`` snapshot.
@@ -47,7 +89,7 @@ from __future__ import annotations
 import dataclasses
 import time
 from concurrent.futures import Future
-from typing import Callable, Optional, Sequence, Union
+from typing import Any, Callable, Optional, Sequence, Union
 
 import numpy as np
 
@@ -57,11 +99,13 @@ from repro.serving.gateway import GatewayBase
 @dataclasses.dataclass
 class DecodeRequest:
     """One user's decode request: prompt tokens (at least one; fed
-    teacher-forced), a generation cap, and an optional stop token."""
+    teacher-forced), a generation cap, an optional stop token, and optional
+    ``SamplingParams`` (None = greedy)."""
 
     prompt: Union[Sequence[int], np.ndarray]
     max_tokens: int = 16
     stop_token: Optional[int] = None
+    sampling: Optional[Any] = None      # repro.serving.engine.SamplingParams
 
 
 @dataclasses.dataclass
@@ -79,6 +123,43 @@ class DecodeResponse:
     meta: dict
 
 
+class PageAllocator:
+    """Host-side free list over the shared KV page pool.
+
+    Page 0 is RESERVED as the trash page: freed/inactive rows' block tables
+    point at it, so their in-flight writes inside the one compiled step
+    program land harmlessly instead of corrupting reallocated pages. The
+    allocator hands out pages 1..total-1; ``peak`` tracks the high-water
+    mark (the benchmark's resident-memory gauge)."""
+
+    def __init__(self, total_pages: int):
+        if total_pages < 2:
+            raise ValueError("total_pages must be >= 2 (page 0 is the "
+                             "reserved trash page)")
+        self.total = total_pages
+        self._free = list(range(total_pages - 1, 0, -1))  # pop() -> page 1 first
+        self.peak = 0
+
+    @property
+    def available(self) -> int:
+        return len(self._free)
+
+    @property
+    def in_use(self) -> int:
+        return (self.total - 1) - len(self._free)
+
+    def alloc(self, n: int) -> list[int]:
+        if n > len(self._free):
+            raise RuntimeError(
+                f"page pool exhausted: need {n}, have {len(self._free)}")
+        pages = [self._free.pop() for _ in range(n)]
+        self.peak = max(self.peak, self.in_use)
+        return pages
+
+    def free(self, pages: Sequence[int]) -> None:
+        self._free.extend(pages)
+
+
 @dataclasses.dataclass
 class _DecodeEntry:
     uid: int
@@ -87,6 +168,7 @@ class _DecodeEntry:
     stop_token: Optional[int]
     t_submit: float
     future: Future
+    sampling: Optional[Any] = None
     t_admit: Optional[float] = None
     join_step: int = 0          # engine step at admission (0 = opened batch)
 
@@ -94,38 +176,51 @@ class _DecodeEntry:
 @dataclasses.dataclass
 class _Slot:
     """Host bookkeeping for one occupied state row: the sequence it serves,
-    how much of its prompt has been fed, and what it has generated."""
+    how much of its prompt has been fed, what it has generated, and (paged)
+    which pool pages it owns."""
 
     entry: _DecodeEntry
-    pos: int = 1                # prompt tokens already fed
+    pos: int = 1                # prompt tokens already fed (incl. pending feed)
     emitted: list = dataclasses.field(default_factory=list)
+    pages: list = dataclasses.field(default_factory=list)
+
+    @property
+    def prefilling(self) -> bool:
+        return self.pos < len(self.entry.prompt)
 
 
 class DecodeGateway(GatewayBase):
     """Continuous-batching front-end over one ``DecodeEngine``.
 
     ``submit(DecodeRequest) -> Future[DecodeResponse]``; ``pump()`` is one
-    engine tick: admit queued sequences into free slots, then run one
-    write-masked decode step over the slot batch (``engine.step_slots``)
-    and advance each active sequence (prefill feed, greedy continue, or
-    finish). ``start()``/``drain()``/``shutdown()`` come from
+    engine tick: admit queued sequences into free slots, release cancelled
+    ones, run at most one chunked-prefill call over the rows still
+    consuming their prompts, then one write-masked decode step over the
+    rows past them (``engine.step_slots``) and advance each active
+    sequence. ``start()``/``drain()``/``shutdown()`` come from
     ``GatewayBase``; the unit tests and ``benchmarks/decode_bench.py``
     drive ``pump`` directly with a fake clock.
 
     ``refill=False`` degrades admission to run-to-completion batching (new
     sequences wait until EVERY slot is free) — the baseline the decode
-    benchmark gates continuous refill against.
+    benchmark gates continuous refill against. ``prefill_chunk=0`` degrades
+    prefill to the legacy token-by-token teacher-forced feed.
 
     The engine only needs the slot protocol (``init_slot_state``,
-    ``step_slots``, ``reset_slots``) — ``DecodeEngine`` for real backbones,
-    ``repro.serving.toy.ToyDecodeEngine`` for deterministic simulation.
+    ``step_slots``, ``reset_slots``, plus ``prefill_slots`` when
+    ``prefill_chunk > 0`` and ``with_block_table`` when paged) —
+    ``DecodeEngine`` for real backbones, ``repro.serving.toy.
+    ToyDecodeEngine`` for deterministic simulation.
     """
 
     def __init__(self, engine, *, max_slots: int = 8, cache_slots: int = 128,
-                 dtype=None, refill: bool = True,
+                 dtype=None, refill: bool = True, prefill_chunk: int = 64,
+                 total_pages: Optional[int] = None, key=None, mesh=None,
                  clock: Callable[[], float] = time.monotonic):
         if max_slots < 1:
             raise ValueError("max_slots must be >= 1")
+        if prefill_chunk < 0:
+            raise ValueError("prefill_chunk must be >= 0 (0 = token-by-token)")
         if getattr(getattr(engine, "cfg", None), "family", None) == "encdec":
             # encdec decode cross-attends per-sequence ENCODER MEMORY the
             # slot protocol has no hook to supply (init_slot_state zero-
@@ -139,6 +234,7 @@ class DecodeGateway(GatewayBase):
         self.engine = engine
         self.max_slots = max_slots
         self.refill = refill
+        self.prefill_chunk = prefill_chunk
         # non-windowed KV-cache families clamp writes past the cache's last
         # physical slot (silently degraded tokens) — reject over-length
         # requests at submit instead (None = unbounded: ring buffer,
@@ -146,12 +242,47 @@ class DecodeGateway(GatewayBase):
         self._capacity = (cache_slots
                           if getattr(engine, "seq_capacity_bounded", False)
                           else None)
-        state_kw = {} if dtype is None else {"dtype": dtype}
+        self._paged = bool(getattr(engine, "paged", False))
+        self._alloc: Optional[PageAllocator] = None
+        state_kw: dict[str, Any] = {} if dtype is None else {"dtype": dtype}
+        if self._paged:
+            ps = engine.page_size
+            if cache_slots % ps:
+                raise ValueError(
+                    f"cache_slots ({cache_slots}) must be a multiple of "
+                    f"page_size ({ps})")
+            blocks = cache_slots // ps
+            pages = (1 + max_slots * blocks) if total_pages is None \
+                else total_pages
+            self._alloc = PageAllocator(pages)
+            self._table = np.zeros((max_slots, blocks), np.int32)
+            state_kw["total_pages"] = pages
         self._state = engine.init_slot_state(max_slots, cache_slots,
                                              **state_kw)
+        if mesh is not None:
+            from repro.serving import sharded
+
+            engine.params = sharded.shard_params(engine.params, engine.cfg,
+                                                 mesh)
+            self._state = sharded.place_decode_state(self._state, engine.cfg,
+                                                     mesh)
         self._slots: list[Optional[_Slot]] = [None] * max_slots
         self._feed = np.zeros((max_slots,), np.int32)   # next token per slot
         self._steps = 0                                  # engine steps run
+        # per-slot sampling buffers (temperature 0 = greedy row)
+        self._samp_keys = np.zeros((max_slots, 2), np.uint32)
+        self._temps = np.zeros((max_slots,), np.float32)
+        self._top_ks = np.zeros((max_slots,), np.int32)
+        self._top_ps = np.ones((max_slots,), np.float32)
+        self._sampling_resident = 0
+        if key is not None:
+            self._base_key = key
+        elif getattr(engine, "supports_sampling", False):
+            import jax
+
+            self._base_key = jax.random.PRNGKey(0)
+        else:
+            self._base_key = None
 
     # -- intake ---------------------------------------------------------------
 
@@ -173,24 +304,50 @@ class DecodeGateway(GatewayBase):
                 f"({request.max_tokens}) exceeds the decode cache capacity "
                 f"({self._capacity} slots); raise cache_slots or lower "
                 "max_tokens")
+        sampling = request.sampling
+        if sampling is not None and sampling.temperature > 0 \
+                and not getattr(self.engine, "supports_sampling", False):
+            raise ValueError(
+                "engine does not support sampling (greedy only); omit "
+                "DecodeRequest.sampling or use temperature=0")
         entry = _DecodeEntry(uid=next(self._uid), prompt=prompt,
                              max_tokens=int(request.max_tokens),
                              stop_token=request.stop_token,
+                             sampling=sampling,
                              t_submit=self.clock(), future=Future())
         return self._enqueue(entry)
 
     # -- engine tick ----------------------------------------------------------
 
     def pump(self, force: bool = False) -> int:
-        """One engine tick: admit into free slots, one masked decode step."""
+        """One engine tick: release cancelled sequences, admit into free
+        slots, one chunked-prefill call (if any row is consuming its
+        prompt), one masked decode step (if any row is past it)."""
         with self._plan_lock:
+            self._sweep_cancelled()
             self._admit()
-            active = np.array([s is not None for s in self._slots])
+            did = 0
+            if self.prefill_chunk:
+                did = self._pump_prefill()
+                if did and not any(s is not None and not s.prefilling
+                                   for s in self._slots):
+                    return 1        # every occupied row is still prefilling
+            if self.prefill_chunk:
+                active = np.array([s is not None and not s.prefilling
+                                   for s in self._slots])
+            else:
+                active = np.array([s is not None for s in self._slots])
             if not active.any():
-                return 0
+                return did
+            sampling = self._slot_sampling() if self._sampling_resident else None
             try:
-                nxt, state = self.engine.step_slots(self._feed.copy(),
-                                                    self._state, active)
+                if sampling is None:
+                    nxt, state = self.engine.step_slots(self._feed.copy(),
+                                                        self._state, active)
+                else:
+                    nxt, state = self.engine.step_slots(self._feed.copy(),
+                                                        self._state, active,
+                                                        sampling=sampling)
             except BaseException as exc:  # noqa: BLE001 — see _fail_slots
                 self._fail_slots(exc)
                 return 1
@@ -206,25 +363,74 @@ class DecodeGateway(GatewayBase):
                 s.slot_steps_active += int(active.sum())
                 s.slot_steps_total += self.max_slots
             for i, slot in enumerate(self._slots):
-                if slot is not None:
+                if slot is not None and active[i]:
                     self._advance_slot(i, slot, int(nxt[i]))
             return 1
 
+    def _slot_sampling(self):
+        """Assemble the per-slot ``SlotSampling`` arrays. Copies — the jit
+        call holds the buffers asynchronously and zero-copy aliases numpy
+        on CPU, so handing over the live (mutated between pumps) arrays
+        would race the dispatch."""
+        from repro.serving.engine import SlotSampling
+
+        counts = np.array([len(s.emitted) if s is not None else 0
+                           for s in self._slots], np.int32)
+        return SlotSampling(keys=self._samp_keys.copy(), counts=counts,
+                            temps=self._temps.copy(),
+                            top_ks=self._top_ks.copy(),
+                            top_ps=self._top_ps.copy())
+
+    def _pages_needed(self, entry: _DecodeEntry) -> int:
+        ps = self.engine.page_size
+        return -(-(len(entry.prompt) + entry.max_tokens - 1) // ps)
+
+    def _sweep_cancelled(self) -> None:
+        """Release slots whose futures the client cancelled — without this
+        a cancelled sequence keeps decoding (and holding its row + pages)
+        until max_tokens, starving the queue: the slot-leak fix."""
+        for i, slot in enumerate(self._slots):
+            if slot is not None and slot.entry.future.cancelled():
+                self._release_slot(i, slot)
+                with self._stats_lock:
+                    self.stats_raw.cancelled += 1
+                    self._inflight -= 1       # taken at admission
+
     def _admit(self) -> None:
         """Admit queued sequences (FIFO) into free slots: reset each freed
-        row to the zero state and feed the sequence's first prompt token on
-        the next step. Admission is immediate — the latency win — unless
-        ``refill=False`` holds new sequences until the whole batch drains."""
+        row to the zero state, reserve pages (paged), and stage the prompt
+        (first token fed next step, or chunked prefill from position 0).
+        Admission is immediate — the latency win — unless ``refill=False``
+        holds new sequences until the whole batch drains. A paged admission
+        that cannot reserve its worst-case pages BLOCKS the queue head
+        (FIFO) until finishes free pages, rather than skipping ahead."""
         free = [i for i, s in enumerate(self._slots) if s is None]
         busy = self.max_slots - len(free)
         if not free or (not self.refill and busy):
             return
-        pending = sorted(self.queue.snapshot(),
-                         key=lambda e: e.uid)[:len(free)]
-        if not pending:
+        pending = sorted(self.queue.snapshot(), key=lambda e: e.uid)
+        dropped = [e for e in pending if e.future.cancelled()]
+        if dropped:
+            self._take(dropped)
+            with self._stats_lock:
+                self.stats_raw.cancelled += len(dropped)
+            self._settle(len(dropped))
+            pending = [e for e in pending if not e.future.cancelled()]
+        admitted = []
+        reserve = self._alloc.available if self._alloc is not None else 0
+        for e in pending:
+            if len(admitted) == len(free):
+                break
+            if self._alloc is not None:
+                need = self._pages_needed(e)
+                if need > reserve:
+                    break               # head-of-line: keep FIFO order
+                reserve -= need
+            admitted.append(e)
+        if not admitted:
             return
-        self._take(pending)
-        assigned = list(zip(free, pending))
+        self._take(admitted)
+        assigned = list(zip(free, admitted))
         mask = np.zeros((self.max_slots,), bool)
         for i, _ in assigned:
             mask[i] = True
@@ -232,8 +438,33 @@ class DecodeGateway(GatewayBase):
         now = self.clock()
         for i, e in assigned:
             e.t_admit, e.join_step = now, self._steps
-            self._slots[i] = _Slot(entry=e)
-            self._feed[i] = e.prompt[0]
+            slot = _Slot(entry=e)
+            if self._alloc is not None:
+                slot.pages = self._alloc.alloc(self._pages_needed(e))
+                self._table[i, :] = 0
+                self._table[i, :len(slot.pages)] = slot.pages
+            if self.prefill_chunk and len(e.prompt) > 1:
+                slot.pos = 0            # chunked prefill feeds the prompt
+            else:
+                slot.pos = 1
+                self._feed[i] = e.prompt[0]
+            sp = e.sampling
+            if sp is not None and sp.temperature > 0:
+                import jax
+
+                self._samp_keys[i] = np.asarray(
+                    jax.random.fold_in(self._base_key, e.uid))
+                self._temps[i] = sp.temperature
+                self._top_ks[i] = sp.top_k
+                self._top_ps[i] = sp.top_p
+                self._sampling_resident += 1
+            else:
+                self._samp_keys[i] = 0
+                self._temps[i], self._top_ks[i], self._top_ps[i] = 0, 0, 1.0
+            self._slots[i] = slot
+        if self._alloc is not None:
+            self._state = self.engine.with_block_table(self._state,
+                                                       self._table.copy())
         with self._stats_lock:
             s = self.stats_raw
             if busy:
@@ -241,13 +472,55 @@ class DecodeGateway(GatewayBase):
             else:
                 s.trajectories += 1        # opened a fresh engine batch
 
+    def _pump_prefill(self) -> int:
+        """One chunked-prefill engine call covering every row still
+        consuming its prompt: row i is fed up to ``prefill_chunk`` of its
+        remaining prompt tokens (all but the last — the decode step feeds
+        that and emits the first token). Chunk widths are bucketed to
+        powers of two to bound compile count."""
+        need = [(i, s) for i, s in enumerate(self._slots)
+                if s is not None and s.pos < len(s.entry.prompt) - 1]
+        if not need:
+            return 0
+        longest = max(len(s.entry.prompt) - 1 - s.pos for _, s in need)
+        width = 1
+        while width < min(longest, self.prefill_chunk):
+            width *= 2
+        tokens = np.zeros((self.max_slots, width), np.int32)
+        lengths = np.zeros((self.max_slots,), np.int32)
+        mask = np.zeros((self.max_slots,), bool)
+        for i, s in need:
+            p = s.entry.prompt
+            take = min(width, len(p) - 1 - s.pos)
+            tokens[i, :take] = p[s.pos:s.pos + take]
+            lengths[i] = take
+            mask[i] = True
+        try:
+            self._state = self.engine.prefill_slots(tokens, lengths,
+                                                    self._state, mask)
+        except BaseException as exc:  # noqa: BLE001 — see _fail_slots
+            self._fail_slots(exc)
+            return 1
+        with self._stats_lock:
+            s = self.stats_raw
+            s.forwards += 1              # one engine invocation
+            s.prefill_calls += 1
+            s.prefill_tokens += int(lengths.sum())
+        for i, sl in need:
+            sl.pos += int(lengths[i])
+            p = sl.entry.prompt
+            if sl.pos == len(p) - 1:     # prompt consumed: decode next tick
+                self._feed[i] = p[-1]
+                sl.pos = len(p)
+        return 1
+
     def _advance_slot(self, si: int, slot: _Slot, tok: int) -> None:
         """Advance one active sequence given the model's prediction ``tok``
         for the token its row was just fed."""
         e = slot.entry
         if slot.pos < len(e.prompt):
-            # prefill: the prediction is discarded, the next prompt token
-            # is fed teacher-forced
+            # legacy (prefill_chunk=0) path: the prediction is discarded,
+            # the next prompt token is fed teacher-forced
             self._feed[si] = e.prompt[slot.pos]
             slot.pos += 1
             return
@@ -260,18 +533,30 @@ class DecodeGateway(GatewayBase):
             return
         self._feed[si] = tok
 
+    def _release_slot(self, si: int, slot: _Slot) -> None:
+        """Free one slot's row (and pages). Paged rows are reset
+        IMMEDIATELY: their stale block table would otherwise route the
+        freed row's in-flight writes into pages the allocator may hand to
+        the next admission — the reset points it back at trash page 0."""
+        if self._alloc is not None:
+            self._alloc.free(slot.pages)
+            self._table[si, :] = 0
+            mask = np.zeros((self.max_slots,), bool)
+            mask[si] = True
+            self._state = self.engine.reset_slots(self._state, mask)
+        if self._temps[si] > 0:
+            self._sampling_resident -= 1
+        self._samp_keys[si] = 0
+        self._temps[si], self._top_ks[si], self._top_ps[si] = 0, 0, 1.0
+        self._slots[si] = None
+
     def _finish(self, si: int, slot: _Slot, reason: str) -> None:
         """Resolve one sequence's future and free its slot — the next
-        ``_admit`` can scatter a fresh sequence into the row."""
+        ``_admit`` can scatter a fresh sequence into the row. Stats count
+        the sequence only if its future actually SETTLED: a future
+        cancelled in the same tick must not inflate ``tokens_out`` or the
+        wait aggregates (the stats-skew fix)."""
         e = slot.entry
-        wait_ms = (e.t_admit - e.t_submit) * 1e3
-        with self._stats_lock:
-            s = self.stats_raw
-            s.completed += 1
-            s.tokens_out += len(slot.emitted)
-            s.sum_wait_ms += wait_ms
-            s.max_wait_ms = max(s.max_wait_ms, wait_ms)
-            self._inflight -= 1        # taken at admission
         response = DecodeResponse(
             tokens=np.asarray(slot.emitted, np.int32),
             meta={
@@ -281,20 +566,55 @@ class DecodeGateway(GatewayBase):
                 "steps": self._steps - e.join_step,
                 "slot": si,
                 "join_step": e.join_step,
-                "wait_ms": wait_ms,
+                "wait_ms": (e.t_admit - e.t_submit) * 1e3,
             })
         try:
             e.future.set_result(response)
+            settled = True
         except Exception:              # cancelled: the batch rolls on
-            pass
-        self._slots[si] = None
+            settled = False
+        wait_ms = (e.t_admit - e.t_submit) * 1e3
+        with self._stats_lock:
+            s = self.stats_raw
+            if settled:
+                s.completed += 1
+                s.tokens_out += len(slot.emitted)
+                s.sum_wait_ms += wait_ms
+                s.max_wait_ms = max(s.max_wait_ms, wait_ms)
+            else:
+                s.cancelled += 1
+            self._inflight -= 1        # taken at admission
+        self._release_slot(si, slot)
 
     def _fail_slots(self, exc: BaseException) -> None:
-        """Surface a failing engine step into every resident sequence's
+        """Surface a failing engine call into every resident sequence's
         future and free all slots, keeping the serve thread alive (the
         decode twin of ``ContinuousGateway._fail_trajectory``). Freed rows
-        hold stale state; admission resets them before reuse."""
+        hold stale state; admission resets them before reuse (and, paged,
+        pushes a fresh block table)."""
         entries = [s.entry for s in self._slots if s is not None]
         self._fail_entries(entries, exc, count_all=True)
         self._settle(len(entries))
+        if self._alloc is not None:
+            for s in self._slots:
+                if s is not None and s.pages:
+                    self._alloc.free(s.pages)
+            self._table[:] = 0
+        self._samp_keys[:] = 0
+        self._temps[:], self._top_ks[:], self._top_ps[:] = 0, 0, 1.0
+        self._sampling_resident = 0
         self._slots = [None] * self.max_slots
+
+    # -- metrics --------------------------------------------------------------
+
+    def stats(self) -> dict[str, Any]:
+        out = super().stats()
+        if self._alloc is not None:
+            ps = self.engine.page_size
+            out["page_size"] = ps
+            out["pages_in_use"] = self._alloc.in_use
+            out["peak_pages"] = self._alloc.peak
+            # high-water resident KV positions per slot — the paged-memory
+            # win: bounded by actual sequence lengths, not cache_slots
+            out["peak_kv_per_slot"] = self._alloc.peak * ps / self.max_slots
+        return out

@@ -25,15 +25,19 @@ Budget-routing contract: the sampler owns the anytime solver's served
 ``DecodeEngine`` — batched autoregressive decode with KV cache / recurrent
 state (the ``serve_step`` the decode dry-run shapes lower). ``greedy`` is a
 jit'd ``lax.scan`` multi-token program; the slot API (``init_slot_state`` /
-``step_slots`` / ``reset_slots``) serves independent sequences from the rows
-of one fixed-slot batched state — the substrate of the decode-side
-continuous-batching gateway (``repro.serving.decode.DecodeGateway``).
+``step_slots`` / ``reset_slots`` / ``prefill_slots``) serves independent
+sequences from the rows of one fixed-slot batched state — the substrate of
+the decode-side continuous-batching gateway
+(``repro.serving.decode.DecodeGateway``). ``page_size > 0`` switches the
+KV-cache families to a PAGED state (``PagedKVCache``: shared page pool +
+per-row block table, vLLM-style), and ``SamplingParams`` /
+``sample_tokens`` add temperature / top-k / top-p sampling beside greedy.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Optional
+from typing import Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -273,6 +277,76 @@ class AnytimeFlowSampler:
         return nearest_latent_tokens(self.params, latents)
 
 
+# ---------------------------------------------------------------------------
+# Sampling (temperature / top-k / top-p beside greedy)
+# ---------------------------------------------------------------------------
+
+_NEG_INF = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request sampling knobs. ``temperature == 0`` is exact greedy
+    (argmax); ``top_k == 0`` and ``top_p == 1.0`` disable those filters.
+    Determinism contract: given the gateway's base key, a request's tokens
+    depend only on (base key, request uid, step) — reproducible across
+    restarts and fleet re-routing."""
+
+    temperature: float = 1.0
+    top_k: int = 0
+    top_p: float = 1.0
+
+    def __post_init__(self):
+        if self.temperature < 0:
+            raise ValueError(f"temperature must be >= 0, got {self.temperature}")
+        if self.top_k < 0:
+            raise ValueError(f"top_k must be >= 0, got {self.top_k}")
+        if not 0.0 < self.top_p <= 1.0:
+            raise ValueError(f"top_p must be in (0, 1], got {self.top_p}")
+
+
+class SlotSampling(NamedTuple):
+    """Batched per-slot sampling state fed to the sampled step program.
+    ``keys`` are per-SEQUENCE keys (base key folded with the request uid);
+    ``counts`` is each row's emitted-token count, folded in per step so every
+    position draws fresh randomness without host-side key churn."""
+
+    keys: Array      # (slots, 2) uint32 per-sequence PRNG keys
+    counts: Array    # (slots,) int32 tokens emitted so far
+    temps: Array     # (slots,) f32 temperature (0 = greedy)
+    top_ks: Array    # (slots,) int32 top-k cutoff (0 = off)
+    top_ps: Array    # (slots,) f32 top-p cutoff (1.0 = off)
+
+
+def sample_tokens(logits: Array, keys: Array, temps: Array, top_ks: Array,
+                  top_ps: Array) -> Array:
+    """Vectorised per-row sampling: temperature scale, top-k and top-p
+    truncation, Gumbel-max draw; rows with ``temps == 0`` take the exact
+    argmax. All filters run on the descending-sorted logits so the k-th
+    largest value and the nucleus boundary are O(V log V) with no scatters.
+    """
+    V = logits.shape[-1]
+    lf = logits.astype(jnp.float32)
+    greedy = jnp.argmax(lf, axis=-1).astype(jnp.int32)
+    scaled = lf / jnp.maximum(temps, 1e-6)[:, None]
+    sorted_desc = jnp.sort(scaled, axis=-1)[:, ::-1]
+    # top-k threshold: the k-th largest scaled logit (k == 0 -> keep all)
+    k = jnp.clip(jnp.where(top_ks > 0, top_ks, V), 1, V)
+    kth = jnp.take_along_axis(sorted_desc, (k - 1)[:, None], axis=-1)
+    # top-p threshold over the sorted distribution; the exclusive cumsum
+    # guarantees the top-1 token always survives
+    probs = jax.nn.softmax(sorted_desc, axis=-1)
+    cum = jnp.cumsum(probs, axis=-1)
+    in_nucleus = (cum - probs) < top_ps[:, None]
+    pth = jnp.min(jnp.where(in_nucleus, sorted_desc, jnp.inf), axis=-1,
+                  keepdims=True)
+    cutoff = jnp.maximum(kth, pth)
+    masked = jnp.where(scaled >= cutoff, scaled, _NEG_INF)
+    gumbel = jax.vmap(lambda key: jax.random.gumbel(key, (V,)))(keys)
+    sampled = jnp.argmax(masked + gumbel, axis=-1).astype(jnp.int32)
+    return jnp.where(temps > 0, sampled, greedy)
+
+
 @dataclasses.dataclass
 class DecodeEngine:
     """Batched autoregressive decode with KV cache / recurrent state.
@@ -292,48 +366,115 @@ class DecodeEngine:
       bit-identical to decoding its sequence alone (MoE: in the
       no-capacity-drop regime, as for batched decode generally). This is
       the substrate of ``repro.serving.decode.DecodeGateway``.
+
+    ``page_size > 0`` pages the slot state for the KV-cache families: the
+    cache becomes a shared ``(L, num_pages, page_size, KV, hd)`` pool plus a
+    per-row block table (``PagedKVCache``). Page ownership replaces row
+    masking for the pool leaves — a masked-off row's in-flight write lands in
+    its own pages (overwritten before the row is next read) or in the
+    reserved trash page 0 (freed rows), so ``step_slots`` takes the new pool
+    unconditionally and ``reset_slots`` never zeroes it. The ``ssm`` family
+    accepts ``page_size`` as a no-op (its recurrent state is already O(1)
+    per slot); hybrid/encdec reject it.
     """
 
     params: dict
     cfg: ModelConfig
     window: int = 0
+    page_size: int = 0        # > 0: paged KV cache (KV families; ssm no-op)
+    paged_kernel: bool = False  # paged attention via the Pallas kernel
+
+    #: gateways probe this before routing sampled requests (toy engines
+    #: and older engines are greedy-only).
+    supports_sampling = True
 
     def __post_init__(self):
+        if self.page_size:
+            if self.window:
+                raise ValueError(
+                    "paged KV cache is incompatible with sliding-window "
+                    "decode (the ring buffer already bounds resident KV)")
+            if self.cfg.family not in M.PAGED_FAMILIES + ("ssm",):
+                raise TypeError(
+                    f"page_size set but family {self.cfg.family!r} has no "
+                    f"pageable KV state (pageable: {M.PAGED_FAMILIES}; "
+                    "ssm accepted as a no-op)")
+
         def _step(params, token, state):
             return M.decode_apply(params, self.cfg, token, state,
-                                  window=self.window)
+                                  window=self.window,
+                                  paged_kernel=self.paged_kernel)
 
         self._step = jax.jit(_step)
         self._greedy_fns: dict[int, Callable] = {}
+        self._prefill_fns: dict[int, Callable] = {}
+
+        axes = M.decode_state_batch_axes(self.cfg, paged=self.paged)
 
         def _mask_rows(mask, new, old):
             """Per-leaf row select: ``mask`` picks rows (along each leaf's
-            batch axis) that take ``new``; other rows keep ``old``."""
-            axes = M.decode_state_batch_axes(self.cfg)
+            batch axis) that take ``new``; other rows keep ``old``. Leaves
+            whose axis reads ``-1`` (the shared page pool) take ``new``
+            unconditionally — isolation there is by page ownership, not by
+            row masking (see class docstring)."""
 
             def keep(ax, n, o):
+                if ax == -1:
+                    return n
                 shape = [1] * n.ndim
                 shape[ax] = mask.shape[0]
                 return jnp.where(mask.reshape(shape), n, o)
 
             return jax.tree.map(keep, axes, new, old)
 
+        self._mask_rows_fn = _mask_rows
+
         def _step_slots(params, token, state, active):
             logits, new = M.decode_apply(params, self.cfg, token, state,
-                                         window=self.window)
+                                         window=self.window,
+                                         paged_kernel=self.paged_kernel)
             state = _mask_rows(active, new, state)
             return jnp.argmax(logits, axis=-1).astype(jnp.int32), state
 
         self._step_slots = jax.jit(_step_slots)
 
+        def _step_slots_sampled(params, token, state, active, keys, counts,
+                                temps, top_ks, top_ps):
+            logits, new = M.decode_apply(params, self.cfg, token, state,
+                                         window=self.window,
+                                         paged_kernel=self.paged_kernel)
+            state = _mask_rows(active, new, state)
+            step_keys = jax.vmap(jax.random.fold_in)(keys, counts)
+            toks = sample_tokens(logits, step_keys, temps, top_ks, top_ps)
+            return toks, state
+
+        self._step_slots_sampled = jax.jit(_step_slots_sampled)
+
         def _reset_slots(state, free):
-            zeros = jax.tree.map(jnp.zeros_like, state)
-            return _mask_rows(free, zeros, state)
+            """Zero the rows where ``free`` is True — except the shared page
+            pool (axis ``-1``), which other rows' live pages make
+            untouchable; freed rows are isolated by their zeroed block
+            table (trash page 0) instead."""
+
+            def keep(ax, o):
+                if ax == -1:
+                    return o
+                shape = [1] * o.ndim
+                shape[ax] = free.shape[0]
+                return jnp.where(free.reshape(shape), jnp.zeros_like(o), o)
+
+            return jax.tree.map(keep, axes, state)
 
         self._reset_slots = jax.jit(_reset_slots)
 
     def init_state(self, batch: int, slots: int, dtype=jnp.float32):
         return M.init_decode_state(self.cfg, batch, slots, dtype)
+
+    @property
+    def paged(self) -> bool:
+        """True when slot state is a ``PagedKVCache`` (page_size set AND the
+        family has pageable KV; ssm keeps its dense recurrent state)."""
+        return self.page_size > 0 and self.cfg.family in M.PAGED_FAMILIES
 
     @property
     def seq_capacity_bounded(self) -> bool:
@@ -374,27 +515,88 @@ class DecodeEngine:
     # -- slot serving (decode-side continuous batching) ----------------------
 
     def init_slot_state(self, slots: int, cache_slots: int,
-                        dtype=jnp.float32):
+                        dtype=jnp.float32,
+                        total_pages: Optional[int] = None):
         """Fixed-slot batched decode state with PER-ROW positions: row i
         serves an independent sequence; ``index`` is a (slots,) vector so
-        sequences admitted at different times sit at different positions."""
+        sequences admitted at different times sit at different positions.
+
+        Paged engines return a ``PagedKVCache`` instead: a shared pool of
+        ``total_pages`` pages (default: page 0 as trash + every slot at full
+        ``cache_slots`` residency — shrink it to overcommit) and an all-zero
+        block table awaiting the gateway's allocator. ``cache_slots`` must be
+        a multiple of ``page_size`` (it fixes the block-table width, and the
+        dense-gather fallback is bit-identical to the dense cache only when
+        the gathered length matches)."""
+        if self.paged:
+            ps = self.page_size
+            if cache_slots % ps:
+                raise ValueError(
+                    f"cache_slots ({cache_slots}) must be a multiple of "
+                    f"page_size ({ps})")
+            blocks = cache_slots // ps
+            pages = (1 + slots * blocks) if total_pages is None else total_pages
+            if pages < 2:
+                raise ValueError("total_pages must be >= 2 (page 0 is the "
+                                 "reserved trash page)")
+            return M.init_paged_decode_state(self.cfg, slots, pages, ps,
+                                             blocks, dtype)
         state = M.init_decode_state(self.cfg, slots, cache_slots, dtype)
         return state._replace(index=jnp.zeros((slots,), jnp.int32))
 
-    def step_slots(self, token: Array, state, active: Array):
+    def step_slots(self, token: Array, state, active: Array,
+                   sampling: Optional[SlotSampling] = None):
         """One write-masked decode step over the slot batch.
 
         ``token`` (slots,) feeds each row; rows where ``active`` is False
         still flow through the backbone (fixed batch shape — one compiled
         program regardless of occupancy) but their state rows and positions
-        are left untouched. Returns (next greedy token (slots,), state)."""
-        return self._step_slots(self.params, token, state, active)
+        are left untouched. Returns (next token (slots,), state): greedy
+        argmax, or per-row ``SlotSampling`` draws when ``sampling`` is given
+        (rows with temperature 0 stay exact greedy, so mixed batches cost
+        one program)."""
+        if sampling is None:
+            return self._step_slots(self.params, token, state, active)
+        return self._step_slots_sampled(self.params, token, state, active,
+                                        *sampling)
+
+    def prefill_slots(self, tokens: Array, lengths: Array, state, mask: Array):
+        """Batched chunked prefill: feed ``tokens`` (slots, C) teacher-forced
+        into the rows where ``mask`` is True, row i consuming its first
+        ``lengths[i]`` columns (the rest are padding). One jit'd scan program
+        per chunk width C, shared by every prompt; logits are discarded. The
+        scan body is the same ``decode_apply`` as ``step_slots``, so prefill
+        state is bit-identical to feeding the prompt token-by-token."""
+        C = int(tokens.shape[1])
+        fn = self._prefill_fns.get(C)
+        if fn is None:
+            def _prefill(params, tokens, lengths, state, mask):
+                def body(state, t):
+                    tok = jnp.take(tokens, t, axis=1)
+                    act = mask & (t < lengths)
+                    _, new = M.decode_apply(params, self.cfg, tok, state,
+                                            window=self.window,
+                                            paged_kernel=self.paged_kernel)
+                    return self._mask_rows_fn(act, new, state), None
+
+                state, _ = jax.lax.scan(body, state, jnp.arange(C))
+                return state
+
+            fn = self._prefill_fns[C] = jax.jit(_prefill)
+        return fn(self.params, tokens, lengths, state, mask)
 
     def reset_slots(self, state, free: Array):
         """Scatter a fresh zero state into the rows where ``free`` is True
         (``init_decode_state`` is all-zeros), readying them for admission
-        of a new sequence at position 0."""
+        of a new sequence at position 0. Paged: zeroes the freed rows'
+        block-table entries (-> trash page 0) and positions but leaves the
+        shared pool alone."""
         return self._reset_slots(state, free)
+
+    def with_block_table(self, state, table) -> object:
+        """Swap in the gateway allocator's host-side block table (paged
+        engines only). ``table`` is (slots, blocks_per_slot) page ids."""
+        return state._replace(block_table=jnp.asarray(table, jnp.int32))
 
 
 def greedy_demo(engine: DecodeEngine, batch: int, steps: int,

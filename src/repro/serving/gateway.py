@@ -343,6 +343,9 @@ class GatewayStats:
     slot_steps_total: int = 0   # max_slots * steps across trajectory legs
     # decode serving (zero under the flow gateways):
     tokens_out: int = 0        # generated tokens delivered to clients
+    cancelled: int = 0         # sequences dropped on a cancelled future
+    prefill_calls: int = 0     # chunked-prefill engine invocations
+    prefill_tokens: int = 0    # prompt tokens consumed by chunked prefill
     # fleet federation (zero outside a FleetGateway):
     stolen_in: int = 0         # queued entries migrated INTO this shard
     stolen_out: int = 0        # queued entries migrated OUT of this shard
@@ -562,7 +565,8 @@ class GatewayBase:
         thread and drain), so derived ratios are internally consistent."""
         with self._stats_lock:
             s = dataclasses.replace(self.stats_raw)
-        elapsed = max(self.clock() - s.started, 1e-9)
+        raw_elapsed = self.clock() - s.started
+        elapsed = max(raw_elapsed, 1e-9)
         return {
             "queue_depth": self.queue.depth(),
             "submitted": s.submitted,
@@ -585,7 +589,13 @@ class GatewayBase:
                                if s.slot_steps_total else 0.0),
             # decode serving (zero under the flow gateways)
             "tokens_out": s.tokens_out,
-            "tokens_per_s": s.tokens_out / elapsed,
+            # a zero-elapsed snapshot (frozen fake clock, or stats() in the
+            # same instant as construction) must read 0, not tokens/1e-9
+            "tokens_per_s": (s.tokens_out / elapsed if raw_elapsed > 0
+                             else 0.0),
+            "cancelled": s.cancelled,
+            "prefill_calls": s.prefill_calls,
+            "prefill_tokens": s.prefill_tokens,
             # fleet federation (zero outside a FleetGateway)
             "stolen_in": s.stolen_in,
             "stolen_out": s.stolen_out,

@@ -46,6 +46,21 @@ def shard_sampler(sampler, mesh):
     return sampler
 
 
+def place_decode_state(state, cfg, mesh):
+    """Place a slot-batched decode state (dense ``KVCache``, ``PagedKVCache``,
+    or recurrent state) on ``mesh`` per ``distributed.sharding.state_specs``
+    — paged pools shard their KV heads on ``model`` while the block table
+    and per-row positions stay replicated. The engine's write-masked step
+    programs recompile once against the sharded layout."""
+    from repro.distributed.sharding import state_specs
+
+    batch = int(state.index.shape[0]) if state.index.ndim else 1
+    specs = state_specs(state, cfg, mesh, batch)
+    shardings = jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                             is_leaf=lambda x: isinstance(x, P))
+    return jax.device_put(state, shardings)
+
+
 def batch_placer(mesh):
     """A ``place(cond, x0) -> (cond, x0)`` callable sharding batch arrays
     along the data axes (leading dim), replicating when indivisible."""

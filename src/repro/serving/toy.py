@@ -140,26 +140,60 @@ class ToyDecodeEngine:
     inheriting a freed slot's stale index) change the emitted tokens. State
     is just the per-slot position vector; everything runs in numpy, so the
     ``on_step`` hook (fake clock / wall-step counting) fires exactly once
-    per engine step with zero compile noise.
+    per engine INVOCATION (decode step or prefill call) with zero compile
+    noise — ``prefill_slots`` consumes a whole chunk of prompt tokens per
+    row in ONE invocation, which is exactly the wall-step saving the decode
+    benchmark measures. Greedy only (``supports_sampling = False``).
+
+    ``page_size > 0`` makes the engine SPEAK the paged protocol (``paged``
+    property, ``with_block_table`` no-op) without simulating page contents
+    — the position-vector state is already O(1) per slot. The gateway's
+    ``PageAllocator`` bookkeeping (reservation, head-of-line blocking,
+    free-on-finish, peak tracking) then runs for real against the toy
+    workload, which is what the decode benchmark's resident-memory metric
+    measures.
     """
 
+    supports_sampling = False
+
     def __init__(self, vocab: int = 97, a: int = 31, b: int = 7,
-                 on_step: Optional[Callable[[], None]] = None):
+                 on_step: Optional[Callable[[], None]] = None,
+                 page_size: int = 0):
         self.vocab, self.a, self.b = vocab, a, b
         self.on_step = on_step
+        self.page_size = page_size
         self.steps = 0
 
-    def init_slot_state(self, slots: int, cache_slots: int, dtype=None):
+    @property
+    def paged(self) -> bool:
+        return self.page_size > 0
+
+    def init_slot_state(self, slots: int, cache_slots: int, dtype=None,
+                        total_pages: Optional[int] = None):
         return np.zeros((slots,), np.int64)        # per-slot position
 
-    def step_slots(self, token, state, active):
+    def with_block_table(self, state, table):
+        return state                               # nothing paged to route
+
+    def _tick(self) -> None:
         self.steps += 1
         if self.on_step is not None:
             self.on_step()
+
+    def step_slots(self, token, state, active):
+        self._tick()
         token = np.asarray(token, np.int64)
         active = np.asarray(active)
         nxt = (self.a * token + self.b + state) % self.vocab
         return nxt.astype(np.int32), np.where(active, state + 1, state)
+
+    def prefill_slots(self, tokens, lengths, state, mask):
+        """Chunked prefill: one engine invocation advances each masked
+        row's position by its (teacher-forced) token count — predictions
+        during prefill are discarded, so only the position moves."""
+        self._tick()
+        lengths = np.asarray(lengths, np.int64)
+        return np.where(np.asarray(mask), state + lengths, state)
 
     def reset_slots(self, state, free):
         return np.where(np.asarray(free), 0, state)

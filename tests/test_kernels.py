@@ -10,7 +10,8 @@ import numpy as np
 import pytest
 
 from repro.kernels.flash_attention.flash_attention import flash_attention
-from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.flash_attention.paged_attention import paged_attention
+from repro.kernels.flash_attention.ref import attention_ref, paged_attention_ref
 from repro.kernels.gla_scan.gla_scan import gla_scan
 from repro.kernels.gla_scan.ref import gla_ref
 from repro.kernels.ns_update.ns_update import ns_update_nd
@@ -111,6 +112,57 @@ def test_flash_attention_matches_model_attention():
                           v.transpose(0, 2, 1, 3), causal=True, bq=64, bk=64,
                           interpret=True)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# paged_attention (decode step over a paged KV cache)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,KV,G,hd,ps,nb", [
+    (2, 2, 2, 64, 8, 4),
+    (3, 1, 4, 32, 16, 2),      # extreme GQA, two blocks
+    (1, 4, 1, 64, 8, 3),       # MQA-free per-head pages
+])
+def test_paged_attention_sweep(B, KV, G, hd, ps, nb, dtype):
+    """Kernel == dense-gather oracle over a shuffled page pool with ragged
+    per-row lengths (short rows skip whole pages via the prefetched
+    scalars)."""
+    key = jax.random.PRNGKey(B * 7 + nb)
+    ks = jax.random.split(key, 4)
+    num_pages = 1 + B * nb                   # page 0 = reserved trash page
+    q = jax.random.normal(ks[0], (B, KV, G, hd), dtype)
+    k_pages = jax.random.normal(ks[1], (num_pages, ps, KV, hd), dtype)
+    v_pages = jax.random.normal(ks[2], (num_pages, ps, KV, hd), dtype)
+    # each row owns nb distinct pages, in shuffled (non-contiguous) order
+    perm = jax.random.permutation(ks[3], num_pages - 1)[:B * nb] + 1
+    block_table = perm.reshape(B, nb).astype(jnp.int32)
+    lengths = jnp.asarray([(i * ps + i + 1) % (nb * ps) + 1
+                           for i in range(B)], jnp.int32)
+    out = paged_attention(q, k_pages, v_pages, block_table, lengths,
+                          interpret=True)
+    ref = paged_attention_ref(q, k_pages, v_pages, block_table, lengths)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=TOL[dtype] * 4, rtol=TOL[dtype] * 4)
+
+
+def test_paged_attention_ignores_positions_past_length():
+    """Garbage in a row's own pages past its length (the overwrite-invariant
+    cells) must not leak into the output."""
+    B, KV, G, hd, ps, nb = 1, 2, 2, 32, 8, 2
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = jax.random.normal(ks[0], (B, KV, G, hd))
+    k_pages = jax.random.normal(ks[1], (1 + nb, ps, KV, hd))
+    v_pages = jax.random.normal(ks[2], (1 + nb, ps, KV, hd))
+    table = jnp.asarray([[1, 2]], jnp.int32)
+    lengths = jnp.asarray([5], jnp.int32)
+    base = paged_attention(q, k_pages, v_pages, table, lengths)
+    poisoned_k = k_pages.at[1, 5:].set(1e4).at[2].set(-1e4)
+    poisoned_v = v_pages.at[1, 5:].set(1e4).at[2].set(-1e4)
+    out = paged_attention(q, poisoned_k, poisoned_v, table, lengths)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(base), atol=1e-5)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,284 @@
+"""Decode raw-speed stack: paged KV cache (shared page pool + block
+tables), chunked batched prefill, temperature/top-k/top-p sampling, and the
+gateway hygiene fixes (cancelled-slot release, settled-only stats)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import model as M
+from repro.serving.decode import (DecodeGateway, DecodeRequest,
+                                  PageAllocator)
+from repro.serving.engine import (DecodeEngine, SamplingParams,
+                                  sample_tokens)
+from repro.serving.toy import FakeClock, ToyDecodeEngine
+
+
+def _engine(arch="yi-6b", **kw):
+    cfg = get_config(arch, smoke=True)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    return DecodeEngine(params=params, cfg=cfg, **kw)
+
+
+def _solo_tokens(engine, prompt, n):
+    """Teacher-force ``prompt`` through the plain scalar-index decode path,
+    then greedy — independent of slots, pages, and prefill."""
+    state = engine.init_state(1, 32)
+    for tok in prompt[:-1]:
+        _, state = engine.step(jnp.asarray([tok], jnp.int32), state)
+    toks, _ = engine.greedy(jnp.asarray([prompt[-1]], jnp.int32), state, n)
+    return np.asarray(toks)[0].tolist()
+
+
+def _drive(gw, futures):
+    while not all(f.done() for f in futures):
+        gw.pump()
+
+
+def _serve(gw, reqs):
+    futures = [gw.submit(r) for r in reqs]
+    _drive(gw, futures)
+    return [f.result().tokens.tolist() for f in futures]
+
+
+# -- paged KV cache ----------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", ["yi-6b", "rwkv6-7b"])
+def test_paged_gateway_bit_identical_to_dense(arch):
+    """The same mixed-length request list served paged (shared pool +
+    block tables, slot refill reusing freed pages) and dense must produce
+    identical tokens — page indirection may not change a single one. The
+    ssm family takes page_size as a no-op (recurrent state is already O(1)
+    per slot) and must behave identically too."""
+    reqs = [DecodeRequest(prompt=[i + 1, i + 2], max_tokens=t)
+            for i, t in enumerate([3, 9, 5, 2, 7])]
+    dense = DecodeGateway(_engine(arch), max_slots=2, cache_slots=16)
+    paged_eng = _engine(arch, page_size=4)
+    paged = DecodeGateway(paged_eng, max_slots=2, cache_slots=16)
+    assert _serve(paged, reqs) == _serve(dense, reqs)
+    s = paged.stats()
+    assert s["joins"] > 0                   # freed pages were reused
+    if paged_eng.paged:                     # KV families only (ssm: no-op)
+        assert s["peak_pages"] > 0
+        assert s["pages_in_use"] == 0       # everything returned to the pool
+        assert s["peak_kv_per_slot"] <= 16
+
+
+def test_paged_kernel_bit_identical_to_fallback():
+    """The Pallas paged-attention kernel (interpret mode) and the
+    dense-gather fallback serve the same tokens through the gateway."""
+    reqs = [DecodeRequest(prompt=[3, 7], max_tokens=3),
+            DecodeRequest(prompt=[5], max_tokens=2)]
+    fallback = DecodeGateway(_engine(page_size=4), max_slots=2,
+                             cache_slots=8)
+    kernel = DecodeGateway(_engine(page_size=4, paged_kernel=True),
+                           max_slots=2, cache_slots=8)
+    assert _serve(kernel, reqs) == _serve(fallback, reqs)
+
+
+def test_paged_rejects_unpageable_families_and_window():
+    with pytest.raises(TypeError, match="no .*pageable"):
+        _engine("zamba2-2.7b", page_size=4)         # hybrid
+    with pytest.raises(ValueError, match="sliding-window"):
+        _engine("yi-6b", page_size=4, window=8)
+    with pytest.raises(ValueError, match="multiple of"):
+        _engine("yi-6b", page_size=5).init_slot_state(2, 16)
+    assert _engine("rwkv6-7b", page_size=4).paged is False   # ssm no-op
+
+
+def test_page_allocator_accounting():
+    alloc = PageAllocator(5)                # pages 1..4 usable, 0 = trash
+    assert alloc.available == 4 and alloc.in_use == 0
+    a = alloc.alloc(3)
+    assert 0 not in a and len(set(a)) == 3
+    assert alloc.in_use == 3 and alloc.peak == 3
+    with pytest.raises(RuntimeError, match="exhausted"):
+        alloc.alloc(2)
+    alloc.free(a[:2])
+    assert alloc.available == 3 and alloc.peak == 3   # high-water sticks
+    with pytest.raises(ValueError):
+        PageAllocator(1)
+
+
+def test_paged_head_of_line_blocking_keeps_fifo():
+    """A paged admission that cannot reserve its worst-case pages blocks
+    the queue HEAD until finishes free pages — later requests never skip
+    ahead, and every sequence still matches the solo oracle."""
+    eng = ToyDecodeEngine(page_size=4)
+    # 4 usable pages; each request needs ceil((1+8-1)/4) = 2
+    gw = DecodeGateway(eng, max_slots=3, cache_slots=8, total_pages=5)
+    reqs = [DecodeRequest(prompt=[i + 1], max_tokens=8) for i in range(3)]
+    futures = [gw.submit(r) for r in reqs]
+    gw.pump()
+    # three slots free but only two reservations fit: request 2 queues
+    assert [s is not None for s in gw._slots] == [True, True, False]
+    _drive(gw, futures)
+    assert futures[2].result().meta["join_step"] > 0
+    for r, f in zip(reqs, futures):
+        assert f.result().tokens.tolist() == eng.solo_tokens(r.prompt,
+                                                             r.max_tokens)
+    assert gw.stats()["pages_in_use"] == 0
+
+
+# -- chunked batched prefill -------------------------------------------------
+
+
+def test_chunked_prefill_tokens_identical_fewer_forwards():
+    """Chunked prefill feeds whole prompt chunks per engine invocation:
+    same tokens as the token-by-token teacher-forced feed (same
+    decode_apply underneath), strictly fewer wall-steps."""
+    eng = _engine("yi-6b")
+    prompt = [(3 * i + 1) % eng.cfg.vocab for i in range(9)]
+    reqs = [DecodeRequest(prompt=prompt, max_tokens=4),
+            DecodeRequest(prompt=prompt[:5], max_tokens=3)]
+    legacy = DecodeGateway(eng, max_slots=2, cache_slots=16,
+                           prefill_chunk=0)
+    chunked = DecodeGateway(eng, max_slots=2, cache_slots=16,
+                            prefill_chunk=4)
+    legacy_toks = _serve(legacy, reqs)
+    chunked_toks = _serve(chunked, reqs)
+    assert chunked_toks == legacy_toks
+    assert chunked_toks[0] == _solo_tokens(eng, prompt, 4)
+    sc, sl = chunked.stats(), legacy.stats()
+    assert sc["forwards"] < sl["forwards"]
+    assert sc["prefill_calls"] > 0
+    # every non-final prompt token rode a prefill call, none a decode step
+    assert sc["prefill_tokens"] == (len(prompt) - 1) + (5 - 1)
+    assert sl["prefill_calls"] == 0
+
+
+def test_chunked_prefill_interleaves_with_decode():
+    """A long prompt admitted beside a mid-generation sequence must not
+    stall it: the resident row keeps emitting one token per tick while the
+    joiner prefills, and both match their solo decodes."""
+    eng = ToyDecodeEngine()
+    gw = DecodeGateway(eng, max_slots=2, cache_slots=64, prefill_chunk=4)
+    f1 = gw.submit(DecodeRequest(prompt=[3], max_tokens=12))
+    gw.pump()
+    emitted_before = len(gw._slots[0].emitted)
+    long_prompt = list(range(1, 18))
+    f2 = gw.submit(DecodeRequest(prompt=long_prompt, max_tokens=2))
+    gw.pump()                               # prefill call + decode step
+    assert len(gw._slots[0].emitted) == emitted_before + 1
+    _drive(gw, [f1, f2])
+    assert f1.result().tokens.tolist() == eng.solo_tokens([3], 12)
+    assert f2.result().tokens.tolist() == eng.solo_tokens(long_prompt, 2)
+
+
+# -- sampling ----------------------------------------------------------------
+
+
+def test_sample_tokens_units():
+    key = jax.random.PRNGKey(0)
+    logits = jax.random.normal(key, (4, 32))
+    keys = jax.random.split(jax.random.PRNGKey(1), 4)
+    argmax = np.asarray(jnp.argmax(logits, -1))
+    zeros, ones = np.zeros((4,), np.float32), np.ones((4,), np.float32)
+
+    def draw(temps, top_ks, top_ps):
+        return np.asarray(sample_tokens(
+            logits, jnp.asarray(keys), jnp.asarray(temps, jnp.float32),
+            jnp.asarray(top_ks, jnp.int32), jnp.asarray(top_ps, jnp.float32)))
+
+    # temperature 0 is exact greedy; top_k=1 and tiny top_p pin the argmax
+    np.testing.assert_array_equal(draw(zeros, [0] * 4, ones), argmax)
+    np.testing.assert_array_equal(draw(ones, [1] * 4, ones), argmax)
+    np.testing.assert_array_equal(draw(ones, [0] * 4, [1e-6] * 4), argmax)
+    # same keys -> same draw (determinism); tokens stay in-vocab
+    hot = draw(ones * 2.0, [0] * 4, ones)
+    np.testing.assert_array_equal(hot, draw(ones * 2.0, [0] * 4, ones))
+    assert ((hot >= 0) & (hot < 32)).all()
+    with pytest.raises(ValueError):
+        SamplingParams(temperature=-1.0)
+    with pytest.raises(ValueError):
+        SamplingParams(top_p=0.0)
+
+
+def test_sampled_request_reproducible_across_batch_composition():
+    """Sampling is keyed by (base key, uid, step), so a sampled request's
+    tokens must not depend on what else rides the batch — and greedy
+    neighbours must stay bit-identical to their solo decode."""
+    eng = _engine("yi-6b")
+    sp = SamplingParams(temperature=0.8, top_k=5)
+    solo_gw = DecodeGateway(eng, max_slots=2, cache_slots=16,
+                            key=jax.random.PRNGKey(7))
+    alone = _serve(solo_gw, [DecodeRequest(prompt=[3, 7], max_tokens=6,
+                                           sampling=sp)])[0]
+    mixed_gw = DecodeGateway(eng, max_slots=2, cache_slots=16,
+                             key=jax.random.PRNGKey(7))
+    toks = _serve(mixed_gw, [
+        DecodeRequest(prompt=[3, 7], max_tokens=6, sampling=sp),  # uid 0
+        DecodeRequest(prompt=[5, 2], max_tokens=6),
+        DecodeRequest(prompt=[9], max_tokens=4),
+    ])
+    assert toks[0] == alone
+    assert toks[1] == _solo_tokens(eng, [5, 2], 6)
+    assert toks[2] == _solo_tokens(eng, [9], 4)
+    # a different base key re-randomises the sampled request
+    other_gw = DecodeGateway(eng, max_slots=2, cache_slots=16,
+                             key=jax.random.PRNGKey(8))
+    other = _serve(other_gw, [DecodeRequest(prompt=[3, 7], max_tokens=6,
+                                            sampling=sp)])[0]
+    assert other != alone
+
+
+def test_greedy_only_engine_rejects_sampling():
+    gw = DecodeGateway(ToyDecodeEngine(), max_slots=1, cache_slots=4)
+    with pytest.raises(ValueError, match="does not support sampling"):
+        gw.submit(DecodeRequest(prompt=[3], max_tokens=2,
+                                sampling=SamplingParams(temperature=1.0)))
+    # temperature 0 rows are exact greedy — accepted everywhere
+    f = gw.submit(DecodeRequest(prompt=[3], max_tokens=2,
+                                sampling=SamplingParams(temperature=0.0)))
+    _drive(gw, [f])
+    assert f.result().tokens.tolist() == ToyDecodeEngine().solo_tokens([3], 2)
+
+
+# -- hygiene: cancelled slots and stats skew ---------------------------------
+
+
+def test_cancelled_resident_sequence_frees_slot_next_pump():
+    """The slot-leak fix: a future cancelled mid-decode must release its
+    row (and stop decoding) at the next pump instead of holding the slot
+    to max_tokens — the queued sequence behind it gets served."""
+    eng = ToyDecodeEngine()
+    gw = DecodeGateway(eng, max_slots=1, cache_slots=64)
+    f1 = gw.submit(DecodeRequest(prompt=[3], max_tokens=1000))
+    f2 = gw.submit(DecodeRequest(prompt=[7], max_tokens=3))
+    gw.pump()
+    assert gw._slots[0] is not None and not f1.done()
+    assert f1.cancel()
+    gw.pump()                               # sweep releases the slot
+    _drive(gw, [f2])
+    assert f2.result().tokens.tolist() == eng.solo_tokens([7], 3)
+    s = gw.stats()
+    assert s["cancelled"] == 1 and s["completed"] == 1
+    assert s["tokens_out"] == 3             # the cancelled row counts nothing
+    assert gw._drained()
+
+
+def test_cancelled_queued_sequence_never_admitted():
+    gw = DecodeGateway(ToyDecodeEngine(), max_slots=1, cache_slots=16)
+    f1 = gw.submit(DecodeRequest(prompt=[3], max_tokens=2))
+    f2 = gw.submit(DecodeRequest(prompt=[5], max_tokens=2))
+    assert f2.cancel()
+    _drive(gw, [f1])
+    while not gw._drained():
+        gw.pump()
+    s = gw.stats()
+    assert s["cancelled"] == 1 and s["completed"] == 1
+    assert all(sl is None for sl in gw._slots)
+
+
+def test_stats_tokens_per_s_zero_on_frozen_clock():
+    """The stats-skew fix: a zero-elapsed snapshot reports 0.0 tokens/s
+    instead of a 1e9-ish spike from the epsilon denominator."""
+    gw = DecodeGateway(ToyDecodeEngine(), max_slots=1, cache_slots=16,
+                       clock=FakeClock())     # never advanced
+    f = gw.submit(DecodeRequest(prompt=[3], max_tokens=4))
+    _drive(gw, [f])
+    s = gw.stats()
+    assert s["tokens_out"] == 4
+    assert s["tokens_per_s"] == 0.0
