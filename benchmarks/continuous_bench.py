@@ -32,6 +32,7 @@ from collections import deque
 import jax
 import numpy as np
 
+from repro.observability import bucket_bounds_at
 from repro.serving import ContinuousGateway, Gateway, Request
 from repro.serving.toy import FakeClock, ToyAnytimeSampler
 
@@ -112,12 +113,12 @@ def simulate(make_gateway, events, step_ms: float):
             else:
                 clock.advance(idle_hop)                  # age the stragglers
     waits = np.array([f.result().meta["wait_ms"] for f in futures])
-    return waits, gw.stats()
+    return waits, gw.stats(), gw.metrics.snapshot()
 
 
 def run(requests: int = 96, max_slots: int = 8, step_ms: float = 2.0,
         max_wait_ms: float = 12.0, inter_ms: float = 6.0, max_leg: int = 4,
-        log=print):
+        log=print, registry_out=None):
     """Moderate steady load (service keeps up with arrivals; buckets do NOT
     fill before ``max_wait_ms``): the regime continuous batching targets —
     flush-only ages out partial batches while requests that could join an
@@ -127,16 +128,23 @@ def run(requests: int = 96, max_slots: int = 8, step_ms: float = 2.0,
     rows = []
     for mix in MIXES:
         events = schedule(mix, requests, inter_ms, burst=max_slots)
-        flush_waits, flush_stats = simulate(
+        flush_waits, flush_stats, flush_snap = simulate(
             lambda sampler, clock: Gateway(sampler, max_batch=max_slots,
                                            max_wait_ms=max_wait_ms,
                                            clock=clock),
             events, step_ms)
-        cont_waits, cont_stats = simulate(
+        cont_waits, cont_stats, cont_snap = simulate(
             lambda sampler, clock: ContinuousGateway(
                 sampler, max_slots=max_slots, max_wait_ms=max_wait_ms,
                 clock=clock, max_leg=max_leg),
             events, step_ms)
+        if registry_out is not None:
+            registry_out[mix] = {"flush": flush_snap, "cont": cont_snap}
+        # the registry's interpolated p95 must agree with the exact
+        # per-request percentile to within one histogram bucket width
+        hist = cont_snap["wait_ms"]
+        lo, hi = bucket_bounds_at(hist["bounds"], hist["buckets"], 95.0)
+        width = float(hi - lo) if np.isfinite(hi) else float("inf")
         row = {
             "mix": mix,
             "requests": requests,
@@ -158,6 +166,11 @@ def run(requests: int = 96, max_slots: int = 8, step_ms: float = 2.0,
             "join_rate": cont_stats["join_rate"],
             "trajectories": cont_stats["trajectories"],
             "slot_occupancy": cont_stats["slot_occupancy"],
+            "cont_p95_wait_ms_registry": float(hist["p95"]),
+            "registry_p95_bucket_width": width,
+            "registry_p95_delta": float(
+                abs(hist["p95"] - np.percentile(cont_waits, 95))),
+            "wait_hist_count": int(hist["count"]),
         }
         rows.append(row)
         log(f"{mix}: p95 wait {row['flush_p95_wait_ms']:.1f}ms (flush) -> "
@@ -188,6 +201,16 @@ def check_claims(rows):
             notes.append(f"[{'PASS' if ok else 'FAIL'}] continuous stays "
                          f"within 10% of flush-only forwards on the "
                          f"skew16 workload (ratio {r['forwards_ratio']:.3f})")
+        ok = (r["registry_p95_delta"]
+              <= r["registry_p95_bucket_width"] + 1e-9)
+        notes.append(f"[{'PASS' if ok else 'FAIL'}] {r['mix']}: registry "
+                     f"histogram p95 within one bucket width of "
+                     f"np.percentile (delta {r['registry_p95_delta']:.2f}ms"
+                     f" <= width {r['registry_p95_bucket_width']:.2f}ms)")
+        ok = r["wait_hist_count"] == r["requests"]
+        notes.append(f"[{'PASS' if ok else 'FAIL'}] {r['mix']}: wait "
+                     f"histogram count == settled requests "
+                     f"({r['wait_hist_count']} vs {r['requests']})")
     return notes
 
 
@@ -202,6 +225,13 @@ def metrics(rows):
             "value": round(r["forwards_ratio"], 4), "higher_better": False}
         out[f"{r['mix']}.join_rate"] = {
             "value": round(r["join_rate"], 4), "higher_better": True}
+        # deterministic registry metrics: the histogram count is exact and
+        # the interpolated p95 rides the same fake clock as the waits
+        out[f"{r['mix']}.wait_hist_count"] = {
+            "value": r["wait_hist_count"], "higher_better": True}
+        out[f"{r['mix']}.cont_p95_wait_ms_registry"] = {
+            "value": round(r["cont_p95_wait_ms_registry"], 4),
+            "higher_better": False}
     return out
 
 

@@ -99,7 +99,11 @@ def simulate(requests: int, mix: str, max_slots: int, step_ms: float,
                   for f, o in zip(futures, oracle))
     waits = np.array([f.result().meta["wait_ms"] for f in futures])
     s = gw.stats()
+    snap = gw.metrics.snapshot()
     return {
+        "snapshot": snap,
+        "p95_wait_ms_registry": float(snap["wait_ms"]["p95"]),
+        "wait_hist_count": int(snap["wait_ms"]["count"]),
         "wall_steps": s["forwards"],
         "occupancy": s["slot_occupancy"],
         "p95_wait_ms": float(np.percentile(waits, 95)),
@@ -115,7 +119,7 @@ def simulate(requests: int, mix: str, max_slots: int, step_ms: float,
 
 
 def run(requests: int = 64, max_slots: int = 8, step_ms: float = 2.0,
-        log=print):
+        log=print, registry_out=None):
     rows = []
     for mix in MIXES:
         cont = simulate(requests, mix, max_slots, step_ms, refill=True)
@@ -127,6 +131,8 @@ def run(requests: int = 64, max_slots: int = 8, step_ms: float = 2.0,
         # paged control: same chunked/continuous gateway over a page pool
         paged = simulate(requests, mix, max_slots, step_ms, refill=True,
                          page_size=PAGE_SIZE)
+        if registry_out is not None:
+            registry_out[mix] = cont["snapshot"]
         row = {
             "mix": mix,
             "requests": requests,
@@ -155,6 +161,8 @@ def run(requests: int = 64, max_slots: int = 8, step_ms: float = 2.0,
             "paged_peak_kv_per_slot": paged["peak_kv_per_slot"],
             "cache_slots": CACHE_SLOTS,
             "page_size": PAGE_SIZE,
+            "cont_p95_wait_ms_registry": cont["p95_wait_ms_registry"],
+            "wait_hist_count": cont["wait_hist_count"],
         }
         rows.append(row)
         log(f"{mix}: wall-steps {row['rtc_wall_steps']} (run-to-completion)"
@@ -221,6 +229,8 @@ def metrics(rows):
             "value": round(r["prefill_ratio"], 4), "higher_better": True}
         out[f"{r['mix']}.cont_occupancy"] = {
             "value": round(r["cont_occupancy"], 4), "higher_better": True}
+        out[f"{r['mix']}.wait_hist_count"] = {
+            "value": r["wait_hist_count"], "higher_better": True}
     mixed = next(r for r in rows if r["mix"] == "mixed")
     out["mixed.joins"] = {"value": mixed["joins"], "higher_better": True}
     out["mixed.paged_kv_per_slot"] = {

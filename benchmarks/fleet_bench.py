@@ -37,6 +37,7 @@ from collections import deque
 import jax
 import numpy as np
 
+from repro.observability import TraceRecorder
 from repro.serving import FleetGateway, Gateway, Request, WorkStealer
 from repro.serving.toy import CountingToySampler, FakeClock
 
@@ -70,7 +71,7 @@ def _x0(i):
 
 
 def simulate(events, stealer, step_ms: float, max_batch: int,
-             max_wait_ms: float):
+             max_wait_ms: float, recorder=None):
     """Drive one fleet through the arrival schedule on parallel emulated
     hosts. Each host dispatches only while free; a dispatch charges its
     ``busy_until`` horizon by (forwards spent) x step_ms. Stealing moves
@@ -86,7 +87,8 @@ def simulate(events, stealer, step_ms: float, max_batch: int,
         {name: Gateway(s, max_batch=max_batch, max_wait_ms=max_wait_ms,
                        mixed_budget_policy="never", clock=clock)
          for name, s in samplers.items()},
-        stealer=stealer, steal=stealer is not None, seed=1)
+        stealer=stealer, steal=stealer is not None, seed=1,
+        recorder=recorder)
     hosts = {name: fleet._hosts[name].gateway for name in samplers}
     busy = {name: 0.0 for name in hosts}
     pending = deque(events)
@@ -124,7 +126,7 @@ def simulate(events, stealer, step_ms: float, max_batch: int,
     waits = np.array([futures[i].result().meta["wait_ms"]
                       for i in sorted(futures)])
     rows = [np.asarray(futures[i].result().latents) for i in sorted(futures)]
-    return waits, rows, fleet.stats()
+    return waits, rows, fleet.stats(), fleet.metrics_snapshot()
 
 
 def oracle(events, max_batch: int, max_wait_ms: float):
@@ -140,7 +142,8 @@ def oracle(events, max_batch: int, max_wait_ms: float):
 
 
 def run(requests: int = 96, step_ms: float = 2.0, max_batch: int = 8,
-        max_wait_ms: float = 12.0, inter_ms: float = 2.0, log=print):
+        max_wait_ms: float = 12.0, inter_ms: float = 2.0, log=print,
+        registry_out=None, trace_jsonl=None):
     """Arrival rate tuned so the skewed mix SATURATES the hot key's home
     host (partial aged flushes at budget 16 cannot keep up) while the
     four-host fleet has ample total capacity — exactly the regime work
@@ -152,10 +155,22 @@ def run(requests: int = 96, step_ms: float = 2.0, max_batch: int = 8,
     rows = []
     for mix in MIXES:
         events = schedule(mix, requests, inter_ms, burst=max_batch)
-        static_waits, static_rows, static_stats = simulate(
+        static_waits, static_rows, static_stats, _ = simulate(
             events, None, step_ms, max_batch, max_wait_ms)
-        steal_waits, steal_rows, steal_stats = simulate(
-            events, stealer, step_ms, max_batch, max_wait_ms)
+        # the skewed steal run carries a trace recorder so a STOLEN
+        # request's hop chain (submit -> route -> steal -> inject ->
+        # dispatch -> settle) is reconstructable from the JSONL export
+        recorder = (TraceRecorder()
+                    if trace_jsonl and mix == "skew16" else None)
+        steal_waits, steal_rows, steal_stats, steal_snap = simulate(
+            events, stealer, step_ms, max_batch, max_wait_ms,
+            recorder=recorder)
+        if recorder is not None:
+            n = recorder.export_jsonl(trace_jsonl)
+            log(f"skew16 steal-run trace: {n} events -> {trace_jsonl}")
+        if registry_out is not None:
+            registry_out[mix] = steal_snap
+        hist = steal_snap["wait_ms"]
         ref = oracle(events, max_batch, max_wait_ms)
         bit_identical = all(
             np.array_equal(a, r) and np.array_equal(b, r)
@@ -179,6 +194,8 @@ def run(requests: int = 96, step_ms: float = 2.0, max_batch: int = 8,
             "steal_rounds": steal_stats["steal_rounds"],
             "steal_share": steal_stats["steals"] / requests,
             "bit_identical": bit_identical,
+            "steal_p95_wait_ms_registry": float(hist["p95"]),
+            "wait_hist_count": int(hist["count"]),
         }
         rows.append(row)
         log(f"{mix}: p95 wait {row['static_p95_wait_ms']:.1f}ms (static) -> "
@@ -197,6 +214,10 @@ def check_claims(rows):
         notes.append(f"[{'PASS' if ok else 'FAIL'}] {r['mix']}: fleet "
                      f"samples (static AND stealing) bit-identical to the "
                      f"single-gateway oracle")
+        ok = r["wait_hist_count"] == r["requests"]
+        notes.append(f"[{'PASS' if ok else 'FAIL'}] {r['mix']}: fleet-"
+                     f"merged wait histogram count == settled requests "
+                     f"({r['wait_hist_count']} vs {r['requests']})")
         if r["mix"] == "skew16":
             ok = r["p95_ratio"] > 1.0
             notes.append(f"[{'PASS' if ok else 'FAIL'}] work stealing "
@@ -227,9 +248,14 @@ def metrics(rows):
             "value": round(r["p95_ratio"], 4), "higher_better": True}
         out[f"{r['mix']}.forwards_ratio"] = {
             "value": round(r["forwards_ratio"], 4), "higher_better": False}
+        out[f"{r['mix']}.wait_hist_count"] = {
+            "value": r["wait_hist_count"], "higher_better": True}
         if r["mix"] == "skew16":
             out["skew16.steal_share"] = {
                 "value": round(r["steal_share"], 4), "higher_better": True}
+            out["skew16.steal_p95_wait_ms_registry"] = {
+                "value": round(r["steal_p95_wait_ms_registry"], 4),
+                "higher_better": False}
     return out
 
 

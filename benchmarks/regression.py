@@ -91,9 +91,24 @@ def check_against(summaries: dict[str, dict], baseline_dir: str,
 
 def write_summaries(summaries: dict[str, dict], out_dir: str,
                     log=print) -> None:
+    """Write one summary JSON per bench, plus ``registry_snapshots.json``
+    collecting any ``"registry"`` payloads (raw MetricsRegistry snapshots
+    the telemetry-enabled benches attach). The registry rides the CI
+    artifact but is popped from the per-bench files so a fresh summary
+    stays byte-shaped like a committed baseline."""
     os.makedirs(out_dir, exist_ok=True)
+    registries = {}
     for name, summary in sorted(summaries.items()):
+        summary = dict(summary)
+        reg = summary.pop("registry", None)
+        if reg:
+            registries[name] = reg
         path = os.path.join(out_dir, f"{name}_bench.json")
         with open(path, "w") as f:
             json.dump(summary, f, indent=2, sort_keys=True)
         log(f"bench summary written to {path}")
+    if registries:
+        path = os.path.join(out_dir, "registry_snapshots.json")
+        with open(path, "w") as f:
+            json.dump(registries, f, indent=2, sort_keys=True)
+        log(f"registry snapshots written to {path}")

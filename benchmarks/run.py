@@ -161,7 +161,9 @@ def _gateway(quick, csv, summaries):
 @_timed("decode_bench")
 def _decode(quick, csv, summaries):
     from benchmarks import decode_bench
-    rows = decode_bench.run(requests=32 if quick else 64, log=log)
+    registry: dict = {}
+    rows = decode_bench.run(requests=32 if quick else 64, log=log,
+                            registry_out=registry)
     notes = decode_bench.check_claims(rows)
     for note in notes:
         log(note)
@@ -172,13 +174,16 @@ def _decode(quick, csv, summaries):
                     f"joins={r['joins']}"))
     summaries["decode"] = {"bench": "decode", "rows": rows,
                            "claims": notes,
-                           "metrics": decode_bench.metrics(rows)}
+                           "metrics": decode_bench.metrics(rows),
+                           "registry": registry}
 
 
 @_timed("continuous_bench")
 def _continuous(quick, csv, summaries):
     from benchmarks import continuous_bench
-    rows = continuous_bench.run(requests=48 if quick else 96, log=log)
+    registry: dict = {}
+    rows = continuous_bench.run(requests=48 if quick else 96, log=log,
+                                registry_out=registry)
     notes = continuous_bench.check_claims(rows)
     for note in notes:
         log(note)
@@ -189,13 +194,16 @@ def _continuous(quick, csv, summaries):
                     f"join_rate={r['join_rate']:.2f}"))
     summaries["continuous"] = {"bench": "continuous", "rows": rows,
                                "claims": notes,
-                               "metrics": continuous_bench.metrics(rows)}
+                               "metrics": continuous_bench.metrics(rows),
+                               "registry": registry}
 
 
 @_timed("fleet_bench")
 def _fleet(quick, csv, summaries):
     from benchmarks import fleet_bench
-    rows = fleet_bench.run(requests=48 if quick else 96, log=log)
+    registry: dict = {}
+    rows = fleet_bench.run(requests=48 if quick else 96, log=log,
+                           registry_out=registry)
     notes = fleet_bench.check_claims(rows)
     for note in notes:
         log(note)
@@ -206,7 +214,8 @@ def _fleet(quick, csv, summaries):
                     f"steal_share={r['steal_share']:.2f}"))
     summaries["fleet"] = {"bench": "fleet", "rows": rows,
                           "claims": notes,
-                          "metrics": fleet_bench.metrics(rows)}
+                          "metrics": fleet_bench.metrics(rows),
+                          "registry": registry}
 
 
 def _roofline(quick, csv, summaries):

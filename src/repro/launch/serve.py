@@ -34,6 +34,13 @@ the Pallas ns_update kernel. --fleet N federates N per-host gateways behind
 one ``repro.serving.fleet.FleetGateway`` (sharded request queue, affinity
 routing, work stealing) — the summary adds a fleet stats line.
 
+Every gateway mode shares one telemetry plane (``repro.observability``):
+--metrics-port serves live Prometheus text + JSON registry snapshots,
+--stats-interval N prints a periodic one-line summary through the SAME
+formatter that renders each mode's final stats line, --metrics-json dumps
+the final snapshot, and --trace-jsonl records per-request lifecycle spans
+(submit -> route -> steal -> dispatch -> settle) to a JSONL file.
+
 Decode mode serves batched greedy decode (jit'd multi-token scan). With
 --gateway it becomes a multi-user continuous-batching service
 (``repro.serving.decode.DecodeGateway``): each request is one prompt
@@ -63,6 +70,12 @@ from repro.core.rk45 import rk45_solve
 from repro.core.schedulers import get_scheduler
 from repro.data.synthetic import DataConfig, SyntheticTokens
 from repro.models import model as M
+from repro.observability import (
+    MetricsServer,
+    StatsPrinter,
+    TraceRecorder,
+    format_stats_line,
+)
 from repro.serving import (
     AnytimeFlowSampler,
     DecodeEngine,
@@ -73,6 +86,39 @@ from repro.serving import (
 from repro.solvers import SolverArtifact, SolverSpec
 
 DEFAULT_NFE = 8
+
+
+def _start_telemetry(args, gw, prefix: str) -> list:
+    """--metrics-port / --stats-interval surfaces around a live gateway.
+
+    Returns the stop callables to run after the traffic loop."""
+    stop = []
+    if args.metrics_port is not None:
+        srv = MetricsServer(gw.metrics_snapshot,
+                            port=args.metrics_port).start()
+        print(f"metrics: http://127.0.0.1:{srv.port}/metrics "
+              "(+ /metrics.json)")
+        stop.append(srv.stop)
+    if args.stats_interval > 0:
+        printer = StatsPrinter(
+            lambda: format_stats_line(gw.stats(), prefix=prefix),
+            args.stats_interval).start()
+        stop.append(printer.stop)
+    return stop
+
+
+def _finish_telemetry(args, gw) -> None:
+    """Dump --metrics-json / --trace-jsonl after the traffic loop."""
+    import json
+
+    if args.metrics_json:
+        with open(args.metrics_json, "w") as fh:
+            json.dump(gw.metrics_snapshot(), fh, indent=2, sort_keys=True)
+        print(f"metrics snapshot written to {args.metrics_json}")
+    rec = getattr(gw, "recorder", None)
+    if args.trace_jsonl and rec:
+        n = rec.export_jsonl(args.trace_jsonl)
+        print(f"trace: {n} events written to {args.trace_jsonl}")
 
 
 def _requested_spec(args) -> SolverSpec:
@@ -215,7 +261,9 @@ def _serve_gateway(args, sampler, cond, request_budgets) -> None:
     from repro.serving.gateway import Gateway, Request
     from repro.serving.sharded import serving_mesh
 
-    def make_host():
+    recorder = TraceRecorder() if args.trace_jsonl else None
+
+    def make_host(rec=None):
         # the solver artifact is tiny, so every fleet host serves the SAME
         # sampler object — replication is free, distribution is the work
         if args.continuous:
@@ -223,18 +271,23 @@ def _serve_gateway(args, sampler, cond, request_budgets) -> None:
                 sampler, max_slots=args.max_slots, max_batch=args.max_batch,
                 max_wait_ms=args.max_wait_ms,
                 mixed_budget_policy=args.mixed_budget_policy,
-                strict_nfe=args.strict_nfe, mesh=serving_mesh(args.mesh))
+                strict_nfe=args.strict_nfe, mesh=serving_mesh(args.mesh),
+                recorder=rec)
         return Gateway(sampler, max_batch=args.max_batch,
                        max_wait_ms=args.max_wait_ms,
                        mixed_budget_policy=args.mixed_budget_policy,
-                       strict_nfe=args.strict_nfe, mesh=serving_mesh(args.mesh))
+                       strict_nfe=args.strict_nfe, mesh=serving_mesh(args.mesh),
+                       recorder=rec)
 
     if args.fleet > 1:
-        gw = FleetGateway({f"h{i}": make_host() for i in range(args.fleet)})
+        # hosts get the recorder through federate() so every hop carries
+        # its host name
+        gw = FleetGateway({f"h{i}": make_host() for i in range(args.fleet)},
+                          recorder=recorder)
     else:
-        gw = make_host()
+        gw = make_host(rec=recorder)
     gw.start()
-    t0 = time.time()
+    stop_telemetry = _start_telemetry(args, gw, "gateway stats")
     futures = []
     for req in range(args.requests):
         nfe = request_budgets[req % len(request_budgets)]
@@ -253,24 +306,10 @@ def _serve_gateway(args, sampler, cond, request_budgets) -> None:
               f"wait {meta['wait_ms']:.1f} ms, "
               f"batch {meta['batch_real']}/{meta['batch_padded']}"
               + (" [mixed]" if meta["mixed"] else ""))
-    wall = time.time() - t0
-    s = gw.stats()
-    print(f"gateway stats: completed={s['completed']} batches={s['batches']} "
-          f"mixed={s['mixed_batches']} forwards={s['forwards']} "
-          f"nfe/request={s['nfe_per_request']:.2f} "
-          f"occupancy={s['occupancy']:.2f} "
-          f"mean_wait={s['mean_wait_ms']:.1f}ms "
-          f"throughput={s['completed'] / max(wall, 1e-9):.1f} rps")
-    if args.continuous:
-        print(f"continuous stats: trajectories={s['trajectories']} "
-              f"legs={s['legs']} joins={s['joins']} "
-              f"join_rate={s['join_rate']:.2f}"
-              + ("" if args.fleet > 1 else
-                 f" slot_occupancy={s['slot_occupancy']:.2f}"))
-    if args.fleet > 1:
-        routed = " ".join(f"{h}={n}" for h, n in sorted(s["routed"].items()))
-        print(f"fleet stats: hosts={s['hosts']} steals={s['steals']} "
-              f"rerouted={s['rerouted']} routed: {routed}")
+    for fn in stop_telemetry:
+        fn()
+    print(format_stats_line(gw.stats(), prefix="gateway stats"))
+    _finish_telemetry(args, gw)
 
 
 def serve_decode(args) -> None:
@@ -299,12 +338,14 @@ def _serve_decode_gateway(args, engine, cfg) -> None:
     if args.temperature > 0.0 or args.top_k > 0 or args.top_p < 1.0:
         sampling = SamplingParams(temperature=args.temperature,
                                   top_k=args.top_k, top_p=args.top_p)
+    recorder = TraceRecorder() if args.trace_jsonl else None
     gw = DecodeGateway(engine, max_slots=args.max_slots,
                        cache_slots=args.slots,
                        prefill_chunk=args.prefill_chunk,
-                       key=jax.random.PRNGKey(args.seed))
+                       key=jax.random.PRNGKey(args.seed),
+                       recorder=recorder)
     gw.start()
-    t0 = time.time()
+    stop_telemetry = _start_telemetry(args, gw, "decode gateway stats")
     futures = []
     for req in range(args.requests):
         prompt = [(3 * req + 1) % cfg.vocab, (5 * req + 2) % cfg.vocab]
@@ -317,19 +358,10 @@ def _serve_decode_gateway(args, engine, cfg) -> None:
         print(f"request {i}: {meta['new_tokens']} tokens "
               f"({meta['finish_reason']}), wait {meta['wait_ms']:.1f} ms, "
               f"slot {meta['slot']}, join_step {meta['join_step']}")
-    wall = time.time() - t0
-    s = gw.stats()
-    print(f"decode gateway stats: completed={s['completed']} "
-          f"steps={s['forwards']} tokens={s['tokens_out']} "
-          f"tokens/s={s['tokens_out'] / max(wall, 1e-9):.1f} "
-          f"slot_occupancy={s['slot_occupancy']:.2f} joins={s['joins']} "
-          f"prefill_calls={s['prefill_calls']} "
-          f"mean_wait={s['mean_wait_ms']:.1f}ms")
-    if "page_size" in s:
-        print(f"paged kv: page_size={s['page_size']} "
-              f"peak_pages={s['peak_pages']} "
-              f"peak_kv_per_slot={s['peak_kv_per_slot']:.1f} "
-              f"(dense would be {args.slots})")
+    for fn in stop_telemetry:
+        fn()
+    print(format_stats_line(gw.stats(), prefix="decode gateway stats"))
+    _finish_telemetry(args, gw)
 
 
 def _budget_list(text: str) -> tuple[int, ...]:
@@ -423,6 +455,22 @@ def main() -> None:
     ap.add_argument("--kernel-update", action="store_true",
                     help="route the NS solver update through the Pallas "
                          "ns_update kernel (interpret mode off-TPU)")
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    help="gateway modes: serve /metrics (Prometheus text) "
+                         "and /metrics.json on this port while traffic "
+                         "runs (0 = ephemeral port, printed at start)")
+    ap.add_argument("--metrics-json", default=None,
+                    help="gateway modes: write the final registry snapshot "
+                         "to this JSON file after the traffic loop")
+    ap.add_argument("--stats-interval", type=float, default=0.0,
+                    help="gateway modes: print a one-line stats summary "
+                         "every N seconds while traffic runs (0 = off); "
+                         "the same formatter renders the final line of "
+                         "every mode")
+    ap.add_argument("--trace-jsonl", default=None,
+                    help="gateway modes: record per-request lifecycle "
+                         "spans (submit/route/steal/dispatch/settle) and "
+                         "export them to this JSONL file")
     ap.add_argument("--cfg-scale", type=float, default=0.0)
     ap.add_argument("--bns-iters", type=int, default=300)
     ap.add_argument("--batch", type=int, default=8)

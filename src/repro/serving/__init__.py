@@ -45,6 +45,61 @@ concurrency it can absorb:
    shares one uid namespace + base key, so every sample stays
    bit-identical to the single-gateway path.
 
+Cutting across all five layers sits the **observability** plane
+(``repro.observability``): every tier emits into ONE ``MetricsRegistry``
+schema owned by ``GatewayBase`` (each ``stats()`` dict is a projection
+over a registry snapshot, and ``FleetGateway.stats()`` is the same
+projection over the bucket-exact MERGE of the per-host registries), an
+optional ``TraceRecorder`` captures per-request lifecycle spans
+(submit -> route -> steal -> dispatch -> settle, JSONL-exportable, hop-
+by-hop reconstructable for stolen requests), and ``serve.py`` exports
+everything over ``--metrics-port`` (Prometheus + JSON) and
+``--stats-interval`` (one shared line formatter for all modes).
+
+Metric schema (name — type — labels — emitting tiers):
+
+======================= ========= ============ =========================
+``submitted``           counter   —            all gateways
+``completed``           counter   —            all gateways
+``failed``              counter   —            all gateways
+``batches``             counter   —            gateway, decode
+``mixed_batches``       counter   —            gateway
+``forwards``            counter   —            gateway, continuous,
+                                               decode
+``real_rows``           counter   —            gateway, decode
+``padded_rows``         counter   —            gateway, decode
+``trajectories``        counter   —            continuous, decode
+``legs``                counter   —            continuous
+``joins``               counter   —            continuous, decode
+``join_forwards``       counter   —            continuous
+``slot_steps_active``   counter   —            continuous, decode
+``slot_steps_total``    counter   —            continuous, decode
+``tokens_out``          counter   —            decode
+``cancelled``           counter   —            decode
+``prefill_calls``       counter   —            decode
+``prefill_tokens``      counter   —            decode
+``stolen_in``           counter   —            any federated gateway
+``stolen_out``          counter   —            any federated gateway
+``steals``              counter   —            fleet (stealer)
+``steal_rounds``        counter   —            fleet (stealer)
+``rerouted``            counter   —            fleet (host leave)
+``dispatches``          counter   ``program``  all dispatching tiers
+``zoo_hits`` etc.       counter   —            zoo (hits/loads/distills/
+                                               misses/evictions/spills)
+``queue_depth``         gauge     —            all gateways (lazy)
+``inflight``            gauge     —            all gateways (lazy)
+``jit_programs``        gauge     —            all dispatching tiers
+``pages_in_use``        gauge     —            decode (``PageAllocator``)
+``peak_pages``          gauge     —            decode (``PageAllocator``)
+``page_pool_total``     gauge     —            decode (``PageAllocator``)
+``wait_ms``             histogram —            all gateways (submit ->
+                                               settle; count ==
+                                               completed)
+``host_assembly_ms``    histogram —            gateway
+``device_dispatch_ms``  histogram —            gateway, continuous,
+                                               decode
+======================= ========= ============ =========================
+
 Module map:
 
 ``engine``  — ``FlowSampler``, ``AnytimeFlowSampler``, ``DecodeEngine``

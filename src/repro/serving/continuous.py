@@ -38,11 +38,13 @@ every join scatter (``sharded.carry_placer``).
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Optional, Sequence
 
 import jax.numpy as jnp
 import numpy as np
 
+from repro.observability import profile_span
 from repro.serving.gateway import (
     BatchScheduler,
     Gateway,
@@ -189,7 +191,8 @@ class ContinuousGateway(Gateway):
                  max_batch: Optional[int] = None, max_wait_ms: float = 10.0,
                  mixed_budget_policy: str = "auto", strict_nfe: bool = False,
                  mesh=None, clock=None, key=None,
-                 max_leg: Optional[int] = None, join_cost_cap: float = 0.5):
+                 max_leg: Optional[int] = None, join_cost_cap: float = 0.5,
+                 metrics=None, recorder=None):
         for method in ("carry_start", "carry_extend"):
             if not hasattr(sampler, method):
                 raise TypeError(
@@ -200,7 +203,8 @@ class ContinuousGateway(Gateway):
         super().__init__(sampler, max_batch=max_batch or max_slots,
                          max_wait_ms=max_wait_ms,
                          mixed_budget_policy=mixed_budget_policy,
-                         strict_nfe=strict_nfe, mesh=mesh, key=key, **kw)
+                         strict_nfe=strict_nfe, mesh=mesh, key=key,
+                         metrics=metrics, recorder=recorder, **kw)
         self.scheduler = ContinuousScheduler(
             max_slots=max_slots, boundaries=sampler.budgets,
             max_batch=max_batch or max_slots, max_wait_ms=max_wait_ms,
@@ -264,13 +268,20 @@ class ContinuousGateway(Gateway):
             e.t_admit, e.join_step = now, 0
         traj = _Trajectory(carry=None, entries=list(starters) + [None] * pad,
                            shape_key=starters[0].shape_key, tokens=tokens)
-        carry = self.sampler.carry_start(traj.cond(), jnp.asarray(x0_np))
+        with profile_span(f"continuous.start.k{slots}"):
+            carry = self.sampler.carry_start(traj.cond(), jnp.asarray(x0_np))
         if self._place_carry is not None:
             carry = self._place_carry(carry)
         traj.carry = carry
         self._traj = traj
         with self._stats_lock:
-            self.stats_raw.trajectories += 1
+            self._m.trajectories.inc()
+            self._note_program(f"start/k{slots}")
+        rec = self.recorder
+        if rec:
+            for e in starters:
+                rec.event(e.uid, "dispatch", now, host=self._host,
+                          kind="traj_start")
 
     def _advance_leg(self) -> None:
         """Advance to the next exit boundary, release exiting slots, admit
@@ -280,8 +291,11 @@ class ContinuousGateway(Gateway):
         boundary = self.scheduler.next_boundary(step)
         assert boundary is not None, "trajectory ran past the top budget"
         active = traj.active()
-        carry, exits = self.sampler.carry_extend(traj.cond(), traj.carry,
-                                                 boundary)
+        t0 = time.perf_counter()
+        with profile_span(f"continuous.leg.{step}-{boundary}"):
+            carry, exits = self.sampler.carry_extend(traj.cond(), traj.carry,
+                                                     boundary)
+        leg_ms = (time.perf_counter() - t0) * 1e3
         traj.carry = carry
         # a max_leg-clipped stop is a control point, not an exit boundary:
         # nothing releases or joins there, but interleaved flushes can run
@@ -290,11 +304,14 @@ class ContinuousGateway(Gateway):
                     if is_exit and e.served == boundary]
         latents = np.asarray(exits[boundary]) if released else None
         with self._stats_lock:
-            s = self.stats_raw
-            s.legs += 1
-            s.forwards += boundary - step
-            s.slot_steps_active += len(active) * (boundary - step)
-            s.slot_steps_total += self.scheduler.max_slots * (boundary - step)
+            m = self._m
+            m.legs.inc()
+            m.forwards.inc(boundary - step)
+            m.slot_steps_active.inc(len(active) * (boundary - step))
+            m.slot_steps_total.inc(
+                self.scheduler.max_slots * (boundary - step))
+            m.device_dispatch_ms.observe(leg_ms)
+            self._note_program(f"leg/{step}-{boundary}")
         for si, e in released:
             self._release(traj, si, e, latents[si], boundary, len(active))
         if is_exit:
@@ -320,11 +337,15 @@ class ContinuousGateway(Gateway):
         """Resolve one slot's future at its exit boundary and free the slot."""
         wait_ms = (e.t_admit - e.t_submit) * 1e3
         with self._stats_lock:
-            s = self.stats_raw
-            s.completed += 1
-            s.sum_wait_ms += wait_ms
-            s.max_wait_ms = max(s.max_wait_ms, wait_ms)
+            # wait observed exactly where completed ticks, so the
+            # histogram count == completed invariant holds tier-wide
+            self._m.completed.inc()
+            self._m.wait_ms.observe(wait_ms)
             self._inflight -= 1      # taken at plan_start/plan_joins
+        rec = self.recorder
+        if rec:
+            rec.event(e.uid, "settle", self.clock(), host=self._host,
+                      status="completed", boundary=boundary, slot=si)
         response = Response(latents=row, meta={
             "requested_budget": e.requested,
             "served_budget": e.served,
@@ -337,6 +358,8 @@ class ContinuousGateway(Gateway):
             "join_step": e.join_step,
             "slot": si,
         })
+        if e.trace and rec:
+            response.trace = rec.trace(e.uid)
         try:
             e.future.set_result(response)
         except Exception:           # cancelled: the trajectory rolls on
@@ -349,10 +372,12 @@ class ContinuousGateway(Gateway):
         padded mini-dispatch, ``boundary`` forwards), scatter the prefix
         carries into the freed slots, and re-place on the mesh if sharded."""
         k = len(joiners)
-        x0_np, t_np = assemble_rows(joiners, self.scheduler.join_bucket(k))
+        bucket = self.scheduler.join_bucket(k)
+        x0_np, t_np = assemble_rows(joiners, bucket)
         cond = None if t_np is None else {"tokens": jnp.asarray(t_np)}
-        prefix = self.sampler.carry_start(cond, jnp.asarray(x0_np))
-        prefix, _ = self.sampler.carry_extend(cond, prefix, boundary)
+        with profile_span(f"continuous.join.{boundary}/k{bucket}"):
+            prefix = self.sampler.carry_start(cond, jnp.asarray(x0_np))
+            prefix, _ = self.sampler.carry_extend(cond, prefix, boundary)
         free = traj.free_slots()[:k]
         idx = jnp.asarray(free)
         carry = traj.carry
@@ -364,16 +389,21 @@ class ContinuousGateway(Gateway):
             carry = self._place_carry(carry)
         traj.carry = carry
         now = self.clock()
+        rec = self.recorder
         for si, e in zip(free, joiners):
             e.t_admit, e.join_step = now, boundary
             if traj.tokens is not None:
                 traj.tokens[si] = np.asarray(e.tokens)
             traj.entries[si] = e
+            if rec:
+                rec.event(e.uid, "join", now, host=self._host,
+                          boundary=boundary, slot=si)
         with self._stats_lock:
-            s = self.stats_raw
-            s.joins += k
-            s.forwards += boundary
-            s.join_forwards += boundary
+            m = self._m
+            m.joins.inc(k)
+            m.forwards.inc(boundary)
+            m.join_forwards.inc(boundary)
+            self._note_program(f"join/{boundary}-k{bucket}")
 
     def _fail_trajectory(self, exc: BaseException) -> None:
         """Surface a failing leg into every occupied slot's future and

@@ -93,6 +93,7 @@ from typing import Any, Callable, Optional, Sequence, Union
 
 import numpy as np
 
+from repro.observability import profile_span
 from repro.serving.gateway import GatewayBase
 
 
@@ -106,6 +107,8 @@ class DecodeRequest:
     max_tokens: int = 16
     stop_token: Optional[int] = None
     sampling: Optional[Any] = None      # repro.serving.engine.SamplingParams
+    # opt-in: attach the recorded lifecycle trace to the DecodeResponse
+    trace: bool = False
 
 
 @dataclasses.dataclass
@@ -121,6 +124,7 @@ class DecodeResponse:
 
     tokens: np.ndarray
     meta: dict
+    trace: Optional[list] = None    # recorded lifecycle (opt-in)
 
 
 class PageAllocator:
@@ -159,6 +163,20 @@ class PageAllocator:
     def free(self, pages: Sequence[int]) -> None:
         self._free.extend(pages)
 
+    def bind(self, registry) -> None:
+        """Register lazy gauges into the owning gateway's metrics
+        registry — page accounting already lives here, so the registry
+        reads it at snapshot time instead of double-booking each
+        alloc/free."""
+        registry.gauge("pages_in_use",
+                       "KV pages allocated out of the shared pool") \
+            .set_fn(lambda: self.in_use)
+        registry.gauge("peak_pages",
+                       "high-water KV pages in use").set_fn(lambda: self.peak)
+        registry.gauge("page_pool_total",
+                       "allocatable pages (total minus trash page 0)") \
+            .set_fn(lambda: self.total - 1)
+
 
 @dataclasses.dataclass
 class _DecodeEntry:
@@ -171,6 +189,7 @@ class _DecodeEntry:
     sampling: Optional[Any] = None
     t_admit: Optional[float] = None
     join_step: int = 0          # engine step at admission (0 = opened batch)
+    trace: bool = False         # attach the recorded lifecycle on finish
 
 
 @dataclasses.dataclass
@@ -216,7 +235,8 @@ class DecodeGateway(GatewayBase):
     def __init__(self, engine, *, max_slots: int = 8, cache_slots: int = 128,
                  dtype=None, refill: bool = True, prefill_chunk: int = 64,
                  total_pages: Optional[int] = None, key=None, mesh=None,
-                 clock: Callable[[], float] = time.monotonic):
+                 clock: Callable[[], float] = time.monotonic,
+                 metrics=None, recorder=None):
         if max_slots < 1:
             raise ValueError("max_slots must be >= 1")
         if prefill_chunk < 0:
@@ -230,7 +250,7 @@ class DecodeGateway(GatewayBase):
                 "slot state has no per-request encoder memory; decode "
                 "encdec batches through DecodeEngine.greedy with a "
                 "prefilled state instead")
-        super().__init__(clock=clock)
+        super().__init__(clock=clock, metrics=metrics, recorder=recorder)
         self.engine = engine
         self.max_slots = max_slots
         self.refill = refill
@@ -255,6 +275,7 @@ class DecodeGateway(GatewayBase):
             pages = (1 + max_slots * blocks) if total_pages is None \
                 else total_pages
             self._alloc = PageAllocator(pages)
+            self._alloc.bind(self.metrics)
             self._table = np.zeros((max_slots, blocks), np.int32)
             state_kw["total_pages"] = pages
         self._state = engine.init_slot_state(max_slots, cache_slots,
@@ -314,7 +335,8 @@ class DecodeGateway(GatewayBase):
                              max_tokens=int(request.max_tokens),
                              stop_token=request.stop_token,
                              sampling=sampling,
-                             t_submit=self.clock(), future=Future())
+                             t_submit=self.clock(), future=Future(),
+                             trace=request.trace)
         return self._enqueue(entry)
 
     # -- engine tick ----------------------------------------------------------
@@ -340,28 +362,33 @@ class DecodeGateway(GatewayBase):
             if not active.any():
                 return did
             sampling = self._slot_sampling() if self._sampling_resident else None
+            t0 = time.perf_counter()
             try:
-                if sampling is None:
-                    nxt, state = self.engine.step_slots(self._feed.copy(),
-                                                        self._state, active)
-                else:
-                    nxt, state = self.engine.step_slots(self._feed.copy(),
-                                                        self._state, active,
-                                                        sampling=sampling)
+                with profile_span(f"decode.step.k{self.max_slots}"):
+                    if sampling is None:
+                        nxt, state = self.engine.step_slots(
+                            self._feed.copy(), self._state, active)
+                    else:
+                        nxt, state = self.engine.step_slots(
+                            self._feed.copy(), self._state, active,
+                            sampling=sampling)
             except BaseException as exc:  # noqa: BLE001 — see _fail_slots
                 self._fail_slots(exc)
                 return 1
+            step_ms = (time.perf_counter() - t0) * 1e3
             self._state = state
             nxt = np.asarray(nxt)
             self._steps += 1
             with self._stats_lock:
-                s = self.stats_raw
-                s.forwards += 1          # one backbone forward per step
-                s.batches += 1
-                s.real_rows += int(active.sum())
-                s.padded_rows += self.max_slots
-                s.slot_steps_active += int(active.sum())
-                s.slot_steps_total += self.max_slots
+                m = self._m
+                m.forwards.inc()         # one backbone forward per step
+                m.batches.inc()
+                m.real_rows.inc(int(active.sum()))
+                m.padded_rows.inc(self.max_slots)
+                m.slot_steps_active.inc(int(active.sum()))
+                m.slot_steps_total.inc(self.max_slots)
+                m.device_dispatch_ms.observe(step_ms)
+                self._note_program(f"step/k{self.max_slots}")
             for i, slot in enumerate(self._slots):
                 if slot is not None and active[i]:
                     self._advance_slot(i, slot, int(nxt[i]))
@@ -389,12 +416,16 @@ class DecodeGateway(GatewayBase):
         """Release slots whose futures the client cancelled — without this
         a cancelled sequence keeps decoding (and holding its row + pages)
         until max_tokens, starving the queue: the slot-leak fix."""
+        rec = self.recorder
         for i, slot in enumerate(self._slots):
             if slot is not None and slot.entry.future.cancelled():
                 self._release_slot(i, slot)
                 with self._stats_lock:
-                    self.stats_raw.cancelled += 1
+                    self._m.cancelled.inc()
                     self._inflight -= 1       # taken at admission
+                if rec:
+                    rec.event(slot.entry.uid, "settle", self.clock(),
+                              host=self._host, status="cancelled")
 
     def _admit(self) -> None:
         """Admit queued sequences (FIFO) into free slots: reset each freed
@@ -412,8 +443,7 @@ class DecodeGateway(GatewayBase):
         dropped = [e for e in pending if e.future.cancelled()]
         if dropped:
             self._take(dropped)
-            with self._stats_lock:
-                self.stats_raw.cancelled += len(dropped)
+            self._m.cancelled.inc(len(dropped))
             self._settle(len(dropped))
             pending = [e for e in pending if not e.future.cancelled()]
         admitted = []
@@ -466,11 +496,16 @@ class DecodeGateway(GatewayBase):
             self._state = self.engine.with_block_table(self._state,
                                                        self._table.copy())
         with self._stats_lock:
-            s = self.stats_raw
+            m = self._m
             if busy:
-                s.joins += len(assigned)   # continuous refill mid-flight
+                m.joins.inc(len(assigned))  # continuous refill mid-flight
             else:
-                s.trajectories += 1        # opened a fresh engine batch
+                m.trajectories.inc()        # opened a fresh engine batch
+        rec = self.recorder
+        if rec:
+            for i, e in assigned:
+                rec.event(e.uid, "dispatch", now, host=self._host,
+                          kind="admit", slot=i, join_step=e.join_step)
 
     def _pump_prefill(self) -> int:
         """One chunked-prefill engine call covering every row still
@@ -495,23 +530,33 @@ class DecodeGateway(GatewayBase):
             tokens[i, :take] = p[s.pos:s.pos + take]
             lengths[i] = take
             mask[i] = True
+        t0 = time.perf_counter()
         try:
-            self._state = self.engine.prefill_slots(tokens, lengths,
-                                                    self._state, mask)
+            with profile_span(f"decode.prefill.w{width}"):
+                self._state = self.engine.prefill_slots(tokens, lengths,
+                                                        self._state, mask)
         except BaseException as exc:  # noqa: BLE001 — see _fail_slots
             self._fail_slots(exc)
             return 1
+        prefill_ms = (time.perf_counter() - t0) * 1e3
         with self._stats_lock:
-            s = self.stats_raw
-            s.forwards += 1              # one engine invocation
-            s.prefill_calls += 1
-            s.prefill_tokens += int(lengths.sum())
+            m = self._m
+            m.forwards.inc()             # one engine invocation
+            m.prefill_calls.inc()
+            m.prefill_tokens.inc(int(lengths.sum()))
+            m.device_dispatch_ms.observe(prefill_ms)
+            self._note_program(f"prefill/w{width}")
+        rec = self.recorder
+        now = self.clock() if rec else 0.0
         for i, sl in need:
             sl.pos += int(lengths[i])
             p = sl.entry.prompt
             if sl.pos == len(p) - 1:     # prompt consumed: decode next tick
                 self._feed[i] = p[-1]
                 sl.pos = len(p)
+                if rec:
+                    rec.event(sl.entry.uid, "prefill", now, host=self._host,
+                              prompt_len=int(len(p)))
         return 1
 
     def _advance_slot(self, si: int, slot: _Slot, tok: int) -> None:
@@ -557,6 +602,10 @@ class DecodeGateway(GatewayBase):
         cancelled in the same tick must not inflate ``tokens_out`` or the
         wait aggregates (the stats-skew fix)."""
         e = slot.entry
+        rec = self.recorder
+        if rec:
+            rec.event(e.uid, "settle", self.clock(), host=self._host,
+                      status="completed", finish_reason=reason, slot=si)
         response = DecodeResponse(
             tokens=np.asarray(slot.emitted, np.int32),
             meta={
@@ -568,6 +617,8 @@ class DecodeGateway(GatewayBase):
                 "join_step": e.join_step,
                 "wait_ms": (e.t_admit - e.t_submit) * 1e3,
             })
+        if e.trace and rec:
+            response.trace = rec.trace(e.uid)
         try:
             e.future.set_result(response)
             settled = True
@@ -575,14 +626,13 @@ class DecodeGateway(GatewayBase):
             settled = False
         wait_ms = (e.t_admit - e.t_submit) * 1e3
         with self._stats_lock:
-            s = self.stats_raw
+            m = self._m
             if settled:
-                s.completed += 1
-                s.tokens_out += len(slot.emitted)
-                s.sum_wait_ms += wait_ms
-                s.max_wait_ms = max(s.max_wait_ms, wait_ms)
+                m.completed.inc()
+                m.tokens_out.inc(len(slot.emitted))
+                m.wait_ms.observe(wait_ms)
             else:
-                s.cancelled += 1
+                m.cancelled.inc()
             self._inflight -= 1        # taken at admission
         self._release_slot(si, slot)
 

@@ -60,7 +60,17 @@ from typing import Callable, Mapping, Optional, Sequence, Union
 
 import jax
 
-from repro.serving.gateway import GatewayBase, HostLoad, Request
+from repro.observability import (
+    NULL_RECORDER,
+    MetricsRegistry,
+    merge_snapshots,
+)
+from repro.serving.gateway import (
+    GatewayBase,
+    HostLoad,
+    Request,
+    stats_projection,
+)
 
 
 def default_affinity(request, top_budget: Optional[int] = None) -> tuple:
@@ -220,7 +230,8 @@ class FleetGateway:
                  stealer: Optional[WorkStealer] = None,
                  steal: bool = True,
                  affinity: Optional[Callable] = None,
-                 key=None, seed: int = 0):
+                 key=None, seed: int = 0,
+                 metrics: Optional[MetricsRegistry] = None, recorder=None):
         if not isinstance(hosts, Mapping):
             hosts = {f"h{i}": gw for i, gw in enumerate(hosts)}
         if not hosts:
@@ -232,16 +243,26 @@ class FleetGateway:
         self._base_key = key if key is not None else jax.random.PRNGKey(0)
         self._uids = itertools.count()   # ONE uid namespace across shards
         self._lock = threading.RLock()   # membership + routing + intake
-        self._stats_lock = threading.Lock()
+        # fleet-level registry: only the counters that belong to the
+        # FEDERATION itself (stealing/rerouting); everything else lives in
+        # the per-host registries and is merged at snapshot time
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self._stats_lock = self.metrics.lock
+        self._m_steals = self.metrics.counter(
+            "steals", "entries migrated by the work stealer")
+        self._m_steal_rounds = self.metrics.counter(
+            "steal_rounds", "rebalance rounds that moved >= 1 entry")
+        self._m_rerouted = self.metrics.counter(
+            "rerouted", "entries re-homed by a host leave")
+        # ONE recorder fleet-wide: every host stamps events into it with
+        # its host label, so a stolen request's hops interleave in order
+        self.recorder = recorder if recorder is not None else NULL_RECORDER
         self._hosts: dict[str, _Host] = {}
         self._closed = False
         self._running = False
         self._poll_s = 0.001
         self._stop = threading.Event()
         self._balancer: Optional[threading.Thread] = None
-        self._steals = 0          # entries migrated by the stealer
-        self._steal_rounds = 0    # rounds that moved at least one entry
-        self._rerouted = 0        # entries re-homed by host leave
         for name, gw in hosts.items():
             self.add_host(name, gw)
 
@@ -256,7 +277,9 @@ class FleetGateway:
                 raise RuntimeError("fleet is draining; no new hosts")
             if name in self._hosts:
                 raise ValueError(f"host {name!r} already in the fleet")
-            gateway.federate(self._uids, self._base_key)
+            gateway.federate(self._uids, self._base_key,
+                             recorder=self.recorder if self.recorder
+                             else None, host=name)
             self.router.add(name)
             self._hosts[name] = _Host(name=name, gateway=gateway)
             if self._running:
@@ -288,8 +311,7 @@ class FleetGateway:
             for dest, es in by_dest.items():
                 self._hosts[dest].gateway.inject(es)
         if moved:
-            with self._stats_lock:
-                self._rerouted += len(moved)
+            self._m_rerouted.inc(len(moved))
         host.gateway.drain(timeout=timeout)
         host.gateway.stop()
         return host.gateway
@@ -326,6 +348,13 @@ class FleetGateway:
             host = self._hosts[self.router.route(self._key_of(request))]
             future = host.gateway.submit(request)
             host.routed += 1
+            rec = self.recorder
+            if rec:
+                # the home gateway stamped "submit"; the routing decision
+                # is fleet-level, so it is stamped here (future.uid is set
+                # by GatewayBase._enqueue before submit returns)
+                rec.event(future.uid, "route", host.gateway.clock(),
+                          host=host.name)
         return future
 
     # -- stealing ------------------------------------------------------------
@@ -358,8 +387,8 @@ class FleetGateway:
                 moved += len(entries)
         if moved:
             with self._stats_lock:
-                self._steals += moved
-                self._steal_rounds += 1
+                self._m_steals.inc(moved)
+                self._m_steal_rounds.inc()
         return moved
 
     # -- manual engine tick (fake clock) -------------------------------------
@@ -430,61 +459,47 @@ class FleetGateway:
 
     # -- metrics -------------------------------------------------------------
 
+    def metrics_snapshot(self) -> dict:
+        """The fleet-wide registry snapshot: the MERGE of every host's
+        registry plus the fleet's own (steals/rerouting). Counters and
+        gauges sum; wait histograms merge bucket-wise (exact), so the
+        fleet p95 is computed from the combined distribution — not some
+        average of per-host percentiles."""
+        with self._lock:
+            snaps = [h.gateway.metrics.snapshot()
+                     for _, h in sorted(self._hosts.items())]
+        snaps.append(self.metrics.snapshot())
+        return merge_snapshots(snaps)
+
     def stats(self) -> dict:
         """Fleet-aggregated serving metrics plus the per-host view.
 
-        Counter keys (submitted/completed/failed/batches/forwards/joins/
-        steals/...) sum across hosts; occupancy and nfe_per_request are
-        recomputed from the summed numerators/denominators (a mean of
-        ratios would weight empty hosts equally with busy ones);
-        ``queue_depths``/``routed`` expose the shard balance the stealer
-        works against. ``per_host`` holds each host's full ``stats()``."""
+        The aggregate IS ``stats_projection`` over the merged per-host
+        registry snapshots — identical code path to a single gateway, so
+        occupancy / nfe_per_request / mean_wait come from summed
+        numerators and denominators (a mean of ratios would weight empty
+        hosts equally with busy ones) and the wait percentiles come from
+        the merged histogram. ``queue_depths``/``routed`` expose the
+        shard balance the stealer works against; ``per_host`` holds each
+        host's full ``stats()``."""
         with self._lock:
             items = sorted(self._hosts.items())
             per_host = {n: dict(h.gateway.stats(), routed=h.routed)
                         for n, h in items}
-        with self._stats_lock:
-            steals, rounds = self._steals, self._steal_rounds
-            rerouted = self._rerouted
-        hs = list(per_host.values())
-
-        def total(key):
-            return sum(s[key] for s in hs)
-
-        # host stats() exposes occupancy but not raw row counts; recompute
-        # the fleet ratio from the raw counters instead
-        with self._lock:
-            raw = [h.gateway.stats_raw for _, h in items]
-        real_rows = sum(r.real_rows for r in raw)
-        padded_rows = sum(r.padded_rows for r in raw)
-        completed = total("completed")
-        out = {
+            snaps = [h.gateway.metrics.snapshot() for _, h in items]
+            clock = items[0][1].gateway.clock
+            started = min(h.gateway._started for _, h in items)
+        snaps.append(self.metrics.snapshot())
+        merged = merge_snapshots(snaps)
+        out = stats_projection(merged, clock() - started)
+        out.update({
             "hosts": len(per_host),
-            "queue_depth": total("queue_depth"),
             "queue_depths": {n: s["queue_depth"]
                              for n, s in per_host.items()},
             "routed": {n: s["routed"] for n, s in per_host.items()},
-            "submitted": total("submitted"),
-            "completed": completed,
-            "failed": total("failed"),
-            "batches": total("batches"),
-            "mixed_batches": total("mixed_batches"),
-            "forwards": total("forwards"),
-            "nfe_per_request": total("forwards") / max(completed, 1),
-            "occupancy": real_rows / max(padded_rows, 1),
-            "mean_wait_ms": (sum(s["mean_wait_ms"] * s["completed"]
-                                 for s in hs) / max(completed, 1)),
-            "max_wait_ms": max((s["max_wait_ms"] for s in hs), default=0.0),
-            "trajectories": total("trajectories"),
-            "legs": total("legs"),
-            "joins": total("joins"),
-            "join_rate": total("joins") / max(completed, 1),
-            "tokens_out": total("tokens_out"),
-            "steals": steals,
-            "steal_rounds": rounds,
-            "stolen_in": total("stolen_in"),
-            "stolen_out": total("stolen_out"),
-            "rerouted": rerouted,
+            "steals": int(merged.get("steals", 0)),
+            "steal_rounds": int(merged.get("steal_rounds", 0)),
+            "rerouted": int(merged.get("rerouted", 0)),
             "per_host": per_host,
-        }
+        })
         return out

@@ -69,6 +69,17 @@ hosts so migrated entries keep their identity and folded noise keys match
 the single-gateway path bit-for-bit), and ``drain(timeout=)`` (bounded
 drain for graceful host leave — raises ``DrainTimeout`` with a stats
 snapshot instead of hanging on a wedged engine).
+
+Observability (``repro.observability``): ``GatewayBase`` owns a
+``MetricsRegistry`` holding ONE shared metric schema (``METRIC_SCHEMA``)
+that every tier — ``Gateway``/``ContinuousGateway``/``DecodeGateway``/
+``FleetGateway``, plus ``SolverZoo`` and ``PageAllocator`` — emits into.
+``stats()`` is now a compatibility projection of a registry snapshot
+(``stats_projection``), wait times land in a mergeable log-bucket
+histogram (p50/p95/p99 for free), and an optional ``TraceRecorder``
+stamps per-request lifecycle events (submit -> route/steal ->
+dispatch -> settle) that ``Response.trace`` opts into. With no recorder
+the hot path does one attribute read and one falsy test — nothing else.
 """
 from __future__ import annotations
 
@@ -82,6 +93,8 @@ from typing import Any, Callable, Optional, Sequence
 import jax
 import jax.numpy as jnp
 
+from repro.observability import MetricsRegistry, NULL_RECORDER, profile_span
+
 Array = jax.Array
 
 POLICIES = ("never", "auto", "always")
@@ -89,13 +102,20 @@ POLICIES = ("never", "auto", "always")
 
 class DrainTimeout(RuntimeError):
     """``drain(timeout=...)`` expired with work still unresolved. Carries
-    the ``stats()`` snapshot taken at expiry (plus the in-flight count) so
-    the caller can see WHAT was stuck — a fleet host-leave logs it and
-    moves on instead of hanging the whole fleet behind one wedged engine."""
+    the ``stats()`` projection taken at expiry, the full registry
+    ``snapshot`` (queue-depth / in-flight gauges included), and the
+    ``spans`` of every traced request that never settled — so a hung
+    drain is diagnosable: a fleet host-leave logs WHAT was stuck and
+    moves on instead of hanging the whole fleet behind one wedged
+    engine."""
 
-    def __init__(self, message: str, stats: dict):
+    def __init__(self, message: str, stats: dict,
+                 snapshot: Optional[dict] = None,
+                 spans: Optional[dict] = None):
         super().__init__(message)
         self.stats = stats
+        self.snapshot = snapshot if snapshot is not None else {}
+        self.spans = spans if spans is not None else {}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -123,6 +143,9 @@ class Request:
     budget: Optional[int] = None
     x0: Optional[Array] = None
     key: Optional[Array] = None
+    # opt-in: resolve the Response with its recorded lifecycle trace
+    # attached (requires the gateway to have a TraceRecorder)
+    trace: bool = False
 
 
 @dataclasses.dataclass
@@ -138,10 +161,14 @@ class Response:
     not just a warning), nfe_batch (backbone forwards the carrying batch
     spent), batch_real / batch_padded (occupancy), mixed (shared-trajectory
     dispatch), wait_ms (queue time).
+
+    ``trace`` is the request's recorded lifecycle (list of event dicts)
+    when ``Request.trace`` was set and the gateway has a recorder.
     """
 
     latents: Array
     meta: dict
+    trace: Optional[list] = None
 
 
 @dataclasses.dataclass
@@ -159,6 +186,7 @@ class _Entry:
     # exit boundary it joined (0 = opened the trajectory)
     t_admit: Optional[float] = None
     join_step: int = 0
+    trace: bool = False   # attach the recorded lifecycle to the Response
 
 
 class RequestQueue:
@@ -323,6 +351,10 @@ class BatchScheduler:
 
 @dataclasses.dataclass
 class GatewayStats:
+    """Legacy counter bundle, kept as a compatibility VIEW: the registry
+    (``GatewayBase.metrics``) is the single source of truth and
+    ``GatewayBase.stats_raw`` reconstructs this dataclass from it."""
+
     submitted: int = 0
     completed: int = 0
     failed: int = 0
@@ -351,6 +383,114 @@ class GatewayStats:
     stolen_out: int = 0        # queued entries migrated OUT of this shard
 
 
+# The ONE shared metric schema every serving tier emits into. Counter
+# names deliberately match the ``GatewayStats`` field names so the
+# legacy view is a field-for-field read; the gauges/histograms are the
+# telemetry the flat counters could not express. ``SolverZoo`` (zoo_*)
+# and ``PageAllocator`` (pages_*/peak_pages) register their names into
+# the same registry when bound to a gateway.
+METRIC_SCHEMA: tuple = (
+    ("submitted", "counter", "requests accepted by submit()"),
+    ("completed", "counter", "requests resolved with a result"),
+    ("failed", "counter", "requests resolved with an exception"),
+    ("batches", "counter", "padded batches dispatched"),
+    ("mixed_batches", "counter", "shared-trajectory mixed-budget batches"),
+    ("forwards", "counter", "backbone forwards spent (batch-level NFE)"),
+    ("real_rows", "counter", "real rows across dispatched batches"),
+    ("padded_rows", "counter", "padded rows across dispatched batches"),
+    ("trajectories", "counter", "anytime trajectories opened"),
+    ("legs", "counter", "boundary-to-boundary trajectory dispatches"),
+    ("joins", "counter", "requests admitted into in-flight work"),
+    ("join_forwards", "counter", "forwards spent computing join prefixes"),
+    ("slot_steps_active", "counter", "occupied slot-steps across legs"),
+    ("slot_steps_total", "counter", "available slot-steps across legs"),
+    ("tokens_out", "counter", "generated tokens delivered to clients"),
+    ("cancelled", "counter", "sequences dropped on a cancelled future"),
+    ("prefill_calls", "counter", "chunked-prefill engine invocations"),
+    ("prefill_tokens", "counter", "prompt tokens consumed by prefill"),
+    ("stolen_in", "counter", "queued entries migrated INTO this shard"),
+    ("stolen_out", "counter", "queued entries migrated OUT of this shard"),
+    ("queue_depth", "gauge", "entries waiting in the intake queue"),
+    ("inflight", "gauge", "entries taken off the queue, unresolved"),
+    ("jit_programs", "gauge", "distinct jit programs dispatched "
+                              "(a climb in steady state = retracing)"),
+    ("wait_ms", "histogram", "queue wait per settled request (ms)"),
+    ("host_assembly_ms", "histogram",
+     "host-side batch assembly + transfer per dispatch (ms)"),
+    ("device_dispatch_ms", "histogram",
+     "device dispatch wall time per batch/leg (ms)"),
+)
+
+
+class GatewayMetrics:
+    """Cached handles into one registry for the shared schema — one
+    attribute read per emission on the hot path, no name lookups."""
+
+    def __init__(self, registry: MetricsRegistry):
+        self.registry = registry
+        for name, kind, help_ in METRIC_SCHEMA:
+            if kind == "counter":
+                m = registry.counter(name, help_)
+            elif kind == "gauge":
+                m = registry.gauge(name, help_)
+            else:
+                m = registry.histogram(name, help_)
+            setattr(self, name, m)
+
+
+def stats_projection(snap: dict, raw_elapsed: float) -> dict:
+    """The legacy flat ``stats()`` dict, derived from a registry
+    snapshot. Every tier — including the fleet-wide MERGE of per-host
+    snapshots — reports through this one function, so keys and derived
+    ratios cannot diverge across the five gateways again."""
+    elapsed = max(raw_elapsed, 1e-9)
+
+    def n(key):
+        return snap.get(key, 0) or 0
+
+    w = snap.get("wait_ms") or {}
+    completed = int(n("completed"))
+    tokens_out = int(n("tokens_out"))
+    slot_total = n("slot_steps_total")
+    return {
+        "queue_depth": int(n("queue_depth")),
+        "inflight": int(n("inflight")),
+        "submitted": int(n("submitted")),
+        "completed": completed,
+        "failed": int(n("failed")),
+        "batches": int(n("batches")),
+        "mixed_batches": int(n("mixed_batches")),
+        "forwards": int(n("forwards")),
+        "nfe_per_request": n("forwards") / max(completed, 1),
+        "occupancy": n("real_rows") / max(n("padded_rows"), 1),
+        "mean_wait_ms": w.get("sum", 0.0) / max(completed, 1),
+        "max_wait_ms": w.get("max", 0.0),
+        "wait_p50_ms": w.get("p50", 0.0),
+        "wait_p95_ms": w.get("p95", 0.0),
+        "wait_p99_ms": w.get("p99", 0.0),
+        "throughput_rps": completed / elapsed,
+        "jit_programs": int(n("jit_programs")),
+        # continuous batching (all zero under the flush-only gateway)
+        "trajectories": int(n("trajectories")),
+        "legs": int(n("legs")),
+        "joins": int(n("joins")),
+        "join_rate": n("joins") / max(completed, 1),
+        "slot_occupancy": (n("slot_steps_active") / slot_total
+                           if slot_total else 0.0),
+        # decode serving (zero under the flow gateways)
+        "tokens_out": tokens_out,
+        # a zero-elapsed snapshot (frozen fake clock, or stats() in the
+        # same instant as construction) must read 0, not tokens/1e-9
+        "tokens_per_s": (tokens_out / elapsed if raw_elapsed > 0 else 0.0),
+        "cancelled": int(n("cancelled")),
+        "prefill_calls": int(n("prefill_calls")),
+        "prefill_tokens": int(n("prefill_tokens")),
+        # fleet federation (zero outside a FleetGateway)
+        "stolen_in": int(n("stolen_in")),
+        "stolen_out": int(n("stolen_out")),
+    }
+
+
 class GatewayBase:
     """Shared request-queue front-end: thread-safe intake, the serve-thread
     lifecycle, drain, in-flight accounting, and aggregate ``stats()`` — the
@@ -363,19 +503,79 @@ class GatewayBase:
     or fail).
     """
 
-    def __init__(self, clock: Callable[[], float] = time.monotonic):
+    def __init__(self, clock: Callable[[], float] = time.monotonic,
+                 metrics: Optional[MetricsRegistry] = None,
+                 recorder=None):
         self.clock = clock
         self.queue = RequestQueue()
-        self.stats_raw = GatewayStats(started=clock())
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self._m = GatewayMetrics(self.metrics)
+        self.recorder = recorder if recorder is not None else NULL_RECORDER
+        self._host = ""    # fleet host label stamped into trace events
+        self._started = clock()
         self._uid = itertools.count()
         self._plan_lock = threading.Lock()
         self._intake_lock = threading.Lock()   # closed-check + push atomic
-        self._stats_lock = threading.Lock()    # drain + serve thread both run
-        #                                        _execute; '+=' is not atomic
+        # the registry RLock IS the stats lock: a block of handle updates
+        # is one atomic multi-metric transaction, and snapshot() sees a
+        # consistent cut (drain + serve thread both execute; '+=' on the
+        # handles is not atomic without it)
+        self._stats_lock = self.metrics.lock
         self._inflight = 0   # entries off the queue, futures still unresolved
+        self._programs: set = set()   # distinct jit programs dispatched
+        # lazy gauges: queue depth / in-flight already live on the
+        # gateway; the registry reads them at snapshot time instead of
+        # double-booking every transition
+        self._m.queue_depth.set_fn(self.queue.depth)
+        self._m.inflight.set_fn(lambda: self._inflight)
         self._closed = False
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
+
+    @property
+    def stats_raw(self) -> GatewayStats:
+        """Compatibility view: the legacy counter dataclass reconstructed
+        from the registry under its lock (one consistent cut)."""
+        m = self._m
+        with self._stats_lock:
+            return GatewayStats(
+                submitted=m.submitted.value,
+                completed=m.completed.value,
+                failed=m.failed.value,
+                batches=m.batches.value,
+                mixed_batches=m.mixed_batches.value,
+                forwards=m.forwards.value,
+                real_rows=m.real_rows.value,
+                padded_rows=m.padded_rows.value,
+                sum_wait_ms=m.wait_ms.sum,
+                max_wait_ms=m.wait_ms.max,
+                started=self._started,
+                trajectories=m.trajectories.value,
+                legs=m.legs.value,
+                joins=m.joins.value,
+                join_forwards=m.join_forwards.value,
+                slot_steps_active=m.slot_steps_active.value,
+                slot_steps_total=m.slot_steps_total.value,
+                tokens_out=m.tokens_out.value,
+                cancelled=m.cancelled.value,
+                prefill_calls=m.prefill_calls.value,
+                prefill_tokens=m.prefill_tokens.value,
+                stolen_in=m.stolen_in.value,
+                stolen_out=m.stolen_out.value,
+            )
+
+    def _note_program(self, program: str) -> None:
+        """Per-dispatch program accounting (caller holds ``_stats_lock``):
+        one labelled ``dispatches`` tick, and the ``jit_programs`` gauge
+        tracks the distinct (budget, bucket) programs seen — the count
+        plateaus once every program is compiled, so a climb in steady
+        state is the retrace/recompile signal."""
+        if program not in self._programs:
+            self._programs.add(program)
+            self._m.jit_programs.set(len(self._programs))
+        self.metrics.counter("dispatches",
+                             "dispatches per compiled jit program",
+                             labels={"program": program}).inc()
 
     # -- intake ---------------------------------------------------------------
 
@@ -389,9 +589,15 @@ class GatewayBase:
         with self._intake_lock:
             if self._closed:
                 raise RuntimeError("gateway is draining; no new requests")
-            with self._stats_lock:
-                self.stats_raw.submitted += 1
+            self._m.submitted.inc()
+            # the Future carries the uid so callers holding only the
+            # future (FleetGateway.submit, trace consumers) can stamp /
+            # look up events without the private entry
+            entry.future.uid = entry.uid
             self.queue.push(entry)
+        rec = self.recorder
+        if rec:
+            rec.event(entry.uid, "submit", entry.t_submit, host=self._host)
         return entry.future
 
     # -- in-flight accounting -------------------------------------------------
@@ -422,18 +628,24 @@ class GatewayBase:
         client already cancelled rejects ``set_exception``; that must not
         keep the failure from reaching its batch-mates."""
         failed = 0
+        rec = self.recorder
+        now = self.clock()
         for e in entries:
             try:
                 e.future.set_exception(exc)
                 failed += 1
             except Exception:       # cancelled/raced future: nothing to do
                 failed += int(count_all)
-        with self._stats_lock:
-            self.stats_raw.failed += failed
+            if rec:
+                rec.event(e.uid, "settle", now, host=self._host,
+                          status="failed")
+        if failed:
+            self._m.failed.inc(failed)
 
     # -- fleet federation hooks (repro.serving.fleet) ------------------------
 
-    def federate(self, uid_counter, base_key: Optional[Array] = None) -> None:
+    def federate(self, uid_counter, base_key: Optional[Array] = None, *,
+                 recorder=None, host: Optional[str] = None) -> None:
         """Adopt a fleet-shared uid namespace (and base PRNG key).
 
         Entries migrated between shard queues are identified by uid alone
@@ -442,10 +654,18 @@ class GatewayBase:
         the base key keeps the no-x0/no-key noise path bit-identical to a
         single gateway: the folded key depends on the fleet-wide submission
         index, which the shared counter makes exactly the index a lone
-        gateway would have used. Call before any traffic is submitted."""
+        gateway would have used. Call before any traffic is submitted.
+
+        ``recorder``/``host`` wire fleet-wide tracing: every host stamps
+        events into the fleet's ONE recorder, labelled with its host
+        name, so a stolen request's hops interleave in one ring."""
         self._uid = uid_counter
         if base_key is not None and hasattr(self, "_base_key"):
             self._base_key = base_key
+        if recorder is not None:
+            self.recorder = recorder
+        if host is not None:
+            self._host = host
 
     def load(self) -> HostLoad:
         """Load snapshot for fleet routing/stealing decisions."""
@@ -465,8 +685,12 @@ class GatewayBase:
             taken = pending if max_n is None else pending[:max_n]
             self.queue.remove({e.uid for e in taken})
         if taken:
-            with self._stats_lock:
-                self.stats_raw.stolen_out += len(taken)
+            self._m.stolen_out.inc(len(taken))
+            rec = self.recorder
+            if rec:
+                now = self.clock()
+                for e in taken:
+                    rec.event(e.uid, "steal", now, host=self._host)
         return taken
 
     def inject(self, entries: Sequence) -> None:
@@ -479,10 +703,14 @@ class GatewayBase:
             if self._closed:
                 raise RuntimeError(
                     "gateway is draining; cannot accept migrated entries")
-            with self._stats_lock:
-                self.stats_raw.stolen_in += len(entries)
+            self._m.stolen_in.inc(len(entries))
             for e in entries:
                 self.queue.push(e)
+        rec = self.recorder
+        if rec:
+            now = self.clock()
+            for e in entries:
+                rec.event(e.uid, "inject", now, host=self._host)
 
     # -- scheduling -----------------------------------------------------------
 
@@ -535,15 +763,17 @@ class GatewayBase:
                     else time.monotonic() + max(timeout, 0.0))
         while not self._drained():
             if deadline is not None and time.monotonic() >= deadline:
-                with self._stats_lock:
-                    inflight = self._inflight
-                snap = self.stats()
+                registry = self.metrics.snapshot()
+                snap = stats_projection(registry,
+                                        self.clock() - self._started)
+                rec = self.recorder
                 raise DrainTimeout(
                     f"drain timed out after {timeout:g}s: "
                     f"queue_depth={snap['queue_depth']} "
-                    f"inflight={inflight} "
+                    f"inflight={snap['inflight']} "
                     f"completed={snap['completed']}/{snap['submitted']}",
-                    snap)
+                    snap, snapshot=registry,
+                    spans=rec.open_spans() if rec else {})
             if self.pump(force=True) == 0:
                 time.sleep(5e-4)       # a concurrent pump holds the work
 
@@ -560,46 +790,19 @@ class GatewayBase:
     # -- metrics --------------------------------------------------------------
 
     def stats(self) -> dict[str, Any]:
-        """Aggregate serving metrics as one flat dict. The counters are
-        SNAPSHOT under ``_stats_lock`` (they mutate from both the serve
-        thread and drain), so derived ratios are internally consistent."""
-        with self._stats_lock:
-            s = dataclasses.replace(self.stats_raw)
-        raw_elapsed = self.clock() - s.started
-        elapsed = max(raw_elapsed, 1e-9)
-        return {
-            "queue_depth": self.queue.depth(),
-            "submitted": s.submitted,
-            "completed": s.completed,
-            "failed": s.failed,
-            "batches": s.batches,
-            "mixed_batches": s.mixed_batches,
-            "forwards": s.forwards,
-            "nfe_per_request": s.forwards / max(s.completed, 1),
-            "occupancy": s.real_rows / max(s.padded_rows, 1),
-            "mean_wait_ms": s.sum_wait_ms / max(s.completed, 1),
-            "max_wait_ms": s.max_wait_ms,
-            "throughput_rps": s.completed / elapsed,
-            # continuous batching (all zero under the flush-only gateway)
-            "trajectories": s.trajectories,
-            "legs": s.legs,
-            "joins": s.joins,
-            "join_rate": s.joins / max(s.completed, 1),
-            "slot_occupancy": (s.slot_steps_active / s.slot_steps_total
-                               if s.slot_steps_total else 0.0),
-            # decode serving (zero under the flow gateways)
-            "tokens_out": s.tokens_out,
-            # a zero-elapsed snapshot (frozen fake clock, or stats() in the
-            # same instant as construction) must read 0, not tokens/1e-9
-            "tokens_per_s": (s.tokens_out / elapsed if raw_elapsed > 0
-                             else 0.0),
-            "cancelled": s.cancelled,
-            "prefill_calls": s.prefill_calls,
-            "prefill_tokens": s.prefill_tokens,
-            # fleet federation (zero outside a FleetGateway)
-            "stolen_in": s.stolen_in,
-            "stolen_out": s.stolen_out,
-        }
+        """Aggregate serving metrics as one flat dict: the compatibility
+        projection of a registry snapshot (the snapshot is one consistent
+        cut under the registry lock, so derived ratios are internally
+        consistent — completed never exceeds submitted, the wait
+        histogram count equals completed)."""
+        return stats_projection(self.metrics.snapshot(),
+                                self.clock() - self._started)
+
+    def metrics_snapshot(self) -> dict:
+        """Raw registry snapshot — the export surface (Prometheus/JSON).
+        ``FleetGateway`` overrides this with the merge of its hosts'
+        snapshots; everything below it reports its own registry."""
+        return self.metrics.snapshot()
 
 
 class Gateway(GatewayBase):
@@ -618,8 +821,9 @@ class Gateway(GatewayBase):
                  max_wait_ms: float = 10.0,
                  mixed_budget_policy: str = "auto", strict_nfe: bool = False,
                  mesh=None, clock: Callable[[], float] = time.monotonic,
-                 key: Optional[Array] = None):
-        super().__init__(clock=clock)
+                 key: Optional[Array] = None,
+                 metrics: Optional[MetricsRegistry] = None, recorder=None):
+        super().__init__(clock=clock, metrics=metrics, recorder=recorder)
         self.sampler = sampler
         can_mix = (hasattr(sampler, "sample_all_from")
                    and len(sampler.budgets) > 1)
@@ -683,7 +887,7 @@ class Gateway(GatewayBase):
         entry = _Entry(uid=uid, tokens=request.tokens, x0=x0,
                        requested=requested, served=served,
                        shape_key=shape_key, t_submit=self.clock(),
-                       future=Future())
+                       future=Future(), trace=request.trace)
         return self._enqueue(entry)
 
     # -- scheduling / execution --------------------------------------------
@@ -719,41 +923,56 @@ class Gateway(GatewayBase):
         es = batch.entries
         dispatched = self.clock()   # wait_ms is QUEUE time, ending here —
         #                             not device/compile time
+        program = (f"b{'mix' if batch.mixed else batch.budget}"
+                   f"/k{batch.bucket}")
         try:
             # assemble on host: ONE device transfer per batch, not one eager
             # stack/slice op per request (those dominate at small budgets)
+            t0 = time.perf_counter()
             x0_np, t_np = assemble_rows(es, batch.bucket)
             x0 = jnp.asarray(x0_np)
             cond = None if t_np is None else {"tokens": jnp.asarray(t_np)}
             if self._place is not None:
                 cond, x0 = self._place(cond, x0)
-            if batch.mixed:
-                outs = self.sampler.sample_all_from(cond, x0)
-                nfe = max(self.sampler.budgets)
-                host = {m: np.asarray(outs[m]) for m in {e.served for e in es}}
-                rows = [host[e.served][i] for i, e in enumerate(es)]
-            else:
-                lat = np.asarray(
-                    self.sampler.sample_from(cond, x0, batch.budget))
-                nfe = batch.budget
-                rows = [lat[i] for i in range(len(es))]
+            t1 = time.perf_counter()
+            with profile_span(f"gateway.dispatch.{program}"):
+                if batch.mixed:
+                    outs = self.sampler.sample_all_from(cond, x0)
+                    nfe = max(self.sampler.budgets)
+                    host = {m: np.asarray(outs[m])
+                            for m in {e.served for e in es}}
+                    rows = [host[e.served][i] for i, e in enumerate(es)]
+                else:
+                    lat = np.asarray(
+                        self.sampler.sample_from(cond, x0, batch.budget))
+                    nfe = batch.budget
+                    rows = [lat[i] for i in range(len(es))]
+            t2 = time.perf_counter()
         except Exception as exc:
             self._fail_entries(es, exc, count_all=True)
             return
-        s = self.stats_raw
         with self._stats_lock:
-            s.batches += 1
-            s.mixed_batches += int(batch.mixed)
-            s.forwards += nfe
-            s.real_rows += len(es)
-            s.padded_rows += batch.bucket
+            m = self._m
+            m.batches.inc()
+            if batch.mixed:
+                m.mixed_batches.inc()
+            m.forwards.inc(nfe)
+            m.real_rows.inc(len(es))
+            m.padded_rows.inc(batch.bucket)
+            m.host_assembly_ms.observe((t1 - t0) * 1e3)
+            m.device_dispatch_ms.observe((t2 - t1) * 1e3)
+            self._note_program(program)
             for e in es:
-                wait_ms = (dispatched - e.t_submit) * 1e3
-                s.sum_wait_ms += wait_ms
-                s.max_wait_ms = max(s.max_wait_ms, wait_ms)
-                s.completed += 1
+                m.wait_ms.observe((dispatched - e.t_submit) * 1e3)
+                m.completed.inc()
+        rec = self.recorder
         for e, row in zip(es, rows):
             wait_ms = (dispatched - e.t_submit) * 1e3
+            if rec:
+                rec.event(e.uid, "dispatch", dispatched, host=self._host,
+                          program=program)
+                rec.event(e.uid, "settle", dispatched, host=self._host,
+                          status="completed")
             response = Response(latents=row, meta={
                 "requested_budget": e.requested,
                 "served_budget": e.served,
@@ -763,6 +982,8 @@ class Gateway(GatewayBase):
                 "mixed": batch.mixed,
                 "wait_ms": wait_ms,
             })
+            if e.trace and rec:
+                response.trace = rec.trace(e.uid)
             try:
                 e.future.set_result(response)
             except Exception:   # cancelled mid-batch: batch-mates still land

@@ -28,12 +28,16 @@ import os
 from collections import OrderedDict
 from typing import Callable, Optional
 
+from repro.observability import MetricsRegistry
 from repro.solvers.artifact import FORMAT, SolverArtifact
 from repro.solvers.spec import SolverSpec
 
 
 @dataclasses.dataclass
 class ZooStats:
+    """Legacy counter bundle — a compatibility VIEW over the zoo's
+    registry counters (``zoo_hits``/``zoo_misses``/...), not the store."""
+
     hits: int = 0          # served from memory
     loads: int = 0         # served from a scanned artifact file
     distills: int = 0      # distilled on miss
@@ -47,17 +51,42 @@ class SolverZoo:
 
     def __init__(self, capacity: int = 8, *,
                  distill_fn: Optional[Callable[[SolverSpec], SolverArtifact]] = None,
-                 scan_dirs=(), save_dir: Optional[str] = None):
+                 scan_dirs=(), save_dir: Optional[str] = None,
+                 metrics: Optional[MetricsRegistry] = None):
         if capacity < 1:
             raise ValueError("capacity must be >= 1")
         self.capacity = capacity
         self.distill_fn = distill_fn
         self.save_dir = save_dir
-        self.stats = ZooStats()
+        # counters live in the (possibly gateway-shared) registry so the
+        # cache contract shows up in the same export as serving metrics
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self._m_hits = self.metrics.counter(
+            "zoo_hits", "artifacts served from memory")
+        self._m_loads = self.metrics.counter(
+            "zoo_loads", "artifacts served from a scanned file")
+        self._m_distills = self.metrics.counter(
+            "zoo_distills", "artifacts distilled on miss")
+        self._m_misses = self.metrics.counter(
+            "zoo_misses", "gets not served from memory (loads + distills)")
+        self._m_evictions = self.metrics.counter(
+            "zoo_evictions", "LRU evictions past capacity")
+        self._m_spills = self.metrics.counter(
+            "zoo_spills", "evicted artifacts saved to save_dir, not dropped")
         self._cache: "OrderedDict[SolverSpec, SolverArtifact]" = OrderedDict()
         self._paths: dict[SolverSpec, str] = {}
         for d in scan_dirs:
             self.scan(d)
+
+    @property
+    def stats(self) -> ZooStats:
+        """The legacy ``ZooStats`` view, built from the registry counters."""
+        return ZooStats(hits=int(self._m_hits.value),
+                        loads=int(self._m_loads.value),
+                        distills=int(self._m_distills.value),
+                        misses=int(self._m_misses.value),
+                        evictions=int(self._m_evictions.value),
+                        spills=int(self._m_spills.value))
 
     # -- disk index ---------------------------------------------------------
 
@@ -118,12 +147,12 @@ class SolverZoo:
         self._cache[spec] = artifact
         while len(self._cache) > self.capacity:
             spec_e, art_e = self._cache.popitem(last=False)
-            self.stats.evictions += 1
+            self._m_evictions.inc()
             if self.save_dir is not None and spec_e not in self._paths:
                 path = os.path.join(self.save_dir, self._filename(spec_e))
                 art_e.save(path)
                 self._paths[spec_e] = path
-                self.stats.spills += 1
+                self._m_spills.inc()
         return artifact
 
     def preload(self, specs, *, field=None, train_pairs=None, val_pairs=None,
@@ -155,15 +184,15 @@ class SolverZoo:
         """
         art = self._cache.get(spec)
         if art is not None:
-            self.stats.hits += 1
+            self._m_hits.inc()
             self._cache.move_to_end(spec)
             return art
-        self.stats.misses += 1
+        self._m_misses.inc()
         path = self._paths.get(spec)
         if path is not None and os.path.exists(path):
             art = SolverArtifact.load(path)
             if art.spec == spec:
-                self.stats.loads += 1
+                self._m_loads.inc()
                 if log:
                     log(f"zoo: loaded {spec.mode}/{spec.name} from {path}")
                 art = self.put(art)
@@ -196,10 +225,10 @@ class SolverZoo:
     def _distill(self, spec, field, train_pairs, val_pairs, train_cfg,
                  log) -> SolverArtifact:
         if self.distill_fn is not None:
-            self.stats.distills += 1
+            self._m_distills.inc()
             art = self.distill_fn(spec)
         elif field is not None:
-            self.stats.distills += 1
+            self._m_distills.inc()
             art = spec.distill(field, train_pairs, val_pairs, train_cfg,
                                log=log).artifact()
         else:

@@ -85,7 +85,8 @@ def test_flow_mode_gateway_coalesces_requests(anytime_artifact):
                "--batch", "2", "--seq", "4")
     assert res.returncode == 0, res.stderr
     out = res.stdout
-    assert "gateway stats: completed=4 batches=2" in out
+    assert "gateway stats: done=4/4" in out
+    assert "batches=2" in out
     assert "request 0: served 2 NFE" in out
     assert "request 1: served 4 NFE" in out
     assert "batch 2/2" in out                    # full bucket, no padding
@@ -112,7 +113,7 @@ def test_flow_mode_gateway_mesh_host(anytime_artifact):
                "--request-budgets", "2", "--requests", "2",
                "--batch", "2", "--seq", "4")
     assert res.returncode == 0, res.stderr
-    assert "gateway stats: completed=2" in res.stdout
+    assert "gateway stats: done=2/2" in res.stdout
 
 
 def test_flow_mode_fleet_gateway(anytime_artifact):
@@ -125,8 +126,8 @@ def test_flow_mode_fleet_gateway(anytime_artifact):
                "--batch", "2", "--seq", "4")
     assert res.returncode == 0, res.stderr
     out = res.stdout
-    assert "gateway stats: completed=4" in out
-    assert "fleet stats: hosts=2" in out
+    assert "gateway stats: done=4/4" in out
+    assert "fleet hosts=2" in out
     assert "routed:" in out
 
 
@@ -141,9 +142,8 @@ def test_flow_mode_continuous_gateway(anytime_artifact):
                "--batch", "2", "--seq", "4")
     assert res.returncode == 0, res.stderr
     out = res.stdout
-    assert "gateway stats: completed=4" in out
-    assert "continuous stats:" in out
-    assert "trajectories=" in out and "slot_occupancy=" in out
+    assert "gateway stats: done=4/4" in out
+    assert "traj=" in out and "slot_occ=" in out
 
 
 def test_decode_mode_smoke():
@@ -164,7 +164,7 @@ def test_decode_mode_gateway_continuous_batching():
     assert res.returncode == 0, res.stderr
     out = res.stdout
     assert out.count("request ") == 5
-    assert "decode gateway stats: completed=5" in out
-    assert "slot_occupancy=" in out and "tokens/s=" in out
+    assert "decode gateway stats: done=5/5" in out
+    assert "slot_occ=" in out and "tok/s=" in out
     # a freed slot was refilled mid-flight at least once
     assert "joins=0" not in out
