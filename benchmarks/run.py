@@ -12,6 +12,8 @@
                          run-to-completion batching (wall-steps)
   fleet_bench          — fleet federation: work stealing vs static
                          affinity routing (p95 wait, parallel hosts)
+  overload_bench       — SLO scheduling vs FIFO under sustained overload
+                         (goodput, deadline-hit-rate, forwards)
   roofline             — §Roofline terms from the dry-run artifacts
 
 Prints ``name,us_per_call,derived`` CSV lines; paper-claim PASS/FAIL notes go
@@ -20,7 +22,7 @@ to log lines prefixed with '#'.
 Regression gating (CI bench-regression job):
 
   python benchmarks/run.py --quick \\
-      --only gateway,kernel,continuous,decode,fleet \\
+      --only gateway,kernel,continuous,decode,fleet,overload \\
       --json-dir bench-fresh --check-against benchmarks/baselines
 
 runs just the gated benches, writes their fresh summary JSONs, and exits
@@ -218,6 +220,23 @@ def _fleet(quick, csv, summaries):
                           "registry": registry}
 
 
+@_timed("overload_bench")
+def _overload(quick, csv, summaries):
+    from benchmarks import overload_bench
+    rows = overload_bench.run(requests=720 if quick else 1200, log=log)
+    notes = overload_bench.check_claims(rows)
+    for note in notes:
+        log(note)
+    for r in rows:
+        csv.append((f"overload/{r['scenario']}", float(r["slo_goodput"]),
+                    f"goodput_ratio={r['goodput_ratio']:.2f};"
+                    f"hit_rate={r['slo_hit_rate']:.3f};"
+                    f"forwards_ratio={r['forwards_ratio']:.3f}"))
+    summaries["overload"] = {"bench": "overload", "rows": rows,
+                             "claims": notes,
+                             "metrics": overload_bench.metrics(rows)}
+
+
 def _roofline(quick, csv, summaries):
     try:
         import os
@@ -255,6 +274,7 @@ SECTIONS = {
     "continuous": _continuous,
     "decode": _decode,
     "fleet": _fleet,
+    "overload": _overload,
     "roofline": _roofline,
 }
 

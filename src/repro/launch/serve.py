@@ -34,6 +34,16 @@ the Pallas ns_update kernel. --fleet N federates N per-host gateways behind
 one ``repro.serving.fleet.FleetGateway`` (sharded request queue, affinity
 routing, work stealing) — the summary adds a fleet stats line.
 
+--slo attaches an ``SLOConfig`` to every gateway tier: --deadline-ms /
+--priority stamp each request, infeasible submits fast-reject at the door
+(``AdmissionRejected``), queued requests past their deadline are shed
+(``DeadlineExceeded``), planning is urgency-ordered, and the continuous
+tier preempts strictly-lower-priority slots at anytime exit boundaries.
+--stream switches submits to ``submit_stream`` (per-exit-boundary partials
+for flow, per-token chunks for decode; the terminal result is bit-identical
+to the plain submit). --profile tuned re-executes once under the serving
+XLA flag set with tcmalloc preloaded (see ``repro.launch.profile``).
+
 Every gateway mode shares one telemetry plane (``repro.observability``):
 --metrics-port serves live Prometheus text + JSON registry snapshots,
 --stats-interval N prints a periodic one-line summary through the SAME
@@ -77,9 +87,12 @@ from repro.observability import (
     format_stats_line,
 )
 from repro.serving import (
+    AdmissionRejected,
     AnytimeFlowSampler,
+    DeadlineExceeded,
     DecodeEngine,
     FlowSampler,
+    SLOConfig,
     SolverZoo,
     greedy_demo,
 )
@@ -262,6 +275,7 @@ def _serve_gateway(args, sampler, cond, request_budgets) -> None:
     from repro.serving.sharded import serving_mesh
 
     recorder = TraceRecorder() if args.trace_jsonl else None
+    slo = SLOConfig() if args.slo else None
 
     def make_host(rec=None):
         # the solver artifact is tiny, so every fleet host serves the SAME
@@ -272,12 +286,12 @@ def _serve_gateway(args, sampler, cond, request_budgets) -> None:
                 max_wait_ms=args.max_wait_ms,
                 mixed_budget_policy=args.mixed_budget_policy,
                 strict_nfe=args.strict_nfe, mesh=serving_mesh(args.mesh),
-                recorder=rec)
+                recorder=rec, slo=slo)
         return Gateway(sampler, max_batch=args.max_batch,
                        max_wait_ms=args.max_wait_ms,
                        mixed_budget_policy=args.mixed_budget_policy,
                        strict_nfe=args.strict_nfe, mesh=serving_mesh(args.mesh),
-                       recorder=rec)
+                       recorder=rec, slo=slo)
 
     if args.fleet > 1:
         # hosts get the recorder through federate() so every hop carries
@@ -292,20 +306,38 @@ def _serve_gateway(args, sampler, cond, request_budgets) -> None:
     for req in range(args.requests):
         nfe = request_budgets[req % len(request_budgets)]
         row = cond["tokens"][req % cond["tokens"].shape[0]]
+        kw = dict(tokens=row, budget=nfe, key=jax.random.PRNGKey(1000 + req),
+                  deadline_ms=args.deadline_ms, priority=args.priority)
         try:
-            futures.append(gw.submit(Request(
-                tokens=row, budget=nfe, key=jax.random.PRNGKey(1000 + req))))
+            futures.append(gw.submit_stream(**kw) if args.stream
+                           else gw.submit(Request(**kw)))
+        except AdmissionRejected as e:
+            print(f"request {req}: REJECTED at admission ({e})")
+            futures.append(None)
         except ValueError as e:
             raise SystemExit(f"--strict-nfe: {e}")
     gw.shutdown()
     for i, fut in enumerate(futures):
-        meta = fut.result().meta
+        if fut is None:
+            continue
+        try:
+            partials = 0
+            if args.stream:
+                chunks = fut.chunks(timeout=60.0)
+                partials = sum(1 for c in chunks if not c.final)
+                meta = chunks[-1].payload.meta
+            else:
+                meta = fut.result().meta
+        except DeadlineExceeded:
+            print(f"request {i}: SHED (deadline exceeded in queue)")
+            continue
         drift = ("" if meta["requested_budget"] == meta["served_budget"]
                  else f" (requested {meta['requested_budget']})")
         print(f"request {i}: served {meta['served_budget']} NFE{drift}, "
               f"wait {meta['wait_ms']:.1f} ms, "
               f"batch {meta['batch_real']}/{meta['batch_padded']}"
-              + (" [mixed]" if meta["mixed"] else ""))
+              + (" [mixed]" if meta["mixed"] else "")
+              + (f", {partials} streamed partials" if args.stream else ""))
     for fn in stop_telemetry:
         fn()
     print(format_stats_line(gw.stats(), prefix="gateway stats"))
@@ -343,21 +375,41 @@ def _serve_decode_gateway(args, engine, cfg) -> None:
                        cache_slots=args.slots,
                        prefill_chunk=args.prefill_chunk,
                        key=jax.random.PRNGKey(args.seed),
-                       recorder=recorder)
+                       recorder=recorder,
+                       slo=SLOConfig() if args.slo else None)
     gw.start()
     stop_telemetry = _start_telemetry(args, gw, "decode gateway stats")
     futures = []
     for req in range(args.requests):
         prompt = [(3 * req + 1) % cfg.vocab, (5 * req + 2) % cfg.vocab]
-        futures.append(gw.submit(DecodeRequest(
-            prompt=prompt, max_tokens=lengths[req % len(lengths)],
-            sampling=sampling)))
+        kw = dict(prompt=prompt, max_tokens=lengths[req % len(lengths)],
+                  sampling=sampling, deadline_ms=args.deadline_ms,
+                  priority=args.priority)
+        try:
+            futures.append(gw.submit_stream(**kw) if args.stream
+                           else gw.submit(DecodeRequest(**kw)))
+        except AdmissionRejected as e:
+            print(f"request {req}: REJECTED at admission ({e})")
+            futures.append(None)
     gw.shutdown()
     for i, fut in enumerate(futures):
-        meta = fut.result().meta
+        if fut is None:
+            continue
+        try:
+            streamed = 0
+            if args.stream:
+                chunks = fut.chunks(timeout=60.0)
+                streamed = sum(1 for c in chunks if not c.final)
+                meta = chunks[-1].payload.meta
+            else:
+                meta = fut.result().meta
+        except DeadlineExceeded:
+            print(f"request {i}: SHED (deadline exceeded in queue)")
+            continue
         print(f"request {i}: {meta['new_tokens']} tokens "
               f"({meta['finish_reason']}), wait {meta['wait_ms']:.1f} ms, "
-              f"slot {meta['slot']}, join_step {meta['join_step']}")
+              f"slot {meta['slot']}, join_step {meta['join_step']}"
+              + (f", {streamed} streamed tokens" if args.stream else ""))
     for fn in stop_telemetry:
         fn()
     print(format_stats_line(gw.stats(), prefix="decode gateway stats"))
@@ -374,7 +426,10 @@ def _budget_list(text: str) -> tuple[int, ...]:
     return budgets
 
 
-def main() -> None:
+def build_parser() -> argparse.ArgumentParser:
+    """The full serve.py CLI. A separate builder so tests (and the docs
+    drift guard in ``tests/test_docs.py``) can enumerate every flag
+    without running the launcher."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--mode", choices=["flow", "decode"], default="flow")
@@ -471,6 +526,34 @@ def main() -> None:
                     help="gateway modes: record per-request lifecycle "
                          "spans (submit/route/steal/dispatch/settle) and "
                          "export them to this JSONL file")
+    ap.add_argument("--slo", action="store_true",
+                    help="gateway modes: attach an SLOConfig — fast-reject "
+                         "admission control, deadline shedding, urgency-"
+                         "ordered planning, and (continuous tier) exit-"
+                         "boundary preemption; rejected/shed requests are "
+                         "reported per request, not raised")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="gateway modes: per-request deadline in ms from "
+                         "submit; always recorded as goodput vs "
+                         "deadline_misses at settle, ENFORCED (admission "
+                         "+ shedding) when --slo is set")
+    ap.add_argument("--priority", type=int, default=0,
+                    help="gateway modes: request priority (higher wins; "
+                         "with --slo on the continuous tier, strictly "
+                         "higher priority preempts lower at anytime exit "
+                         "boundaries)")
+    ap.add_argument("--stream", action="store_true",
+                    help="gateway modes: submit via submit_stream and "
+                         "report streamed increments — per-exit-boundary "
+                         "partial latents (flow) or per-token chunks "
+                         "(decode); the terminal result is bit-identical "
+                         "to the plain submit")
+    ap.add_argument("--profile", default="default",
+                    choices=["default", "tuned"],
+                    help="launch profile: 'tuned' re-execs once with the "
+                         "serving XLA flag set merged into XLA_FLAGS and "
+                         "tcmalloc preloaded when present (see "
+                         "repro.launch.profile)")
     ap.add_argument("--cfg-scale", type=float, default=0.0)
     ap.add_argument("--bns-iters", type=int, default=300)
     ap.add_argument("--batch", type=int, default=8)
@@ -480,7 +563,14 @@ def main() -> None:
     ap.add_argument("--window", type=int, default=0)
     ap.add_argument("--requests", type=int, default=3)
     ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
+    return ap
+
+
+def main() -> None:
+    args = build_parser().parse_args()
+    if args.profile != "default":
+        from repro.launch.profile import maybe_reexec
+        maybe_reexec(args.profile)
     (serve_flow if args.mode == "flow" else serve_decode)(args)
 
 

@@ -45,6 +45,21 @@ concurrency it can absorb:
    shares one uid namespace + base key, so every sample stays
    bit-identical to the single-gateway path.
 
+Cutting across all five layers sits the **SLO plane** (``slo`` +
+``stream``): attaching an ``SLOConfig`` to any gateway adds per-request
+deadlines/priorities (``deadline_ms``/``priority`` on both request
+types), fast-reject admission control (``AdmissionRejected``, modeled
+from the registry's own dispatch-time histograms), queue shedding
+(``DeadlineExceeded``), urgency-ordered planning, and — continuous tier
+only — preemption of strictly-lower-priority slots at anytime exit
+boundaries (the victim resumes from its saved carry, bit-identical).
+``submit_stream`` yields per-exit-boundary partials (flow) or per-token
+chunks (decode) and terminates with the exact settled response. With
+``slo=None`` (default) every planner degenerates to the legacy FIFO
+behavior byte-for-byte. See ``docs/ARCHITECTURE.md`` for the full
+walkthrough and ``benchmarks/overload_bench.py`` for the
+goodput-under-overload gate.
+
 Cutting across all five layers sits the **observability** plane
 (``repro.observability``): every tier emits into ONE ``MetricsRegistry``
 schema owned by ``GatewayBase`` (each ``stats()`` dict is a projection
@@ -80,6 +95,10 @@ Metric schema (name — type — labels — emitting tiers):
 ``prefill_tokens``      counter   —            decode
 ``stolen_in``           counter   —            any federated gateway
 ``stolen_out``          counter   —            any federated gateway
+``rejected``            counter   —            all gateways (SLO)
+``preemptions``         counter   —            continuous (SLO)
+``deadline_misses``     counter   —            all gateways (SLO)
+``goodput``             counter   —            all gateways (SLO)
 ``steals``              counter   —            fleet (stealer)
 ``steal_rounds``        counter   —            fleet (stealer)
 ``rerouted``            counter   —            fleet (host leave)
@@ -124,6 +143,11 @@ Module map:
               federation, sharded request queue, affinity routing, work
               stealing, graceful host join/leave (emulated-host CI via
               ``repro.distributed.emulate``);
+``slo``     — ``SLOConfig``/``AdmissionRejected``/``DeadlineExceeded``/
+              ``urgency_key``/``PausedCarry``: the pure SLO policy layer
+              (deadlines, priorities, admission, shedding, preemption);
+``stream``  — ``StreamSink``/``ResponseStream``/``StreamChunk``:
+              incremental results riding the existing settle path;
 ``sharded`` — mesh placement for gateway batches (params via
               ``distributed.sharding``, batches split along the data axes);
 ``toy``     — protocol-complete toy sampler/engine for benchmarks + tests.
@@ -157,13 +181,23 @@ from repro.serving.gateway import (
     RequestQueue,
     Response,
 )
+from repro.serving.slo import (
+    AdmissionRejected,
+    DeadlineExceeded,
+    PausedCarry,
+    SLOConfig,
+    urgency_key,
+)
+from repro.serving.stream import ResponseStream, StreamChunk, StreamSink
 from repro.serving.zoo import SolverZoo, ZooStats
 
-__all__ = ["AnytimeFlowSampler", "BatchScheduler", "ContinuousGateway",
-           "ContinuousScheduler", "DecodeEngine", "DecodeGateway",
-           "DecodeRequest", "DecodeResponse", "DrainTimeout", "FleetGateway",
-           "FleetRouter", "FlowSampler", "Gateway", "GatewayBase",
-           "GatewayStats", "HostLoad", "PageAllocator", "Request",
-           "RequestQueue", "Response", "SamplingParams", "SolverZoo",
+__all__ = ["AdmissionRejected", "AnytimeFlowSampler", "BatchScheduler",
+           "ContinuousGateway", "ContinuousScheduler", "DeadlineExceeded",
+           "DecodeEngine", "DecodeGateway", "DecodeRequest",
+           "DecodeResponse", "DrainTimeout", "FleetGateway", "FleetRouter",
+           "FlowSampler", "Gateway", "GatewayBase", "GatewayStats",
+           "HostLoad", "PageAllocator", "PausedCarry", "Request",
+           "RequestQueue", "Response", "ResponseStream", "SLOConfig",
+           "SamplingParams", "SolverZoo", "StreamChunk", "StreamSink",
            "WorkStealer", "ZooStats", "greedy_demo", "nearest_budget",
-           "nearest_latent_tokens", "sample_tokens"]
+           "nearest_latent_tokens", "sample_tokens", "urgency_key"]

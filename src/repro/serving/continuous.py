@@ -38,7 +38,6 @@ every join scatter (``sharded.carry_placer``).
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Optional, Sequence
 
 import jax.numpy as jnp
@@ -52,6 +51,7 @@ from repro.serving.gateway import (
     _Entry,
     assemble_rows,
 )
+from repro.serving.slo import PausedCarry, is_urgent, urgency_key
 
 
 class ContinuousScheduler(BatchScheduler):
@@ -70,10 +70,11 @@ class ContinuousScheduler(BatchScheduler):
                  policy: str = "auto", can_mix: bool = False,
                  top_budget: Optional[int] = None,
                  max_leg: Optional[int] = None,
-                 join_cost_cap: float = 0.5):
+                 join_cost_cap: float = 0.5, slo_aware: bool = False):
         super().__init__(max_batch=max_batch or max_slots,
                          max_wait_ms=max_wait_ms, policy=policy,
-                         can_mix=can_mix, top_budget=top_budget)
+                         can_mix=can_mix, top_budget=top_budget,
+                         slo_aware=slo_aware)
         if max_slots < 1:
             raise ValueError("max_slots must be >= 1")
         if max_leg is not None and max_leg < 1:
@@ -117,33 +118,89 @@ class ContinuousScheduler(BatchScheduler):
         singleton park a full (or aged) slate of another shape forever
         (head-of-line blocking across shapes). Mixed-shape traffic now
         starts whichever shape group is ready; the passed-over group stays
-        pending and opens the next trajectory."""
+        pending and opens the next trajectory.
+
+        SLO mode additionally starts as soon as any URGENT entry (deadline
+        or raised priority) is queued: ``plan_start`` only runs when no
+        trajectory is in flight — the device is idle — and unlike a flush,
+        an under-filled trajectory costs nothing extra (its free slots
+        refill at every exit boundary), so holding urgent work for the
+        full-or-aged rule would burn deadline budget for no batching win."""
         groups: dict[tuple, list[_Entry]] = {}
-        for e in sorted(pending, key=lambda e: e.uid):
+        order = urgency_key if self.slo_aware else (lambda e: e.uid)
+        for e in sorted(pending, key=order):
             groups.setdefault(e.shape_key, []).append(e)
         for same in groups.values():     # insertion order = oldest-first
             aged = any(now - e.t_submit >= self.max_wait_s for e in same)
+            if self.slo_aware and not aged:
+                aged = any(is_urgent(e) for e in same)
             if force or aged or len(same) >= self.max_slots:
                 return same[:self.max_slots]
         return []
 
+    @staticmethod
+    def join_cost(e: _Entry, boundary: int) -> int:
+        """Prefix forwards admitting ``e`` at ``boundary`` costs: a fresh
+        join recomputes 0..boundary; a PREEMPTED entry paused at step s <=
+        boundary resumes its saved carry and only pays s..boundary."""
+        p = getattr(e, "paused", None)
+        if p is not None and p.step <= boundary:
+            return boundary - p.step
+        return boundary
+
     def plan_joins(self, pending: Sequence[_Entry], boundary: int,
                    free_slots: int, shape_key: tuple) -> list[_Entry]:
         """Entries admitted into the in-flight trajectory at ``boundary``:
-        FIFO entries of the trajectory's shape whose served budget lies
-        STRICTLY beyond the boundary (their exit is still ahead on the
-        shared grid) and whose prefix is worth paying — the join costs
-        ``boundary`` prefix forwards, so admission requires
-        ``boundary <= join_cost_cap * served`` (default: the prefix may be
-        at most half the budget; very late joins burn forwards a future
-        flush would amortize better). Capped by the freed slots; not
-        age-gated — immediate admission is the latency win."""
+        FIFO entries (urgency-ordered in SLO mode) of the trajectory's
+        shape whose served budget lies STRICTLY beyond the boundary (their
+        exit is still ahead on the shared grid) and whose prefix is worth
+        paying — the join costs ``join_cost`` prefix forwards, so
+        admission requires ``cost <= join_cost_cap * served`` (default:
+        the prefix may be at most half the budget; very late joins burn
+        forwards a future flush would amortize better; a resumed
+        preempted entry's cost is only the saved-step gap). Capped by the
+        freed slots; not age-gated — immediate admission is the latency
+        win."""
         if free_slots <= 0:
             return []
-        ok = [e for e in sorted(pending, key=lambda e: e.uid)
+        order = urgency_key if self.slo_aware else (lambda e: e.uid)
+        ok = [e for e in sorted(pending, key=order)
               if e.shape_key == shape_key and e.served > boundary
-              and boundary <= self.join_cost_cap * e.served]
+              and self.join_cost(e, boundary)
+              <= self.join_cost_cap * e.served]
         return ok[:free_slots]
+
+    def plan_preemptions(self, pending: Sequence[_Entry], boundary: int,
+                         active: Sequence[tuple], free_slots: int,
+                         shape_key: tuple) -> list[tuple]:
+        """Eviction pairs ``(slot_idx, victim, urgent)`` at an exit
+        boundary: each still-queued urgent entry that could join (same
+        conditions as ``plan_joins``) displaces one STRICTLY-lower-
+        priority occupied slot — lowest-priority, youngest victim first.
+        Empty when free slots remain (``plan_joins`` already used them) or
+        nothing queued outranks a resident. Pure planning; eviction is
+        free by construction at an exit boundary (the victim resumes via
+        its saved carry, bit-identical — ``core.anytime``'s join
+        invariant)."""
+        if free_slots > 0 or not pending or not active:
+            return []
+        candidates = [e for e in sorted(pending, key=urgency_key)
+                      if e.shape_key == shape_key and e.served > boundary
+                      and self.join_cost(e, boundary)
+                      <= self.join_cost_cap * e.served]
+        victims = sorted(
+            [(si, v) for si, v in active if v.served > boundary],
+            key=lambda sv: (sv[1].priority, -sv[1].t_submit, -sv[1].uid))
+        pairs = []
+        for e in candidates:
+            if not victims:
+                break
+            si, v = victims[0]
+            if v.priority >= e.priority:
+                break       # victims are sorted; nothing weaker remains
+            victims.pop(0)
+            pairs.append((si, v, e))
+        return pairs
 
 
 @dataclasses.dataclass
@@ -192,7 +249,7 @@ class ContinuousGateway(Gateway):
                  mixed_budget_policy: str = "auto", strict_nfe: bool = False,
                  mesh=None, clock=None, key=None,
                  max_leg: Optional[int] = None, join_cost_cap: float = 0.5,
-                 metrics=None, recorder=None):
+                 metrics=None, recorder=None, slo=None):
         for method in ("carry_start", "carry_extend"):
             if not hasattr(sampler, method):
                 raise TypeError(
@@ -204,14 +261,15 @@ class ContinuousGateway(Gateway):
                          max_wait_ms=max_wait_ms,
                          mixed_budget_policy=mixed_budget_policy,
                          strict_nfe=strict_nfe, mesh=mesh, key=key,
-                         metrics=metrics, recorder=recorder, **kw)
+                         metrics=metrics, recorder=recorder, slo=slo, **kw)
         self.scheduler = ContinuousScheduler(
             max_slots=max_slots, boundaries=sampler.budgets,
             max_batch=max_batch or max_slots, max_wait_ms=max_wait_ms,
             policy=mixed_budget_policy,
             can_mix=self.scheduler.can_mix,
             top_budget=max(sampler.budgets),
-            max_leg=max_leg, join_cost_cap=join_cost_cap)
+            max_leg=max_leg, join_cost_cap=join_cost_cap,
+            slo_aware=slo is not None)
         self._traj: Optional[_Trajectory] = None
         self._place_carry = None
         if mesh is not None:
@@ -226,6 +284,9 @@ class ContinuousGateway(Gateway):
         opens and legs count as one each, like flush batches)."""
         ran = 0
         with self._plan_lock:
+            if self.slo is not None:
+                self._shed_expired()
+                self.scheduler.lead_ms = self._dispatch_cost_ms()
             if self._traj is not None:
                 try:
                     self._advance_leg()
@@ -291,18 +352,26 @@ class ContinuousGateway(Gateway):
         boundary = self.scheduler.next_boundary(step)
         assert boundary is not None, "trajectory ran past the top budget"
         active = traj.active()
-        t0 = time.perf_counter()
+        t0 = self.clock()   # gateway clock: fake-clock benches feed the
+        #                     SLO cost model simulated dispatch times
         with profile_span(f"continuous.leg.{step}-{boundary}"):
             carry, exits = self.sampler.carry_extend(traj.cond(), traj.carry,
                                                      boundary)
-        leg_ms = (time.perf_counter() - t0) * 1e3
+        leg_ms = (self.clock() - t0) * 1e3
         traj.carry = carry
         # a max_leg-clipped stop is a control point, not an exit boundary:
         # nothing releases or joins there, but interleaved flushes can run
         is_exit = boundary in self.scheduler.boundaries
         released = [(si, e) for si, e in active
                     if is_exit and e.served == boundary]
-        latents = np.asarray(exits[boundary]) if released else None
+        # streaming slots riding PAST this exit get the boundary's early-
+        # exit latents as a partial (exactly the budget-`boundary` sample
+        # for their noise — the anytime grid is nested)
+        streaming = [(si, e) for si, e in active
+                     if is_exit and e.sink is not None
+                     and e.served > boundary]
+        latents = (np.asarray(exits[boundary])
+                   if (released or streaming) else None)
         with self._stats_lock:
             m = self._m
             m.legs.inc()
@@ -312,6 +381,8 @@ class ContinuousGateway(Gateway):
                 self.scheduler.max_slots * (boundary - step))
             m.device_dispatch_ms.observe(leg_ms)
             self._note_program(f"leg/{step}-{boundary}")
+        for si, e in streaming:
+            e.sink.partial(latents[si], boundary=boundary)
         for si, e in released:
             self._release(traj, si, e, latents[si], boundary, len(active))
         if is_exit:
@@ -329,6 +400,8 @@ class ContinuousGateway(Gateway):
                     # scatter lands), so the in-flight slots roll on.
                     self._fail_entries(joiners, exc, count_all=True)
                     self._settle(len(joiners))
+            if self.slo is not None and self.slo.preemption:
+                self._preempt(traj, boundary)
         if not traj.active():
             self._traj = None
 
@@ -341,6 +414,7 @@ class ContinuousGateway(Gateway):
             # histogram count == completed invariant holds tier-wide
             self._m.completed.inc()
             self._m.wait_ms.observe(wait_ms)
+            self._note_deadline(e, self.clock())
             self._inflight -= 1      # taken at plan_start/plan_joins
         rec = self.recorder
         if rec:
@@ -364,46 +438,162 @@ class ContinuousGateway(Gateway):
             e.future.set_result(response)
         except Exception:           # cancelled: the trajectory rolls on
             pass
+        if e.sink is not None:
+            e.sink.final(response)
         traj.entries[si] = None
 
     def _admit(self, traj: _Trajectory, joiners: list, boundary: int) -> None:
-        """Join ``joiners`` at ``boundary``: compute each prefix 0..boundary
-        from its own noise on the shared intermediate coefficients (one
-        padded mini-dispatch, ``boundary`` forwards), scatter the prefix
-        carries into the freed slots, and re-place on the mesh if sharded."""
-        k = len(joiners)
-        bucket = self.scheduler.join_bucket(k)
-        x0_np, t_np = assemble_rows(joiners, bucket)
-        cond = None if t_np is None else {"tokens": jnp.asarray(t_np)}
-        with profile_span(f"continuous.join.{boundary}/k{bucket}"):
-            prefix = self.sampler.carry_start(cond, jnp.asarray(x0_np))
-            prefix, _ = self.sampler.carry_extend(cond, prefix, boundary)
-        free = traj.free_slots()[:k]
+        """Join ``joiners`` at ``boundary``. Fresh joiners compute their
+        prefix 0..boundary from their own noise on the shared intermediate
+        coefficients (one padded mini-dispatch, ``boundary`` forwards);
+        PREEMPTED joiners resume their saved carry from its paused step
+        (``boundary - step`` forwards, zero when paused at this very
+        boundary). Both land by scattering per-slot carry columns into the
+        freed slots — bit-identical to never having left the trajectory
+        (the exit-boundary join invariant) — then re-place on the mesh if
+        sharded."""
+        fresh = [e for e in joiners
+                 if e.paused is None or e.paused.step > boundary]
+        resumed = [e for e in joiners
+                   if e.paused is not None and e.paused.step <= boundary]
+        cols: dict[int, tuple] = {}   # uid -> (x0 row, U column, x row)
+        programs: list[str] = []
+        prefix_forwards = 0
+        if fresh:
+            k = len(fresh)
+            bucket = self.scheduler.join_bucket(k)
+            x0_np, t_np = assemble_rows(fresh, bucket)
+            cond = None if t_np is None else {"tokens": jnp.asarray(t_np)}
+            with profile_span(f"continuous.join.{boundary}/k{bucket}"):
+                prefix = self.sampler.carry_start(cond, jnp.asarray(x0_np))
+                prefix, _ = self.sampler.carry_extend(cond, prefix, boundary)
+            prefix_forwards += boundary
+            programs.append(f"join/{boundary}-k{bucket}")
+            for i, e in enumerate(fresh):
+                cols[e.uid] = (prefix.x0[i], prefix.U[:, i], prefix.x[i])
+        by_step: dict[int, list] = {}
+        for e in resumed:
+            by_step.setdefault(e.paused.step, []).append(e)
+        for s in sorted(by_step):
+            group = by_step[s]
+            k = len(group)
+            bucket = self.scheduler.join_bucket(k)
+            x0_np, u_np, x_np, t_np = self._stack_paused(group, bucket)
+            rcarry = type(traj.carry)(
+                x0=jnp.asarray(x0_np), U=jnp.asarray(u_np),
+                x=jnp.asarray(x_np), step=s)
+            if s < boundary:
+                cond = (None if t_np is None
+                        else {"tokens": jnp.asarray(t_np)})
+                with profile_span(
+                        f"continuous.resume.{s}-{boundary}/k{bucket}"):
+                    rcarry, _ = self.sampler.carry_extend(cond, rcarry,
+                                                          boundary)
+                prefix_forwards += boundary - s
+                programs.append(f"resume/{s}-{boundary}-k{bucket}")
+            for i, e in enumerate(group):
+                cols[e.uid] = (rcarry.x0[i], rcarry.U[:, i], rcarry.x[i])
+        free = traj.free_slots()[:len(joiners)]
         idx = jnp.asarray(free)
         carry = traj.carry
         carry = carry._replace(
-            x0=carry.x0.at[idx].set(prefix.x0[:k]),
-            U=carry.U.at[:, idx].set(prefix.U[:, :k]),
-            x=carry.x.at[idx].set(prefix.x[:k]))
+            x0=carry.x0.at[idx].set(
+                jnp.stack([cols[e.uid][0] for e in joiners])),
+            U=carry.U.at[:, idx].set(
+                jnp.stack([cols[e.uid][1] for e in joiners], axis=1)),
+            x=carry.x.at[idx].set(
+                jnp.stack([cols[e.uid][2] for e in joiners])))
         if self._place_carry is not None:
             carry = self._place_carry(carry)
         traj.carry = carry
         now = self.clock()
         rec = self.recorder
         for si, e in zip(free, joiners):
-            e.t_admit, e.join_step = now, boundary
+            if e.paused is None:
+                # a resumed entry keeps its FIRST admission: its wait
+                # ended then, and join_step records where it entered
+                e.t_admit, e.join_step = now, boundary
+            e.paused = None
             if traj.tokens is not None:
                 traj.tokens[si] = np.asarray(e.tokens)
             traj.entries[si] = e
             if rec:
                 rec.event(e.uid, "join", now, host=self._host,
-                          boundary=boundary, slot=si)
+                          boundary=boundary, slot=si,
+                          resumed=e in resumed)
         with self._stats_lock:
             m = self._m
-            m.joins.inc(k)
-            m.forwards.inc(boundary)
-            m.join_forwards.inc(boundary)
-            self._note_program(f"join/{boundary}-k{bucket}")
+            m.joins.inc(len(joiners))
+            m.forwards.inc(prefix_forwards)
+            m.join_forwards.inc(prefix_forwards)
+            for program in programs:
+                self._note_program(program)
+
+    @staticmethod
+    def _stack_paused(group: list, bucket: int):
+        """Rebuild padded batch arrays from saved ``PausedCarry`` columns
+        (the resume twin of ``assemble_rows``): stack each victim's x0
+        row, recorded-velocity column, and state row, zero-padded to
+        ``bucket`` — pad rows are independent through the backbone, so
+        they never perturb a resumed sample."""
+        pad = bucket - len(group)
+        x0 = np.stack([np.asarray(e.paused.x0) for e in group])
+        u = np.stack([np.asarray(e.paused.U) for e in group], axis=1)
+        x = np.stack([np.asarray(e.paused.x) for e in group])
+        if pad:
+            x0 = np.concatenate(
+                [x0, np.zeros((pad,) + x0.shape[1:], x0.dtype)])
+            u = np.concatenate(
+                [u, np.zeros((u.shape[0], pad) + u.shape[2:], u.dtype)],
+                axis=1)
+            x = np.concatenate(
+                [x, np.zeros((pad,) + x.shape[1:], x.dtype)])
+        tokens = None
+        if group[0].tokens is not None:
+            tokens = np.stack(
+                [np.asarray(e.tokens) for e in group]
+                + [np.zeros_like(np.asarray(group[0].tokens))] * pad)
+        return x0, u, x, tokens
+
+    def _preempt(self, traj: _Trajectory, boundary: int) -> None:
+        """Evict strictly-lower-priority slots for queued urgent entries at
+        an exit boundary (``plan_preemptions``), then admit the urgent
+        entries into the freed slots. Each victim's carry column is
+        snapshotted to host (``PausedCarry``) and the victim goes BACK to
+        the queue; a later ``plan_joins`` resumes it for only the
+        boundary-gap forwards, bit-identical to an unpreempted run."""
+        pairs = self.scheduler.plan_preemptions(
+            self.queue.snapshot(), boundary, traj.active(),
+            len(traj.free_slots()), traj.shape_key)
+        if not pairs:
+            return
+        carry = traj.carry
+        rec = self.recorder
+        now = self.clock()
+        urgents = []
+        for si, victim, urgent in pairs:
+            victim.paused = PausedCarry(
+                step=boundary,
+                x0=np.asarray(carry.x0[si]),
+                U=np.asarray(carry.U[:, si]),
+                x=np.asarray(carry.x[si]))
+            traj.entries[si] = None
+            # back to the queue: still accepted (submitted already
+            # counted), no longer in flight until it rejoins
+            self.queue.push(victim)
+            self._settle(1)
+            urgents.append(urgent)
+            if rec:
+                rec.event(victim.uid, "preempt", now, host=self._host,
+                          boundary=boundary, slot=si, by=urgent.uid)
+        with self._stats_lock:
+            self._m.preemptions.inc(len(pairs))
+        self._take(urgents)
+        try:
+            self._admit(traj, urgents, boundary)
+        except BaseException as exc:  # noqa: BLE001 — mirror plan_joins
+            self._fail_entries(urgents, exc, count_all=True)
+            self._settle(len(urgents))
 
     def _fail_trajectory(self, exc: BaseException) -> None:
         """Surface a failing leg into every occupied slot's future and

@@ -95,6 +95,8 @@ import numpy as np
 
 from repro.observability import profile_span
 from repro.serving.gateway import GatewayBase
+from repro.serving.slo import urgency_key
+from repro.serving.stream import StreamSink
 
 
 @dataclasses.dataclass
@@ -109,6 +111,12 @@ class DecodeRequest:
     sampling: Optional[Any] = None      # repro.serving.engine.SamplingParams
     # opt-in: attach the recorded lifecycle trace to the DecodeResponse
     trace: bool = False
+    # SLO: relative deadline (ms from submit; None = best-effort) and
+    # priority (higher first under an SLOConfig; 0 = default)
+    deadline_ms: Optional[float] = None
+    priority: int = 0
+    # per-token streaming (use submit_stream, which sets this)
+    stream: bool = False
 
 
 @dataclasses.dataclass
@@ -190,6 +198,9 @@ class _DecodeEntry:
     t_admit: Optional[float] = None
     join_step: int = 0          # engine step at admission (0 = opened batch)
     trace: bool = False         # attach the recorded lifecycle on finish
+    deadline: Optional[float] = None    # absolute, on the gateway clock
+    priority: int = 0
+    sink: Optional[Any] = None          # StreamSink when streaming
 
 
 @dataclasses.dataclass
@@ -232,11 +243,13 @@ class DecodeGateway(GatewayBase):
     ToyDecodeEngine`` for deterministic simulation.
     """
 
+    _request_type = DecodeRequest       # submit_stream builds these
+
     def __init__(self, engine, *, max_slots: int = 8, cache_slots: int = 128,
                  dtype=None, refill: bool = True, prefill_chunk: int = 64,
                  total_pages: Optional[int] = None, key=None, mesh=None,
                  clock: Callable[[], float] = time.monotonic,
-                 metrics=None, recorder=None):
+                 metrics=None, recorder=None, slo=None):
         if max_slots < 1:
             raise ValueError("max_slots must be >= 1")
         if prefill_chunk < 0:
@@ -250,7 +263,8 @@ class DecodeGateway(GatewayBase):
                 "slot state has no per-request encoder memory; decode "
                 "encdec batches through DecodeEngine.greedy with a "
                 "prefilled state instead")
-        super().__init__(clock=clock, metrics=metrics, recorder=recorder)
+        super().__init__(clock=clock, metrics=metrics, recorder=recorder,
+                         slo=slo)
         self.engine = engine
         self.max_slots = max_slots
         self.refill = refill
@@ -331,12 +345,19 @@ class DecodeGateway(GatewayBase):
             raise ValueError(
                 "engine does not support sampling (greedy only); omit "
                 "DecodeRequest.sampling or use temperature=0")
+        t_submit = self.clock()
         entry = _DecodeEntry(uid=next(self._uid), prompt=prompt,
                              max_tokens=int(request.max_tokens),
                              stop_token=request.stop_token,
                              sampling=sampling,
-                             t_submit=self.clock(), future=Future(),
-                             trace=request.trace)
+                             t_submit=t_submit, future=Future(),
+                             trace=request.trace,
+                             deadline=(None if request.deadline_ms is None
+                                       else t_submit
+                                       + request.deadline_ms / 1e3),
+                             priority=int(request.priority),
+                             sink=StreamSink() if request.stream else None)
+        self._check_admission(entry)
         return self._enqueue(entry)
 
     # -- engine tick ----------------------------------------------------------
@@ -347,6 +368,8 @@ class DecodeGateway(GatewayBase):
         prompt), one masked decode step (if any row is past it)."""
         with self._plan_lock:
             self._sweep_cancelled()
+            if self.slo is not None:
+                self._shed_expired()
             self._admit()
             did = 0
             if self.prefill_chunk:
@@ -362,7 +385,8 @@ class DecodeGateway(GatewayBase):
             if not active.any():
                 return did
             sampling = self._slot_sampling() if self._sampling_resident else None
-            t0 = time.perf_counter()
+            t0 = self.clock()   # gateway clock: fake-clock benches feed the
+            #                     SLO cost model simulated dispatch times
             try:
                 with profile_span(f"decode.step.k{self.max_slots}"):
                     if sampling is None:
@@ -375,7 +399,7 @@ class DecodeGateway(GatewayBase):
             except BaseException as exc:  # noqa: BLE001 — see _fail_slots
                 self._fail_slots(exc)
                 return 1
-            step_ms = (time.perf_counter() - t0) * 1e3
+            step_ms = (self.clock() - t0) * 1e3
             self._state = state
             nxt = np.asarray(nxt)
             self._steps += 1
@@ -439,7 +463,8 @@ class DecodeGateway(GatewayBase):
         busy = self.max_slots - len(free)
         if not free or (not self.refill and busy):
             return
-        pending = sorted(self.queue.snapshot(), key=lambda e: e.uid)
+        order = urgency_key if self.slo is not None else (lambda e: e.uid)
+        pending = sorted(self.queue.snapshot(), key=order)
         dropped = [e for e in pending if e.future.cancelled()]
         if dropped:
             self._take(dropped)
@@ -530,7 +555,7 @@ class DecodeGateway(GatewayBase):
             tokens[i, :take] = p[s.pos:s.pos + take]
             lengths[i] = take
             mask[i] = True
-        t0 = time.perf_counter()
+        t0 = self.clock()
         try:
             with profile_span(f"decode.prefill.w{width}"):
                 self._state = self.engine.prefill_slots(tokens, lengths,
@@ -538,7 +563,7 @@ class DecodeGateway(GatewayBase):
         except BaseException as exc:  # noqa: BLE001 — see _fail_slots
             self._fail_slots(exc)
             return 1
-        prefill_ms = (time.perf_counter() - t0) * 1e3
+        prefill_ms = (self.clock() - t0) * 1e3
         with self._stats_lock:
             m = self._m
             m.forwards.inc()             # one engine invocation
@@ -573,6 +598,8 @@ class DecodeGateway(GatewayBase):
             self._finish(si, slot, "stop")
             return
         slot.emitted.append(tok)
+        if e.sink is not None:
+            e.sink.partial(tok, index=len(slot.emitted) - 1)
         if len(slot.emitted) >= e.max_tokens:
             self._finish(si, slot, "length")
             return
@@ -624,6 +651,8 @@ class DecodeGateway(GatewayBase):
             settled = True
         except Exception:              # cancelled: the batch rolls on
             settled = False
+        if e.sink is not None:
+            e.sink.final(response)
         wait_ms = (e.t_admit - e.t_submit) * 1e3
         with self._stats_lock:
             m = self._m
@@ -631,6 +660,7 @@ class DecodeGateway(GatewayBase):
                 m.completed.inc()
                 m.tokens_out.inc(len(slot.emitted))
                 m.wait_ms.observe(wait_ms)
+                self._note_deadline(e, self.clock())
             else:
                 m.cancelled.inc()
             self._inflight -= 1        # taken at admission
@@ -654,6 +684,23 @@ class DecodeGateway(GatewayBase):
         self._temps[:], self._top_ks[:], self._top_ps[:] = 0, 0, 1.0
         self._sampling_resident = 0
         self._slots = [None] * self.max_slots
+
+    # -- SLO cost model -------------------------------------------------------
+
+    def _estimate_wait_ms(self, entry: _DecodeEntry) -> float:
+        """Modeled completion time for a decode request: every engine tick
+        costs one observed dispatch (``_dispatch_cost_ms``), the request
+        itself needs ~``prompt + max_tokens`` ticks once resident, and each
+        full wave of queued sequences ahead of it costs an average
+        sequence length of ticks before a slot frees up."""
+        cost = self._dispatch_cost_ms()
+        with self._stats_lock:
+            done = self._m.completed.value
+            toks = self._m.tokens_out.value
+        avg_len = (toks / done) if done else float(entry.max_tokens)
+        waves = self.queue.depth() // self.max_slots
+        own = len(entry.prompt) + entry.max_tokens
+        return cost * (own + waves * avg_len)
 
     # -- metrics --------------------------------------------------------------
 

@@ -252,6 +252,15 @@ class AnytimeFlowSampler:
         slot batch. One jit program per (start, stop) leg — the boundary
         pairs a trajectory can traverse are few and fixed, so a running
         server compiles each leg once (mirroring the per-budget programs).
+
+        The returned exits dict is also the STREAMING surface: row i of
+        ``exits[k]`` is exactly the sample a budget-k request with slot
+        i's noise would have received (the anytime grid is nested), so
+        ``ContinuousGateway`` forwards it to streaming clients as a valid
+        intermediate sample at zero extra forwards — and because the
+        carry's per-row columns fully determine the remaining trajectory,
+        the same property makes exit boundaries free preemption points
+        (``serving.slo.PausedCarry``).
         """
         key = (carry.step, stop)
         fn = self._extends.get(key)

@@ -71,6 +71,7 @@ from repro.serving.gateway import (
     Request,
     stats_projection,
 )
+from repro.serving.stream import ResponseStream
 
 
 def default_affinity(request, top_budget: Optional[int] = None) -> tuple:
@@ -159,6 +160,13 @@ class WorkStealer:
     thief. A victim must hold at least ``min_queue`` queued entries:
     below that the home host's next flush serves them sooner than a
     migration plus a cold jit program would.
+
+    Victims holding URGENT entries (``HostLoad.urgent`` — queued deadlines
+    or raised priorities) are preferred over merely-deep shards, so SLO
+    pressure migrates to idle hosts first; ``GatewayBase.steal`` pops in
+    urgency order, so the moved entries are exactly the most urgent ones.
+    With no urgent work anywhere the plan is identical to the legacy
+    deepest-first policy.
     """
 
     min_queue: int = 2
@@ -189,7 +197,8 @@ class WorkStealer:
                        and depth[h] >= max(self.min_queue, 1)]
             if not victims:
                 break
-            victim = max(victims, key=lambda h: (depth[h], h))
+            victim = max(victims, key=lambda h: (
+                getattr(loads[h], "urgent", 0), depth[h], h))
             n = min(self.max_steal, (depth[victim] + 1) // 2)
             if n < 1:
                 continue
@@ -356,6 +365,19 @@ class FleetGateway:
                 rec.event(future.uid, "route", host.gateway.clock(),
                           host=host.name)
         return future
+
+    def submit_stream(self, request=None, **kw) -> ResponseStream:
+        """Streamed submit through the fleet: routes like ``submit`` and
+        returns the home gateway's ``ResponseStream``. Work stealing never
+        moves the sink (it rides the entry), so a stolen streamed request
+        keeps emitting to the same stream from its new host."""
+        if request is None:
+            with self._lock:
+                rtype = next(iter(self._hosts.values())).gateway._request_type
+            request = rtype(**kw)
+        request.stream = True
+        future = self.submit(request)
+        return ResponseStream(future, future.stream_sink)
 
     # -- stealing ------------------------------------------------------------
 

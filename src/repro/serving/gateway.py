@@ -94,6 +94,15 @@ import jax
 import jax.numpy as jnp
 
 from repro.observability import MetricsRegistry, NULL_RECORDER, profile_span
+from repro.serving.slo import (
+    AdmissionRejected,
+    DeadlineExceeded,
+    SLOConfig,
+    hist_mean,
+    is_urgent,
+    urgency_key,
+)
+from repro.serving.stream import ResponseStream, StreamSink
 
 Array = jax.Array
 
@@ -122,10 +131,13 @@ class DrainTimeout(RuntimeError):
 class HostLoad:
     """Point-in-time load snapshot of one gateway (= one fleet queue
     shard): entries still queued and entries taken but unresolved. The
-    work stealer balances on these — only ``queue_depth`` is stealable."""
+    work stealer balances on these — only ``queue_depth`` is stealable.
+    ``urgent`` counts queued entries carrying SLO pressure (priority > 0
+    or a deadline); the stealer prefers victims holding urgent work."""
 
     queue_depth: int
     inflight: int
+    urgent: int = 0
 
     @property
     def total(self) -> int:
@@ -146,6 +158,14 @@ class Request:
     # opt-in: resolve the Response with its recorded lifecycle trace
     # attached (requires the gateway to have a TraceRecorder)
     trace: bool = False
+    # SLO (repro.serving.slo): latency budget relative to submit (None =
+    # best-effort) and scheduling priority (higher = more urgent; plain
+    # requests at 0 keep exact FIFO order)
+    deadline_ms: Optional[float] = None
+    priority: int = 0
+    # streaming (repro.serving.stream): emit per-exit-boundary partials;
+    # set by submit_stream, which returns the ResponseStream
+    stream: bool = False
 
 
 @dataclasses.dataclass
@@ -187,6 +207,16 @@ class _Entry:
     t_admit: Optional[float] = None
     join_step: int = 0
     trace: bool = False   # attach the recorded lifecycle to the Response
+    # SLO scheduling: ABSOLUTE deadline on the gateway clock (None =
+    # best-effort) and priority (higher = more urgent)
+    deadline: Optional[float] = None
+    priority: int = 0
+    # streaming sink (repro.serving.stream.StreamSink), or None
+    sink: Optional[Any] = None
+    # preemption (continuous tier): host snapshot of this entry's carry
+    # column, taken when its slot was evicted at an exit boundary
+    # (repro.serving.slo.PausedCarry); resume restores it bit-identically
+    paused: Optional[Any] = None
 
 
 class RequestQueue:
@@ -257,7 +287,7 @@ class BatchScheduler:
 
     def __init__(self, max_batch: int = 8, max_wait_ms: float = 10.0,
                  policy: str = "auto", can_mix: bool = False,
-                 top_budget: Optional[int] = None):
+                 top_budget: Optional[int] = None, slo_aware: bool = False):
         if max_batch < 1:
             raise ValueError("max_batch must be >= 1")
         if policy not in POLICIES:
@@ -267,6 +297,13 @@ class BatchScheduler:
         self.policy = policy
         self.can_mix = can_mix
         self.top_budget = top_budget
+        # SLO mode: order entries by urgency_key instead of FIFO, and add
+        # deadline pressure to the flush trigger. ``lead_ms`` is the
+        # gateway's current one-dispatch cost estimate (refreshed each
+        # pump from the registry histograms): a partial group flushes
+        # early when waiting one more tick would miss a member's deadline
+        self.slo_aware = slo_aware
+        self.lead_ms = 0.0
         self._buckets = self._bucket_sizes(max_batch)
 
     @staticmethod
@@ -307,6 +344,8 @@ class BatchScheduler:
         (the caller removes exactly the batched entries from its queue)."""
         batches: list[Batch] = []
         groups: dict[tuple, list[_Entry]] = {}
+        if self.slo_aware:
+            pending = sorted(pending, key=urgency_key)
         for e in pending:
             groups.setdefault((e.shape_key, e.served), []).append(e)
 
@@ -320,6 +359,12 @@ class BatchScheduler:
 
         aged = any(now - e.t_submit >= self.max_wait_s
                    for es in leftovers.values() for e in es)
+        if self.slo_aware and not aged:
+            # deadline pressure: flush partials when waiting one more
+            # dispatch would push a member past its deadline
+            lead_s = self.lead_ms / 1e3
+            aged = any(e.deadline is not None and now + lead_s >= e.deadline
+                       for es in leftovers.values() for e in es)
         if not (force or aged):
             return batches
 
@@ -346,6 +391,11 @@ class BatchScheduler:
                 for served in sorted(per_budget):
                     es = per_budget[served]
                     batches.append(Batch(es, served, self.bucket(len(es))))
+        if self.slo_aware and len(batches) > 1:
+            # most urgent batch dispatches first (batches run serially
+            # within one pump; an urgent batch behind a long one misses)
+            batches.sort(key=lambda b: min(urgency_key(e)
+                                           for e in b.entries))
         return batches
 
 
@@ -381,6 +431,11 @@ class GatewayStats:
     # fleet federation (zero outside a FleetGateway):
     stolen_in: int = 0         # queued entries migrated INTO this shard
     stolen_out: int = 0        # queued entries migrated OUT of this shard
+    # SLO scheduling (zero without an SLOConfig / deadlines):
+    rejected: int = 0          # fast-rejected by admission control
+    preemptions: int = 0       # slots evicted at exit boundaries
+    deadline_misses: int = 0   # deadline requests settled late or shed
+    goodput: int = 0           # deadline requests completed on time
 
 
 # The ONE shared metric schema every serving tier emits into. Counter
@@ -410,6 +465,13 @@ METRIC_SCHEMA: tuple = (
     ("prefill_tokens", "counter", "prompt tokens consumed by prefill"),
     ("stolen_in", "counter", "queued entries migrated INTO this shard"),
     ("stolen_out", "counter", "queued entries migrated OUT of this shard"),
+    ("rejected", "counter", "requests fast-rejected by admission control"),
+    ("preemptions", "counter",
+     "slots evicted at exit boundaries for urgent work"),
+    ("deadline_misses", "counter",
+     "deadline-carrying requests settled late or shed in queue"),
+    ("goodput", "counter",
+     "deadline-carrying requests completed before their deadline"),
     ("queue_depth", "gauge", "entries waiting in the intake queue"),
     ("inflight", "gauge", "entries taken off the queue, unresolved"),
     ("jit_programs", "gauge", "distinct jit programs dispatched "
@@ -488,6 +550,17 @@ def stats_projection(snap: dict, raw_elapsed: float) -> dict:
         # fleet federation (zero outside a FleetGateway)
         "stolen_in": int(n("stolen_in")),
         "stolen_out": int(n("stolen_out")),
+        # SLO scheduling (zero without deadlines). hit rate is measured
+        # over OFFERED deadline requests: on-time completions / (on-time
+        # + late-or-shed + fast-rejected) — a gateway cannot improve it
+        # by rejecting everything
+        "rejected": int(n("rejected")),
+        "preemptions": int(n("preemptions")),
+        "deadline_misses": int(n("deadline_misses")),
+        "goodput": int(n("goodput")),
+        "deadline_hit_rate": (
+            n("goodput")
+            / max(n("goodput") + n("deadline_misses") + n("rejected"), 1)),
     }
 
 
@@ -503,10 +576,15 @@ class GatewayBase:
     or fail).
     """
 
+    #: request dataclass ``submit_stream`` builds from kwargs (overridden
+    #: by DecodeGateway)
+    _request_type = Request
+
     def __init__(self, clock: Callable[[], float] = time.monotonic,
                  metrics: Optional[MetricsRegistry] = None,
-                 recorder=None):
+                 recorder=None, slo: Optional[SLOConfig] = None):
         self.clock = clock
+        self.slo = slo
         self.queue = RequestQueue()
         self.metrics = metrics if metrics is not None else MetricsRegistry()
         self._m = GatewayMetrics(self.metrics)
@@ -562,6 +640,10 @@ class GatewayBase:
                 prefill_tokens=m.prefill_tokens.value,
                 stolen_in=m.stolen_in.value,
                 stolen_out=m.stolen_out.value,
+                rejected=m.rejected.value,
+                preemptions=m.preemptions.value,
+                deadline_misses=m.deadline_misses.value,
+                goodput=m.goodput.value,
             )
 
     def _note_program(self, program: str) -> None:
@@ -594,6 +676,11 @@ class GatewayBase:
             # future (FleetGateway.submit, trace consumers) can stamp /
             # look up events without the private entry
             entry.future.uid = entry.uid
+            sink = getattr(entry, "sink", None)
+            if sink is not None:
+                # submit_stream reads the sink back off the future (the
+                # entry is private; the future crosses the fleet tier)
+                entry.future.stream_sink = sink
             self.queue.push(entry)
         rec = self.recorder
         if rec:
@@ -636,11 +723,105 @@ class GatewayBase:
                 failed += 1
             except Exception:       # cancelled/raced future: nothing to do
                 failed += int(count_all)
+            sink = getattr(e, "sink", None)
+            if sink is not None:
+                sink.error(exc)     # unblock a consumer iterating the stream
             if rec:
                 rec.event(e.uid, "settle", now, host=self._host,
                           status="failed")
         if failed:
             self._m.failed.inc(failed)
+
+    # -- SLO scheduling (repro.serving.slo) -----------------------------------
+
+    def _dispatch_cost_ms(self) -> float:
+        """Observed mean cost of one dispatch (assembly + device), read
+        from the registry's own histograms — the admission cost model
+        calibrates itself from live traffic. Before the first dispatch it
+        falls back to ``slo.default_cost_ms`` (0 = optimistic accept)."""
+        with self._stats_lock:
+            dispatch = hist_mean(self._m.device_dispatch_ms)
+            assembly = hist_mean(self._m.host_assembly_ms)
+        if dispatch is None:
+            return self.slo.default_cost_ms if self.slo else 0.0
+        return dispatch + (assembly or 0.0)
+
+    def _estimate_wait_ms(self, entry) -> float:
+        """Modeled time until ``entry`` would settle, given the current
+        queue. Subclasses refine with their batching shape; the base
+        estimate is one dispatch per queued entry ahead plus our own."""
+        return self._dispatch_cost_ms() * (self.queue.depth() + 1)
+
+    def _check_admission(self, entry) -> None:
+        """Fast reject: raise ``AdmissionRejected`` when the modeled
+        service time cannot meet the entry's deadline. Called by submit
+        BEFORE ``_enqueue`` — a rejected request is never counted as
+        submitted and its caller gets the exception, not a future."""
+        slo = self.slo
+        if slo is None or not slo.admission or entry.deadline is None:
+            return
+        est = self._estimate_wait_ms(entry)
+        budget = (entry.deadline - self.clock()) * 1e3 - slo.slack_ms
+        if est > budget:
+            depth = self.queue.depth()
+            with self._stats_lock:
+                self._m.rejected.inc()
+            rec = self.recorder
+            if rec:
+                rec.event(entry.uid, "reject", self.clock(), host=self._host,
+                          estimated_ms=est, queue_depth=depth)
+            raise AdmissionRejected(
+                f"deadline infeasible: modeled service {est:.1f}ms exceeds "
+                f"the remaining budget {budget:.1f}ms "
+                f"(queue_depth={depth})",
+                estimated_ms=est, deadline_ms=budget, queue_depth=depth)
+
+    def _shed_expired(self) -> None:
+        """Fail queued entries whose deadline already passed (caller holds
+        ``_plan_lock``). Their forwards go to requests that can still
+        win; each shed entry counts under ``failed`` AND
+        ``deadline_misses``."""
+        slo = self.slo
+        if slo is None or not slo.shedding:
+            return
+        now = self.clock()
+        expired = [e for e in self.queue.snapshot()
+                   if e.deadline is not None
+                   and (now - e.deadline) * 1e3 > -slo.slack_ms]
+        if not expired:
+            return
+        self._take(expired)
+        with self._stats_lock:
+            self._m.deadline_misses.inc(len(expired))
+        self._fail_entries(
+            expired,
+            DeadlineExceeded(f"deadline passed while queued "
+                             f"({len(expired)} shed at t={now:.3f})"),
+            count_all=True)
+        self._settle(len(expired))
+
+    def _note_deadline(self, entry, settle_t: float) -> None:
+        """Goodput accounting at settle (caller holds ``_stats_lock``):
+        a deadline request completing on time ticks ``goodput``, late
+        ticks ``deadline_misses``. No-deadline requests tick neither."""
+        if entry.deadline is None:
+            return
+        if settle_t <= entry.deadline:
+            self._m.goodput.inc()
+        else:
+            self._m.deadline_misses.inc()
+
+    # -- streaming (repro.serving.stream) -------------------------------------
+
+    def submit_stream(self, request=None, **kw) -> ResponseStream:
+        """Submit with streaming: returns a ``ResponseStream`` yielding
+        per-exit-boundary partials (flow) or per-token chunks (decode),
+        terminated by the same response the future resolves with."""
+        if request is None:
+            request = self._request_type(**kw)
+        request.stream = True
+        future = self.submit(request)
+        return ResponseStream(future, future.stream_sink)
 
     # -- fleet federation hooks (repro.serving.fleet) ------------------------
 
@@ -671,17 +852,20 @@ class GatewayBase:
         """Load snapshot for fleet routing/stealing decisions."""
         with self._stats_lock:
             inflight = self._inflight
-        return HostLoad(queue_depth=self.queue.depth(), inflight=inflight)
+        pending = self.queue.snapshot()
+        return HostLoad(queue_depth=len(pending), inflight=inflight,
+                        urgent=sum(1 for e in pending if is_urgent(e)))
 
     def steal(self, max_n: Optional[int] = None) -> list:
-        """Atomically pop up to ``max_n`` QUEUED entries (oldest first;
-        ``None`` = all). Runs under ``_plan_lock``, the same lock every
-        pump plans under, so a stolen entry was never planned into a batch
-        or trajectory — in-flight work is structurally unstealable. The
-        entries' futures stay live; the thief resolves them."""
+        """Atomically pop up to ``max_n`` QUEUED entries (most urgent
+        first — for plain entries the urgency key degenerates to the old
+        oldest-first order; ``None`` = all). Runs under ``_plan_lock``,
+        the same lock every pump plans under, so a stolen entry was never
+        planned into a batch or trajectory — in-flight work is
+        structurally unstealable. The entries' futures stay live; the
+        thief resolves them."""
         with self._plan_lock:
-            pending = sorted(self.queue.snapshot(),
-                             key=lambda e: (e.t_submit, e.uid))
+            pending = sorted(self.queue.snapshot(), key=urgency_key)
             taken = pending if max_n is None else pending[:max_n]
             self.queue.remove({e.uid for e in taken})
         if taken:
@@ -822,15 +1006,17 @@ class Gateway(GatewayBase):
                  mixed_budget_policy: str = "auto", strict_nfe: bool = False,
                  mesh=None, clock: Callable[[], float] = time.monotonic,
                  key: Optional[Array] = None,
-                 metrics: Optional[MetricsRegistry] = None, recorder=None):
-        super().__init__(clock=clock, metrics=metrics, recorder=recorder)
+                 metrics: Optional[MetricsRegistry] = None, recorder=None,
+                 slo: Optional[SLOConfig] = None):
+        super().__init__(clock=clock, metrics=metrics, recorder=recorder,
+                         slo=slo)
         self.sampler = sampler
         can_mix = (hasattr(sampler, "sample_all_from")
                    and len(sampler.budgets) > 1)
         self.scheduler = BatchScheduler(
             max_batch=max_batch, max_wait_ms=max_wait_ms,
             policy=mixed_budget_policy, can_mix=can_mix,
-            top_budget=max(sampler.budgets))
+            top_budget=max(sampler.budgets), slo_aware=slo is not None)
         self.strict_nfe = strict_nfe
         self._base_key = key if key is not None else jax.random.PRNGKey(0)
         self._place = None
@@ -884,10 +1070,16 @@ class Gateway(GatewayBase):
                 key, (request.tokens.shape[0], self.sampler.cfg.latent_dim))
         shape_key = (None if request.tokens is None
                      else tuple(request.tokens.shape), tuple(x0.shape))
+        t_submit = self.clock()
         entry = _Entry(uid=uid, tokens=request.tokens, x0=x0,
                        requested=requested, served=served,
-                       shape_key=shape_key, t_submit=self.clock(),
-                       future=Future(), trace=request.trace)
+                       shape_key=shape_key, t_submit=t_submit,
+                       future=Future(), trace=request.trace,
+                       deadline=(None if request.deadline_ms is None
+                                 else t_submit + request.deadline_ms / 1e3),
+                       priority=request.priority,
+                       sink=StreamSink() if request.stream else None)
+        self._check_admission(entry)
         return self._enqueue(entry)
 
     # -- scheduling / execution --------------------------------------------
@@ -895,12 +1087,22 @@ class Gateway(GatewayBase):
     def pump(self, force: bool = False) -> int:
         """Plan ready batches and execute them; returns how many ran."""
         with self._plan_lock:
+            if self.slo is not None:
+                self._shed_expired()
+                self.scheduler.lead_ms = self._dispatch_cost_ms()
             batches = self.scheduler.plan(
                 self.queue.snapshot(), self.clock(), force=force)
             # take exactly the batched entries — a submit landing after
             # the snapshot stays queued for the next pump, never dropped
             self._take([e for b in batches for e in b.entries])
         return self._run_batches(batches)
+
+    def _estimate_wait_ms(self, entry) -> float:
+        """Flush-gateway cost model: queued entries dispatch in batches of
+        up to ``max_batch``, so the wait is (whole batches ahead of us,
+        plus our own) times the observed per-dispatch cost."""
+        batches_ahead = self.queue.depth() // self.scheduler.max_batch + 1
+        return self._dispatch_cost_ms() * batches_ahead
 
     def _run_batches(self, batches: Sequence[Batch]) -> int:
         """Execute planned batches; an exception escaping one batch (e.g. a
@@ -927,14 +1129,17 @@ class Gateway(GatewayBase):
                    f"/k{batch.bucket}")
         try:
             # assemble on host: ONE device transfer per batch, not one eager
-            # stack/slice op per request (those dominate at small budgets)
-            t0 = time.perf_counter()
+            # stack/slice op per request (those dominate at small budgets).
+            # Timing runs on the GATEWAY clock (production: time.monotonic,
+            # same resolution as perf_counter) so fake-clock benches feed
+            # the SLO cost model simulated, deterministic dispatch times
+            t0 = self.clock()
             x0_np, t_np = assemble_rows(es, batch.bucket)
             x0 = jnp.asarray(x0_np)
             cond = None if t_np is None else {"tokens": jnp.asarray(t_np)}
             if self._place is not None:
                 cond, x0 = self._place(cond, x0)
-            t1 = time.perf_counter()
+            t1 = self.clock()
             with profile_span(f"gateway.dispatch.{program}"):
                 if batch.mixed:
                     outs = self.sampler.sample_all_from(cond, x0)
@@ -947,10 +1152,11 @@ class Gateway(GatewayBase):
                         self.sampler.sample_from(cond, x0, batch.budget))
                     nfe = batch.budget
                     rows = [lat[i] for i in range(len(es))]
-            t2 = time.perf_counter()
+            t2 = self.clock()
         except Exception as exc:
             self._fail_entries(es, exc, count_all=True)
             return
+        settle_t = self.clock()
         with self._stats_lock:
             m = self._m
             m.batches.inc()
@@ -965,6 +1171,7 @@ class Gateway(GatewayBase):
             for e in es:
                 m.wait_ms.observe((dispatched - e.t_submit) * 1e3)
                 m.completed.inc()
+                self._note_deadline(e, settle_t)
         rec = self.recorder
         for e, row in zip(es, rows):
             wait_ms = (dispatched - e.t_submit) * 1e3
@@ -988,3 +1195,5 @@ class Gateway(GatewayBase):
                 e.future.set_result(response)
             except Exception:   # cancelled mid-batch: batch-mates still land
                 pass
+            if e.sink is not None:
+                e.sink.final(response)

@@ -1,0 +1,59 @@
+"""Docs drift guard: the references in docs/ must track the code.
+
+Two invariants, both cheap enough to run in every CI docs job:
+
+* every flag ``repro.launch.serve.build_parser`` accepts is documented
+  (backticked) in ``docs/CLI.md``;
+* every ``METRIC_SCHEMA`` entry is documented in
+  ``docs/OBSERVABILITY.md``.
+
+The guard compares against the LIVE parser/schema, so adding a flag or
+metric without documenting it fails CI with the missing names listed.
+"""
+import argparse
+import os
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _read(rel: str) -> str:
+    with open(os.path.join(ROOT, rel)) as fh:
+        return fh.read()
+
+
+def test_every_serve_flag_documented_in_cli_md():
+    from repro.launch.serve import build_parser
+
+    doc = _read("docs/CLI.md")
+    missing = []
+    for action in build_parser()._actions:
+        if isinstance(action, argparse._HelpAction):
+            continue
+        for opt in action.option_strings:
+            if not opt.startswith("--"):
+                continue
+            if f"`{opt}`" not in doc:
+                missing.append(opt)
+    assert not missing, (
+        f"serve.py flags missing from docs/CLI.md: {missing} — "
+        f"document each as `--flag` in a table row")
+
+
+def test_every_metric_documented_in_observability_md():
+    from repro.serving.gateway import METRIC_SCHEMA
+
+    doc = _read("docs/OBSERVABILITY.md")
+    missing = [name for name, _kind, _help in METRIC_SCHEMA
+               if f"`{name}`" not in doc]
+    assert not missing, (
+        f"METRIC_SCHEMA entries missing from docs/OBSERVABILITY.md: "
+        f"{missing} — add a table row per metric")
+
+
+def test_docs_exist_and_are_linked_from_readme():
+    readme = _read("README.md")
+    for rel in ("docs/ARCHITECTURE.md", "docs/CLI.md",
+                "docs/OBSERVABILITY.md"):
+        assert os.path.exists(os.path.join(ROOT, rel)), f"{rel} missing"
+        assert rel in readme or os.path.basename(rel) in readme, (
+            f"README.md does not point at {rel}")

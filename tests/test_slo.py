@@ -1,0 +1,383 @@
+"""SLO-aware scheduling: urgency ordering, deadline-pressure flushes,
+admission control against the observed cost model, queue shedding,
+goodput accounting, exit-boundary preemption with bit-identical resume,
+flow/decode streaming with bit-identical terminal results, and urgent-
+aware work stealing — all on the fake clock."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.serving import (
+    AdmissionRejected,
+    ContinuousGateway,
+    DeadlineExceeded,
+    DecodeGateway,
+    DecodeRequest,
+    FleetGateway,
+    Gateway,
+    HostLoad,
+    Request,
+    SLOConfig,
+    WorkStealer,
+)
+from repro.serving.continuous import ContinuousScheduler
+from repro.serving.gateway import BatchScheduler, _Entry
+from repro.serving.slo import is_urgent, urgency_key
+from repro.serving.toy import CountingToySampler, FakeClock, ToyDecodeEngine
+
+BUDGETS = (4, 8, 16)
+
+
+class CarrySampler(CountingToySampler):
+    def __init__(self, budgets=BUDGETS, seed=0, jitter=0.1):
+        super().__init__(budgets=budgets, seed=seed, jitter=jitter)
+
+
+class TickingSampler(CarrySampler):
+    """Each batch-level forward advances the fake clock — dispatches take
+    simulated time, so the registry's dispatch histograms (the admission
+    cost model) see deterministic milliseconds."""
+
+    def __init__(self, clock, ms_per_forward=5.0, **kw):
+        super().__init__(**kw)
+        self._clock = clock
+        self._ms = ms_per_forward
+
+    def on_forward(self):
+        super().on_forward()
+        self._clock.advance(self._ms / 1e3)
+
+
+def _x0(i, shape=(2,)):
+    return jax.random.normal(jax.random.PRNGKey(100 + i), shape)
+
+
+def _entry(uid, served=4, t=0.0, deadline=None, priority=0):
+    return _Entry(uid=uid, tokens=None, x0=jnp.zeros((2,)), requested=served,
+                  served=served, shape_key=(None, (2,)), t_submit=t,
+                  future=None, deadline=deadline, priority=priority)
+
+
+# ---------------------------------------------------------------------------
+# pure policy (slo.py)
+# ---------------------------------------------------------------------------
+
+
+def test_urgency_key_orders_priority_deadline_then_fifo():
+    plain_a, plain_b = _entry(0, t=0.0), _entry(1, t=1.0)
+    dl = _entry(2, t=2.0, deadline=5.0)
+    hot = _entry(3, t=3.0, priority=2)
+    got = sorted([plain_b, hot, dl, plain_a], key=urgency_key)
+    assert [e.uid for e in got] == [3, 2, 0, 1]
+    # plain entries keep exact legacy (t_submit, uid) order
+    assert sorted([plain_b, plain_a], key=urgency_key) == [plain_a, plain_b]
+
+
+def test_is_urgent():
+    assert not is_urgent(_entry(0))
+    assert is_urgent(_entry(1, deadline=1.0))
+    assert is_urgent(_entry(2, priority=1))
+
+
+# ---------------------------------------------------------------------------
+# BatchScheduler in SLO mode
+# ---------------------------------------------------------------------------
+
+
+def test_slo_scheduler_flushes_under_deadline_pressure():
+    s = BatchScheduler(max_batch=4, max_wait_ms=100.0, slo_aware=True)
+    s.lead_ms = 5.0
+    young = [_entry(0, t=0.0, deadline=0.008)]
+    # not aged, not full — but now + lead crosses the deadline: flush
+    assert s.plan(young, now=0.004) != []
+    assert s.plan([_entry(0, t=0.0)], now=0.004) == []     # no deadline
+    # plain scheduler never deadline-flushes
+    legacy = BatchScheduler(max_batch=4, max_wait_ms=100.0)
+    assert legacy.plan(young, now=0.004) == []
+
+
+def test_slo_scheduler_orders_batches_by_urgency():
+    s = BatchScheduler(max_batch=4, max_wait_ms=10.0, slo_aware=True)
+    pending = [_entry(0, served=4), _entry(1, served=8, priority=3)]
+    batches = s.plan(pending, now=0.0, force=True)
+    assert len(batches) == 2
+    assert batches[0].entries[0].uid == 1       # urgent batch dispatches first
+
+
+def test_plan_preemptions_pairs_urgent_with_weakest_victims():
+    s = ContinuousScheduler(max_slots=2, boundaries=BUDGETS)
+    active = [(0, _entry(0, served=16, t=0.0)),
+              (1, _entry(1, served=16, t=0.0))]
+    urgent = _entry(5, served=8, priority=1)
+    pairs = s.plan_preemptions([urgent], boundary=4, active=active,
+                               free_slots=0, shape_key=(None, (2,)))
+    assert [(si, v.uid, e.uid) for si, v, e in pairs] == [(1, 1, 5)]
+    # free slots => plan_joins already handled it
+    assert s.plan_preemptions([urgent], 4, active, free_slots=1,
+                              shape_key=(None, (2,))) == []
+    # equal priority never preempts
+    assert s.plan_preemptions([_entry(6, served=8)], 4, active, 0,
+                              (None, (2,))) == []
+    # a victim past the cap (join too late) is still eligible, but the
+    # candidate itself must satisfy the join-cost cap
+    late = _entry(7, served=5, priority=1)      # cost 4 > 0.5 * 5
+    assert s.plan_preemptions([late], 4, active, 0, (None, (2,))) == []
+
+
+# ---------------------------------------------------------------------------
+# admission control + shedding + goodput (flush gateway, fake clock)
+# ---------------------------------------------------------------------------
+
+
+def test_admission_rejects_infeasible_deadline_with_default_cost():
+    clock = FakeClock()
+    gw = Gateway(CarrySampler(), max_batch=4, max_wait_ms=10.0, clock=clock,
+                 slo=SLOConfig(default_cost_ms=10.0))
+    with pytest.raises(AdmissionRejected) as ei:
+        gw.submit(Request(budget=4, x0=_x0(0), deadline_ms=5.0))
+    assert ei.value.estimated_ms == 10.0
+    ok = gw.submit(Request(budget=4, x0=_x0(1), deadline_ms=1000.0))
+    best_effort = gw.submit(Request(budget=4, x0=_x0(2)))   # never rejected
+    s = gw.stats()
+    assert s["rejected"] == 1 and s["submitted"] == 2
+    gw.pump(force=True)
+    assert ok.result(1).meta["served_budget"] == 4
+    assert best_effort.result(1) is not None
+
+
+def test_admission_cost_model_calibrates_from_observed_dispatches():
+    clock = FakeClock()
+    sampler = TickingSampler(clock, ms_per_forward=5.0)
+    gw = Gateway(sampler, max_batch=2, max_wait_ms=10.0, clock=clock,
+                 slo=SLOConfig())
+    # cold model (default_cost_ms=0): everything is admitted
+    f = gw.submit(Request(budget=4, x0=_x0(0), deadline_ms=1.0))
+    gw.pump(force=True)                 # 4 forwards x 5ms => ~20ms dispatch
+    assert f.result(1) is not None
+    assert gw._dispatch_cost_ms() >= 20.0
+    # warm model: a 1ms deadline is now visibly infeasible
+    with pytest.raises(AdmissionRejected):
+        gw.submit(Request(budget=4, x0=_x0(1), deadline_ms=1.0))
+    # deep queue scales the estimate by whole batches ahead
+    for i in range(4):
+        gw.submit(Request(budget=4, x0=_x0(2 + i), deadline_ms=10_000.0))
+    est = gw._estimate_wait_ms(None)
+    assert est >= 3 * 20.0              # 2 full batches ahead + own
+
+
+def test_shedding_fails_expired_queued_entries():
+    clock = FakeClock()
+    gw = Gateway(CarrySampler(), max_batch=4, max_wait_ms=1000.0, clock=clock,
+                 slo=SLOConfig())
+    doomed = gw.submit(Request(budget=4, x0=_x0(0), deadline_ms=10.0))
+    clock.advance(0.05)                  # deadline passes while queued
+    gw.pump()
+    with pytest.raises(DeadlineExceeded):
+        doomed.result(1)
+    s = gw.stats()
+    assert s["deadline_misses"] == 1 and s["failed"] == 1
+    assert s["completed"] == 0 and s["goodput"] == 0
+
+
+def test_goodput_and_hit_rate_accounting():
+    clock = FakeClock()
+    sampler = TickingSampler(clock, ms_per_forward=1.0)
+    gw = Gateway(sampler, max_batch=4, max_wait_ms=10.0, clock=clock,
+                 slo=SLOConfig())
+    on_time = gw.submit(Request(budget=4, x0=_x0(0), deadline_ms=1000.0))
+    late = gw.submit(Request(budget=4, x0=_x0(1), deadline_ms=2.0))
+    gw.pump(force=True)                  # one batch, ~4ms: late misses
+    assert on_time.result(1) is not None and late.result(1) is not None
+    s = gw.stats()
+    assert s["goodput"] == 1 and s["deadline_misses"] == 1
+    assert s["completed"] == 2           # a late settle still completes
+    assert s["deadline_hit_rate"] == pytest.approx(0.5)
+
+
+def test_slo_none_keeps_legacy_behavior_but_records_deadlines():
+    clock = FakeClock()
+    gw = Gateway(CarrySampler(), max_batch=4, max_wait_ms=10.0, clock=clock)
+    f = gw.submit(Request(budget=4, x0=_x0(0), deadline_ms=0.001))
+    clock.advance(1.0)                   # hopeless — but FIFO never sheds
+    gw.pump(force=True)
+    assert f.result(1) is not None       # served late, not rejected/shed
+    s = gw.stats()
+    assert s["rejected"] == 0 and s["completed"] == 1
+    assert s["deadline_misses"] == 1 and s["goodput"] == 0
+
+
+# ---------------------------------------------------------------------------
+# preemption at exit boundaries (continuous gateway)
+# ---------------------------------------------------------------------------
+
+
+def test_preempted_request_resumes_bit_identical():
+    clock = FakeClock()
+    sampler = CarrySampler()
+    gw = ContinuousGateway(sampler, max_slots=2, max_wait_ms=10.0,
+                           clock=clock, slo=SLOConfig())
+    lows = [gw.submit(Request(budget=16, x0=_x0(i))) for i in range(2)]
+    assert gw.pump(force=True) == 1              # trajectory opens
+    hot = gw.submit(Request(budget=8, x0=_x0(2), priority=1))
+    assert gw.pump() >= 1                        # leg 0..4: preempt uid 1
+    assert gw.stats()["preemptions"] == 1
+    assert not any(f.done() for f in lows) and not hot.done()
+    gw.pump()                                    # leg 4..8: hot exits,
+    assert hot.done()                            # victim resumes at 8
+    gw.pump()                                    # leg 8..16: both lows exit
+    assert all(f.done() for f in lows)
+    got = np.stack([np.asarray(f.result(1).latents) for f in lows])
+    direct16 = np.asarray(CarrySampler().sample_from(
+        None, jnp.stack([_x0(0), _x0(1)]), 16))
+    np.testing.assert_array_equal(got, direct16)     # bit-identical resume
+    direct8 = np.asarray(CarrySampler().sample_from(
+        None, jnp.stack([_x0(2), _x0(2)]), 8))
+    np.testing.assert_array_equal(np.asarray(hot.result(1).latents),
+                                  direct8[0])
+    # forwards: legs 4+4+8, urgent prefix 4, victim resume 8-4
+    assert sampler.forwards == 16 + 4 + 4
+    s = gw.stats()
+    assert s["completed"] == 3 and s["failed"] == 0
+    assert gw.queue.depth() == 0 and s["inflight"] == 0
+
+
+def test_preemption_off_leaves_trajectory_untouched():
+    clock = FakeClock()
+    gw = ContinuousGateway(CarrySampler(), max_slots=2, max_wait_ms=10.0,
+                           clock=clock,
+                           slo=SLOConfig(preemption=False))
+    lows = [gw.submit(Request(budget=16, x0=_x0(i))) for i in range(2)]
+    gw.pump(force=True)
+    gw.submit(Request(budget=8, x0=_x0(2), priority=1))
+    gw.pump()
+    assert gw.stats()["preemptions"] == 0
+    for _ in range(8):
+        gw.pump(force=True)
+    assert all(f.done() for f in lows)
+
+
+# ---------------------------------------------------------------------------
+# streaming
+# ---------------------------------------------------------------------------
+
+
+def test_flow_stream_partials_are_nested_early_exits():
+    clock = FakeClock()
+    gw = ContinuousGateway(CarrySampler(), max_slots=2, max_wait_ms=10.0,
+                           clock=clock)
+    stream = gw.submit_stream(budget=16, x0=_x0(0))
+    for _ in range(4):
+        gw.pump(force=True)
+    chunks = stream.chunks(timeout=1)
+    assert [c.final for c in chunks] == [False, False, True]
+    assert [c.meta["boundary"] for c in chunks[:-1]] == [4, 8]
+    ref = CarrySampler()
+    x0 = jnp.stack([_x0(0)])
+    for c, b in zip(chunks[:-1], (4, 8)):
+        np.testing.assert_array_equal(
+            np.asarray(c.payload), np.asarray(ref.sample_from(None, x0, b))[0])
+    # terminal chunk IS the settled response — bit-identical to plain submit
+    final = chunks[-1].payload
+    assert final is stream.result(1)
+    np.testing.assert_array_equal(
+        np.asarray(final.latents),
+        np.asarray(ref.sample_from(None, x0, 16))[0])
+
+
+def test_decode_stream_tokens_match_solo_oracle():
+    clock = FakeClock()
+    engine = ToyDecodeEngine()
+    gw = DecodeGateway(engine, max_slots=2, prefill_chunk=0, clock=clock)
+    prompt, n = [3, 5, 11], 6
+    stream = gw.submit_stream(prompt=prompt, max_tokens=n)
+    plain = gw.submit(DecodeRequest(prompt=prompt, max_tokens=n))
+    for _ in range(32):
+        gw.pump()
+    chunks = stream.chunks(timeout=1)
+    toks = [c.payload for c in chunks[:-1]]
+    assert chunks[-1].final
+    assert toks == ToyDecodeEngine().solo_tokens(prompt, n)
+    np.testing.assert_array_equal(chunks[-1].payload.tokens,
+                                  plain.result(1).tokens)
+    assert [c.meta["index"] for c in chunks[:-1]] == list(range(n))
+
+
+def test_stream_surfaces_failures_like_the_future():
+    clock = FakeClock()
+
+    class Exploding(CarrySampler):
+        def sample_from(self, batch, x0, budget):
+            raise RuntimeError("boom")
+
+    gw = Gateway(Exploding(), max_batch=2, max_wait_ms=10.0, clock=clock)
+    stream = gw.submit_stream(budget=4, x0=_x0(0))
+    gw.pump(force=True)
+    with pytest.raises(RuntimeError, match="boom"):
+        stream.chunks(timeout=1)
+
+
+# ---------------------------------------------------------------------------
+# decode admission + fleet integration
+# ---------------------------------------------------------------------------
+
+
+def test_decode_admission_and_deadline_metrics():
+    clock = FakeClock()
+    gw = DecodeGateway(ToyDecodeEngine(), max_slots=2, prefill_chunk=0,
+                       clock=clock, slo=SLOConfig(default_cost_ms=2.0))
+    # estimate: (prompt 1 + 4 tokens) x 2ms = 10ms > 5ms deadline
+    with pytest.raises(AdmissionRejected):
+        gw.submit(DecodeRequest(prompt=[3], max_tokens=4, deadline_ms=5.0))
+    ok = gw.submit(DecodeRequest(prompt=[3], max_tokens=4, deadline_ms=500.0))
+    for _ in range(16):
+        gw.pump()
+    assert ok.result(1).meta["finish_reason"] == "length"
+    s = gw.stats()
+    assert s["rejected"] == 1 and s["goodput"] == 1
+
+
+def test_decode_urgent_requests_admitted_first():
+    clock = FakeClock()
+    gw = DecodeGateway(ToyDecodeEngine(), max_slots=1, prefill_chunk=0,
+                       clock=clock, slo=SLOConfig())
+    low = gw.submit(DecodeRequest(prompt=[3], max_tokens=2))
+    hot = gw.submit(DecodeRequest(prompt=[5], max_tokens=2, priority=1))
+    for _ in range(16):
+        gw.pump()
+    assert hot.result(1).meta["join_step"] < low.result(1).meta["join_step"]
+
+
+def test_fleet_stream_and_urgent_stealing():
+    clocks = [FakeClock(), FakeClock()]
+    gws = {f"h{i}": Gateway(CarrySampler(), max_batch=4, max_wait_ms=10.0,
+                            clock=clocks[i]) for i in range(2)}
+    fleet = FleetGateway(gws, steal=False)
+    stream = fleet.submit_stream(budget=4, x0=_x0(0))
+    fleet.pump(force=True)
+    chunks = stream.chunks(timeout=1)
+    assert chunks[-1].final
+    np.testing.assert_array_equal(
+        np.asarray(chunks[-1].payload.latents),
+        np.asarray(stream.result(1).latents))
+    # urgent-aware victim choice: shallower-but-urgent shard is robbed first
+    stealer = WorkStealer(min_queue=2)
+    loads = {"a": HostLoad(queue_depth=6, inflight=0),
+             "b": HostLoad(queue_depth=3, inflight=0, urgent=2),
+             "c": HostLoad(queue_depth=0, inflight=0)}
+    assert stealer.plan(loads) == [("b", "c", 2)]
+    flat = {"a": HostLoad(queue_depth=6, inflight=0),
+            "b": HostLoad(queue_depth=3, inflight=0),
+            "c": HostLoad(queue_depth=0, inflight=0)}
+    assert stealer.plan(flat) == [("a", "c", 3)]    # legacy: deepest wins
+
+
+def test_steal_pops_most_urgent_and_load_counts_urgent():
+    clock = FakeClock()
+    gw = Gateway(CarrySampler(), max_batch=4, max_wait_ms=10.0, clock=clock)
+    gw.submit(Request(budget=4, x0=_x0(0)))
+    hot = gw.submit(Request(budget=4, x0=_x0(1), priority=5))
+    dl = gw.submit(Request(budget=4, x0=_x0(2), deadline_ms=50.0))
+    assert gw.load() == HostLoad(queue_depth=3, inflight=0, urgent=2)
+    taken = gw.steal(2)
+    assert [e.uid for e in taken] == [hot.uid, dl.uid]
