@@ -22,6 +22,16 @@ Acceptance (ISSUE 4): on the mixed-budget workload, p95 wait >= 1.5x lower
 than flush-only with no more total backbone forwards. ``--check`` exits
 non-zero when a claim FAILs; ``--json out.json`` writes the summary +
 regression metrics CI publishes and gates on.
+
+The MULTIMODAL scenario (ISSUE 10) drives the three proxy workloads'
+native request lengths — taxonomy text (5/7/8 rows), audio infill
+(10/13/16), image latents (16) — through ONE ContinuousGateway twice over
+the identical arrival schedule: once grouping by exact shape (six
+fragmented groups, ``tiers=None``) and once under a two-rung
+``ShapeLadder`` (text on the short rung, audio + image sharing the long
+one). Acceptance: the tiered pool reaches strictly higher slot occupancy
+at no more total forwards, and every tiered sample is bit-identical to
+the direct sampler at its native shape (padding cropped on settle).
 """
 from __future__ import annotations
 
@@ -33,10 +43,24 @@ import jax
 import numpy as np
 
 from repro.observability import bucket_bounds_at
-from repro.serving import ContinuousGateway, Gateway, Request
+from repro.serving import ContinuousGateway, Gateway, Request, ShapeLadder
 from repro.serving.toy import FakeClock, ToyAnytimeSampler
 
+try:                                    # via run.py (repo root on sys.path)
+    from benchmarks.audio_proxy import REQUEST_LENGTHS as AUDIO_LENGTHS
+    from benchmarks.t2i_proxy import REQUEST_LENGTHS as IMAGE_LENGTHS
+    from benchmarks.taxonomy_bench import REQUEST_LENGTHS as TEXT_LENGTHS
+except ImportError:                     # run directly as a script
+    from audio_proxy import REQUEST_LENGTHS as AUDIO_LENGTHS
+    from t2i_proxy import REQUEST_LENGTHS as IMAGE_LENGTHS
+    from taxonomy_bench import REQUEST_LENGTHS as TEXT_LENGTHS
+
 BUDGETS = (4, 8, 16)
+# multimodal tier ladder: text rides the short rung, audio + image share
+# the long one — six native lengths collapse onto two slot pools
+TIER_RUNGS = (8, 16)
+MODALITIES = (("text", TEXT_LENGTHS), ("audio", AUDIO_LENGTHS),
+              ("image", IMAGE_LENGTHS))
 
 
 class ToyCarrySampler(ToyAnytimeSampler):
@@ -77,6 +101,21 @@ def schedule(mix: str, requests: int, inter_ms: float,
     return events
 
 
+def schedule_multimodal(requests: int, inter_ms: float, burst: int):
+    """Interleaved multi-modal arrivals: modalities round-robin and each
+    cycles its proxy workload's native REQUEST_LENGTHS, budgets cycling
+    the grid — (arrive_s, budget, request_id, rows). The stream mixes six
+    distinct x0 shapes, so exact-shape grouping fragments while a
+    two-rung ladder keeps two pools full."""
+    events = []
+    for i in range(requests):
+        _, lengths = MODALITIES[i % len(MODALITIES)]
+        rows = lengths[(i // len(MODALITIES)) % len(lengths)]
+        t_ms = 0.0 if i < burst else (i - burst + 1) * inter_ms
+        events.append((t_ms / 1e3, BUDGETS[i % len(BUDGETS)], i, rows))
+    return events
+
+
 def simulate(make_gateway, events, step_ms: float):
     """Drive one gateway through the arrival schedule. Execution advances
     the clock from INSIDE the sampler (one tick per batch-level forward),
@@ -91,8 +130,11 @@ def simulate(make_gateway, events, step_ms: float):
 
     def submit_due():
         while pending and pending[0][0] <= clock.t + 1e-12:
-            _, budget, i = pending.popleft()
-            x0 = jax.random.normal(jax.random.PRNGKey(1000 + i), (2,))
+            ev = pending.popleft()
+            budget, i = ev[1], ev[2]
+            # multimodal events carry a native row count: x0 is (rows, 2)
+            shape = (ev[3], 2) if len(ev) > 3 else (2,)
+            x0 = jax.random.normal(jax.random.PRNGKey(1000 + i), shape)
             futures.append(gw.submit(Request(budget=budget, x0=x0)))
 
     def tick():
@@ -112,8 +154,9 @@ def simulate(make_gateway, events, step_ms: float):
                 clock.advance(pending[0][0] - clock.t)   # hop to next arrival
             else:
                 clock.advance(idle_hop)                  # age the stragglers
-    waits = np.array([f.result().meta["wait_ms"] for f in futures])
-    return waits, gw.stats(), gw.metrics.snapshot()
+    resps = [f.result() for f in futures]
+    waits = np.array([r.meta["wait_ms"] for r in resps])
+    return waits, gw.stats(), gw.metrics.snapshot(), resps
 
 
 def run(requests: int = 96, max_slots: int = 8, step_ms: float = 2.0,
@@ -128,12 +171,12 @@ def run(requests: int = 96, max_slots: int = 8, step_ms: float = 2.0,
     rows = []
     for mix in MIXES:
         events = schedule(mix, requests, inter_ms, burst=max_slots)
-        flush_waits, flush_stats, flush_snap = simulate(
+        flush_waits, flush_stats, flush_snap, _ = simulate(
             lambda sampler, clock: Gateway(sampler, max_batch=max_slots,
                                            max_wait_ms=max_wait_ms,
                                            clock=clock),
             events, step_ms)
-        cont_waits, cont_stats, cont_snap = simulate(
+        cont_waits, cont_stats, cont_snap, _ = simulate(
             lambda sampler, clock: ContinuousGateway(
                 sampler, max_slots=max_slots, max_wait_ms=max_wait_ms,
                 clock=clock, max_leg=max_leg),
@@ -179,7 +222,102 @@ def run(requests: int = 96, max_slots: int = 8, step_ms: float = 2.0,
             f"{row['flush_forwards']} -> {row['cont_forwards']} "
             f"({row['joins']} joins, join_rate {row['join_rate']:.2f}, "
             f"slot_occupancy {row['slot_occupancy']:.2f})")
+    rows.append(run_multimodal(requests=requests, max_slots=max_slots,
+                               step_ms=step_ms, max_wait_ms=max_wait_ms,
+                               inter_ms=inter_ms, max_leg=max_leg, log=log,
+                               registry_out=registry_out))
     return rows
+
+
+def run_multimodal(requests: int = 96, max_slots: int = 8,
+                   step_ms: float = 2.0, max_wait_ms: float = 12.0,
+                   inter_ms: float = 6.0, max_leg: int = 4, log=print,
+                   registry_out=None):
+    """ISSUE 10 tentpole gate: the three proxy workloads' native request
+    shapes through ONE ContinuousGateway, exact-shape grouping vs the
+    two-rung tier ladder, identical arrival schedule. The row reuses the
+    generic field names — the baseline ("flush") arm here is exact-shape
+    grouping, the "cont" arm is the tiered pool — so the CSV line,
+    registry-p95 claims, and regression metrics apply unchanged."""
+    events = schedule_multimodal(requests, inter_ms, burst=max_slots)
+
+    def make(tiers):
+        return lambda sampler, clock: ContinuousGateway(
+            sampler, max_slots=max_slots, max_wait_ms=max_wait_ms,
+            clock=clock, max_leg=max_leg, tiers=tiers)
+
+    exact_waits, exact_stats, exact_snap, exact_resps = simulate(
+        make(None), events, step_ms)
+    tier_waits, tier_stats, tier_snap, tier_resps = simulate(
+        make(ShapeLadder(TIER_RUNGS)), events, step_ms)
+
+    # bit-identity: every sample from BOTH arms must equal the direct
+    # sampler at the request's NATIVE shape (tier padding cropped away)
+    oracle = ToyCarrySampler()
+    mismatches = 0
+    for (_, budget, i, rows_n), er, tr in zip(events, exact_resps,
+                                              tier_resps):
+        x0 = jax.random.normal(jax.random.PRNGKey(1000 + i), (rows_n, 2))
+        want = np.asarray(oracle.sample_from(None, x0[None],
+                                             oracle.resolve_budget(budget))[0])
+        for got in (np.asarray(er.latents), np.asarray(tr.latents)):
+            if got.shape != want.shape or not np.array_equal(got, want):
+                mismatches += 1
+
+    hist = tier_snap["wait_ms"]
+    lo, hi = bucket_bounds_at(hist["bounds"], hist["buckets"], 95.0)
+    width = float(hi - lo) if np.isfinite(hi) else float("inf")
+    row = {
+        "mix": "multimodal",
+        "requests": requests,
+        "max_slots": max_slots,
+        "step_ms": step_ms,
+        "tier_rungs": list(TIER_RUNGS),
+        "exact_shape_groups": len({ev[3] for ev in events}),
+        # generic names: flush_* = exact-shape arm, cont_* = tiered arm
+        "flush_p95_wait_ms": float(np.percentile(exact_waits, 95)),
+        "cont_p95_wait_ms": float(np.percentile(tier_waits, 95)),
+        "flush_mean_wait_ms": float(exact_waits.mean()),
+        "cont_mean_wait_ms": float(tier_waits.mean()),
+        "p95_ratio": float(np.percentile(exact_waits, 95)
+                           / max(np.percentile(tier_waits, 95), 1e-9)),
+        "flush_forwards": exact_stats["forwards"],
+        "cont_forwards": tier_stats["forwards"],
+        "forwards_ratio": tier_stats["forwards"]
+        / max(exact_stats["forwards"], 1),
+        "flush_nfe_per_request": exact_stats["nfe_per_request"],
+        "cont_nfe_per_request": tier_stats["nfe_per_request"],
+        "joins": tier_stats["joins"],
+        "join_rate": tier_stats["join_rate"],
+        "trajectories": tier_stats["trajectories"],
+        "exact_trajectories": exact_stats["trajectories"],
+        "slot_occupancy": tier_stats["slot_occupancy"],
+        "exact_slot_occupancy": exact_stats["slot_occupancy"],
+        "occupancy_gain": tier_stats["slot_occupancy"]
+        / max(exact_stats["slot_occupancy"], 1e-9),
+        "mismatches": mismatches,
+        "tier_occupancy_gauges": {
+            k: v for k, v in tier_snap.items()
+            if k.startswith("tier_occupancy{")},
+        "cont_p95_wait_ms_registry": float(hist["p95"]),
+        "registry_p95_bucket_width": width,
+        "registry_p95_delta": float(
+            abs(hist["p95"] - np.percentile(tier_waits, 95))),
+        "wait_hist_count": int(hist["count"]),
+    }
+    if registry_out is not None:
+        registry_out["multimodal"] = {"exact": exact_snap,
+                                      "tiered": tier_snap}
+    log(f"multimodal: slot_occupancy {row['exact_slot_occupancy']:.2f} "
+        f"(exact-shape, {row['exact_shape_groups']} groups) -> "
+        f"{row['slot_occupancy']:.2f} (tiered, {len(TIER_RUNGS)} rungs, "
+        f"{row['occupancy_gain']:.2f}x); forwards {row['flush_forwards']} "
+        f"-> {row['cont_forwards']}; trajectories "
+        f"{row['exact_trajectories']} -> {row['trajectories']}; p95 wait "
+        f"{row['flush_p95_wait_ms']:.1f}ms -> "
+        f"{row['cont_p95_wait_ms']:.1f}ms; {row['mismatches']} bit-exact "
+        f"mismatches")
+    return row
 
 
 def check_claims(rows):
@@ -201,6 +339,23 @@ def check_claims(rows):
             notes.append(f"[{'PASS' if ok else 'FAIL'}] continuous stays "
                          f"within 10% of flush-only forwards on the "
                          f"skew16 workload (ratio {r['forwards_ratio']:.3f})")
+        elif r["mix"] == "multimodal":
+            ok = r["slot_occupancy"] > r["exact_slot_occupancy"]
+            notes.append(f"[{'PASS' if ok else 'FAIL'}] multimodal: tiered "
+                         f"pool reaches strictly higher slot occupancy "
+                         f"than exact-shape grouping "
+                         f"({r['slot_occupancy']:.3f} vs "
+                         f"{r['exact_slot_occupancy']:.3f})")
+            ok = r["cont_forwards"] <= r["flush_forwards"]
+            notes.append(f"[{'PASS' if ok else 'FAIL'}] multimodal: tiered "
+                         f"pool spends no more total forwards than "
+                         f"exact-shape grouping ({r['cont_forwards']} vs "
+                         f"{r['flush_forwards']})")
+            ok = r["mismatches"] == 0
+            notes.append(f"[{'PASS' if ok else 'FAIL'}] multimodal: every "
+                         f"sample bit-identical to the direct sampler at "
+                         f"its native shape, both arms "
+                         f"({r['mismatches']} mismatches)")
         ok = (r["registry_p95_delta"]
               <= r["registry_p95_bucket_width"] + 1e-9)
         notes.append(f"[{'PASS' if ok else 'FAIL'}] {r['mix']}: registry "
@@ -232,6 +387,15 @@ def metrics(rows):
         out[f"{r['mix']}.cont_p95_wait_ms_registry"] = {
             "value": round(r["cont_p95_wait_ms_registry"], 4),
             "higher_better": False}
+        if r["mix"] == "multimodal":
+            out["multimodal.occupancy_gain"] = {
+                "value": round(r["occupancy_gain"], 4),
+                "higher_better": True}
+            out["multimodal.slot_occupancy"] = {
+                "value": round(r["slot_occupancy"], 4),
+                "higher_better": True}
+            out["multimodal.mismatches"] = {
+                "value": r["mismatches"], "higher_better": False}
     return out
 
 

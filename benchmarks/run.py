@@ -223,18 +223,26 @@ def _fleet(quick, csv, summaries):
 @_timed("overload_bench")
 def _overload(quick, csv, summaries):
     from benchmarks import overload_bench
-    rows = overload_bench.run(requests=720 if quick else 1200, log=log)
+    registry: dict = {}
+    rows = overload_bench.run(requests=10800 if quick else 14400, log=log,
+                              registry_out=registry)
     notes = overload_bench.check_claims(rows)
     for note in notes:
         log(note)
     for r in rows:
+        if r["scenario"] == "preempt":
+            csv.append(("overload/preempt", float(r["slo_goodput"]),
+                        f"preemptions={r['slo_preemptions']};"
+                        f"hit_rate={r['slo_hit_rate']:.3f}"))
+            continue
         csv.append((f"overload/{r['scenario']}", float(r["slo_goodput"]),
                     f"goodput_ratio={r['goodput_ratio']:.2f};"
                     f"hit_rate={r['slo_hit_rate']:.3f};"
                     f"forwards_ratio={r['forwards_ratio']:.3f}"))
     summaries["overload"] = {"bench": "overload", "rows": rows,
                              "claims": notes,
-                             "metrics": overload_bench.metrics(rows)}
+                             "metrics": overload_bench.metrics(rows),
+                             "registry": registry}
 
 
 def _roofline(quick, csv, summaries):

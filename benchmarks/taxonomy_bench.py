@@ -14,6 +14,12 @@ from repro.core.bst_solver import bst_euler_program, identity_bst, materialize_b
 from repro.core.exponential import ddim_program, dpm2m_program
 from repro.solvers import build_ns, get_solver
 
+# serving mix (continuous_bench multimodal scenario): the text workload's
+# requests are SHORT variable-length sequences of this bench's toy points
+# — half the flow SEQ and under, so they land on a lower tier rung than
+# the audio/image latents and fill the pool's short tier
+REQUEST_LENGTHS = (5, 7, 8)
+
 
 def run(log=print):
     sched = schedulers.fm_ot()

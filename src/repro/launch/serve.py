@@ -274,8 +274,13 @@ def _serve_gateway(args, sampler, cond, request_budgets) -> None:
     from repro.serving.gateway import Gateway, Request
     from repro.serving.sharded import serving_mesh
 
+    from repro.serving.tiers import ShapeLadder
+
     recorder = TraceRecorder() if args.trace_jsonl else None
-    slo = SLOConfig() if args.slo else None
+    slo = (SLOConfig(slack_ms=args.slo_slack,
+                     default_cost_ms=args.slo_default_cost_ms)
+           if args.slo else None)
+    tiers = ShapeLadder.parse(args.tiers) if args.tiers else None
 
     def make_host(rec=None):
         # the solver artifact is tiny, so every fleet host serves the SAME
@@ -286,12 +291,12 @@ def _serve_gateway(args, sampler, cond, request_budgets) -> None:
                 max_wait_ms=args.max_wait_ms,
                 mixed_budget_policy=args.mixed_budget_policy,
                 strict_nfe=args.strict_nfe, mesh=serving_mesh(args.mesh),
-                recorder=rec, slo=slo)
+                recorder=rec, slo=slo, tiers=tiers)
         return Gateway(sampler, max_batch=args.max_batch,
                        max_wait_ms=args.max_wait_ms,
                        mixed_budget_policy=args.mixed_budget_policy,
                        strict_nfe=args.strict_nfe, mesh=serving_mesh(args.mesh),
-                       recorder=rec, slo=slo)
+                       recorder=rec, slo=slo, tiers=tiers)
 
     if args.fleet > 1:
         # hosts get the recorder through federate() so every hop carries
@@ -340,7 +345,15 @@ def _serve_gateway(args, sampler, cond, request_budgets) -> None:
               + (f", {partials} streamed partials" if args.stream else ""))
     for fn in stop_telemetry:
         fn()
-    print(format_stats_line(gw.stats(), prefix="gateway stats"))
+    stats = gw.stats()
+    print(format_stats_line(stats, prefix="gateway stats"))
+    if stats.get("cost_est_samples"):
+        # admission cost-model calibration: how far the wait estimates
+        # stamped at submit landed from the actual settle times
+        print(f"admission cost model: |estimate-actual| mean "
+              f"{stats['cost_est_error_mean_ms']:.2f} ms / p95 "
+              f"{stats['cost_est_error_p95_ms']:.2f} ms over "
+              f"{stats['cost_est_samples']} deadline requests")
     _finish_telemetry(args, gw)
 
 
@@ -376,7 +389,10 @@ def _serve_decode_gateway(args, engine, cfg) -> None:
                        prefill_chunk=args.prefill_chunk,
                        key=jax.random.PRNGKey(args.seed),
                        recorder=recorder,
-                       slo=SLOConfig() if args.slo else None)
+                       slo=(SLOConfig(
+                           slack_ms=args.slo_slack,
+                           default_cost_ms=args.slo_default_cost_ms)
+                           if args.slo else None))
     gw.start()
     stop_telemetry = _start_telemetry(args, gw, "decode gateway stats")
     futures = []
@@ -499,6 +515,14 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--top-p", type=float, default=1.0,
                     help="decode gateway: nucleus sampling threshold "
                          "(1.0 = no cap)")
+    ap.add_argument("--tiers", default=None,
+                    help="gateway modes (flow): shape-tier ladder rungs, "
+                         "e.g. 8,16,32 — requests pad their position axis "
+                         "to the smallest rung that fits, so near-shapes "
+                         "share flush buckets / trajectory slots / fleet "
+                         "homes; responses are cropped back (bit-identical "
+                         "to the native shape); longer than the top rung "
+                         "is rejected at submit (default: exact shapes)")
     ap.add_argument("--mixed-budget-policy", default="auto",
                     choices=["never", "auto", "always"],
                     help="gateway: route multi-budget flushes through the "
@@ -532,6 +556,17 @@ def build_parser() -> argparse.ArgumentParser:
                          "ordered planning, and (continuous tier) exit-"
                          "boundary preemption; rejected/shed requests are "
                          "reported per request, not raised")
+    ap.add_argument("--slo-slack", type=float, default=0.0,
+                    help="with --slo: safety margin in ms subtracted from "
+                         "every deadline before the admission/shedding "
+                         "comparison (SLOConfig.slack_ms)")
+    ap.add_argument("--slo-default-cost-ms", type=float, default=0.0,
+                    help="with --slo: per-dispatch cost seeding the "
+                         "admission cost model before the first dispatch "
+                         "is observed (0 = optimistic: accept everything "
+                         "until the histograms warm up); the model then "
+                         "self-calibrates, and the final stats report its "
+                         "|estimate-actual| error")
     ap.add_argument("--deadline-ms", type=float, default=None,
                     help="gateway modes: per-request deadline in ms from "
                          "submit; always recorded as goodput vs "

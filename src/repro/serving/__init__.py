@@ -150,6 +150,9 @@ Module map:
               incremental results riding the existing settle path;
 ``sharded`` — mesh placement for gateway batches (params via
               ``distributed.sharding``, batches split along the data axes);
+``tiers``   — shape-tier ladder: pad near-shapes to configured rungs at
+              submit so one slot pool serves heterogeneous multi-modal
+              traffic, crop back to the native shape at settle;
 ``toy``     — protocol-complete toy sampler/engine for benchmarks + tests.
 """
 from repro.serving.continuous import ContinuousGateway, ContinuousScheduler
@@ -189,6 +192,7 @@ from repro.serving.slo import (
     urgency_key,
 )
 from repro.serving.stream import ResponseStream, StreamChunk, StreamSink
+from repro.serving.tiers import ShapeLadder, TierOversize
 from repro.serving.zoo import SolverZoo, ZooStats
 
 __all__ = ["AdmissionRejected", "AnytimeFlowSampler", "BatchScheduler",
@@ -198,6 +202,7 @@ __all__ = ["AdmissionRejected", "AnytimeFlowSampler", "BatchScheduler",
            "FlowSampler", "Gateway", "GatewayBase", "GatewayStats",
            "HostLoad", "PageAllocator", "PausedCarry", "Request",
            "RequestQueue", "Response", "ResponseStream", "SLOConfig",
-           "SamplingParams", "SolverZoo", "StreamChunk", "StreamSink",
-           "WorkStealer", "ZooStats", "greedy_demo", "nearest_budget",
-           "nearest_latent_tokens", "sample_tokens", "urgency_key"]
+           "SamplingParams", "ShapeLadder", "SolverZoo", "StreamChunk",
+           "StreamSink", "TierOversize", "WorkStealer", "ZooStats",
+           "greedy_demo", "nearest_budget", "nearest_latent_tokens",
+           "sample_tokens", "urgency_key"]

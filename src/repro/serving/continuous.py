@@ -29,6 +29,13 @@ the next boundary, or no free slot) still flush under the usual
 max-batch/max-wait rules. ``stats()`` additionally reports join-rate and
 slot-occupancy.
 
+Shape tiers (``repro.serving.tiers``): with a ``ShapeLadder`` configured,
+``shape_key`` holds the tier-padded shape, so trajectories are PER-TIER,
+not per-exact-shape — a joiner of any native shape in the tier rides the
+shared ``AnytimeCarry`` through its zero-padded position rows, and every
+release/partial crops back to the entry's ``native_shape`` before the
+caller sees it (bit-identical to the direct sampler at the native shape).
+
 Samplers must speak the carry protocol on top of the budget protocol:
 ``carry_start(batch, x0)`` and ``carry_extend(batch, carry, stop)``
 (``AnytimeFlowSampler`` jit-caches one program per (start, stop) leg).
@@ -52,6 +59,7 @@ from repro.serving.gateway import (
     assemble_rows,
 )
 from repro.serving.slo import PausedCarry, is_urgent, urgency_key
+from repro.serving.tiers import crop_row
 
 
 class ContinuousScheduler(BatchScheduler):
@@ -249,7 +257,7 @@ class ContinuousGateway(Gateway):
                  mixed_budget_policy: str = "auto", strict_nfe: bool = False,
                  mesh=None, clock=None, key=None,
                  max_leg: Optional[int] = None, join_cost_cap: float = 0.5,
-                 metrics=None, recorder=None, slo=None):
+                 metrics=None, recorder=None, slo=None, tiers=None):
         for method in ("carry_start", "carry_extend"):
             if not hasattr(sampler, method):
                 raise TypeError(
@@ -261,7 +269,8 @@ class ContinuousGateway(Gateway):
                          max_wait_ms=max_wait_ms,
                          mixed_budget_policy=mixed_budget_policy,
                          strict_nfe=strict_nfe, mesh=mesh, key=key,
-                         metrics=metrics, recorder=recorder, slo=slo, **kw)
+                         metrics=metrics, recorder=recorder, slo=slo,
+                         tiers=tiers, **kw)
         self.scheduler = ContinuousScheduler(
             max_slots=max_slots, boundaries=sampler.budgets,
             max_batch=max_batch or max_slots, max_wait_ms=max_wait_ms,
@@ -318,6 +327,27 @@ class ContinuousGateway(Gateway):
                 self.queue.snapshot(), self.clock(), force=force)
             self._take([e for b in batches for e in b.entries])
         return ran + self._run_batches(batches)
+
+    def _estimate_wait_ms(self, entry) -> float:
+        """Continuous-tier admission cost model: slots refill at every
+        exit boundary, so the per-settled-request service time sits far
+        below one whole dispatch (the flush model's unit) — joiners ride
+        legs already paid for. The queue therefore drains at the OBSERVED
+        device-time-per-settle rate, which the registry already tracks
+        exactly (``device_dispatch_ms.sum`` over ``completed``). Before
+        the first settle there is nothing to observe and the inherited
+        flush batch model — seeded by ``slo.default_cost_ms`` — stands
+        in."""
+        with self._stats_lock:
+            completed = self._m.completed.value
+            device_ms = self._m.device_dispatch_ms.sum
+            inflight = self._inflight
+        if completed and device_ms > 0.0:
+            # work ahead of us = queued entries plus the trajectory rows
+            # already off the queue but not yet settled
+            ahead = self.queue.depth() + inflight
+            return device_ms / completed * (ahead + 1)
+        return super()._estimate_wait_ms(entry)
 
     def _start_trajectory(self, starters: list, now: float) -> None:
         """Open a trajectory over ``starters`` (costs no forwards — the
@@ -381,10 +411,22 @@ class ContinuousGateway(Gateway):
                 self.scheduler.max_slots * (boundary - step))
             m.device_dispatch_ms.observe(leg_ms)
             self._note_program(f"leg/{step}-{boundary}")
+            if active and active[0][1].native_shape is not None:
+                # per-tier occupancy, weighted by leg steps (the slot-
+                # steps convention): native rows carried vs padded rows
+                # paid for — slot padding AND tier padding in one ratio
+                tier = traj.shape_key[1]
+                steps = boundary - step
+                self._note_tier(
+                    tier,
+                    steps * sum(e.native_shape[0] for _, e in active),
+                    steps * self.scheduler.max_slots * tier[0])
         for si, e in streaming:
-            e.sink.partial(latents[si], boundary=boundary)
+            e.sink.partial(crop_row(latents[si], e.native_shape),
+                           boundary=boundary)
         for si, e in released:
-            self._release(traj, si, e, latents[si], boundary, len(active))
+            self._release(traj, si, e, crop_row(latents[si], e.native_shape),
+                          boundary, len(active))
         if is_exit:
             joiners = self.scheduler.plan_joins(
                 self.queue.snapshot(), boundary, len(traj.free_slots()),
@@ -432,6 +474,9 @@ class ContinuousGateway(Gateway):
             "join_step": e.join_step,
             "slot": si,
         })
+        if e.native_shape is not None:
+            response.meta["tier_shape"] = e.shape_key[1]
+            response.meta["native_shape"] = e.native_shape
         if e.trace and rec:
             response.trace = rec.trace(e.uid)
         try:

@@ -14,8 +14,9 @@ This module federates N per-host gateways (each a ``Gateway`` /
   counter) so they can migrate between shards without identity collisions.
 * **Host-affinity routing.** ``FleetRouter`` deterministically assigns each
   request a home host by rendezvous (highest-random-weight) hashing of its
-  AFFINITY KEY — (budget, sample shape) for flow, a max-tokens bucket for
-  decode. Same-key requests congregate on one host, so that host's jit
+  AFFINITY KEY — (budget, sample shape) for flow (the TIER shape when the
+  hosts run a ``ShapeLadder``), a max-tokens bucket for decode. Same-key
+  requests congregate on one host, so that host's jit
   program cache for the (budget, bucket) pair stays hot and its batches
   coalesce denser; and because HRW is a pure function of (key, live host
   set, seed), the same trace on the same fleet yields the same assignments
@@ -74,15 +75,23 @@ from repro.serving.gateway import (
 from repro.serving.stream import ResponseStream
 
 
-def default_affinity(request, top_budget: Optional[int] = None) -> tuple:
+def default_affinity(request, top_budget: Optional[int] = None,
+                     tiers=None) -> tuple:
     """The routing key: requests sharing it share a home host (and thus a
-    host-local jit program cache). Flow requests group by (budget, token
-    shape, explicit-x0 shape); decode requests by power-of-two max-tokens
-    bucket (the decode engine compiles one scan program per step count)."""
+    host-local jit program cache). Flow requests group by (budget, TIER
+    shape) when the hosts run a ``ShapeLadder`` — raw shapes fragmented
+    the fleet: two requests one position apart hashed to different homes
+    and could never share a stolen batch, defeating the tier pool the
+    hosts would have grouped them into. Without a ladder the key falls
+    back to the exact (token shape, explicit-x0 shape). Decode requests
+    group by power-of-two max-tokens bucket (the decode engine compiles
+    one scan program per step count)."""
     if isinstance(request, Request):
         budget = request.budget if request.budget is not None else top_budget
         tok = None if request.tokens is None else tuple(request.tokens.shape)
         x0 = None if request.x0 is None else tuple(request.x0.shape)
+        if tiers is not None:
+            tok, x0 = tiers.request_key(tok, x0)
         return ("flow", budget, tok, x0)
     if hasattr(request, "prompt") and hasattr(request, "max_tokens"):
         bucket = 1
@@ -97,7 +106,9 @@ def entry_affinity(entry) -> tuple:
     """Routing key recomputed from a QUEUED entry (used when a leaving
     host's shard is re-homed — the original request object is gone). May
     differ from the submit-time key (budgets are resolved by then), which
-    only moves WHERE the entry lands, never what it samples."""
+    only moves WHERE the entry lands, never what it samples. A tiered
+    entry's ``shape_key`` already holds the padded tier shape, so this
+    key is (budget, tier) without knowing the ladder."""
     if hasattr(entry, "shape_key"):                  # flow _Entry
         return ("flow", entry.requested, *entry.shape_key)
     if hasattr(entry, "prompt") and hasattr(entry, "max_tokens"):
@@ -335,10 +346,14 @@ class FleetGateway:
     def _key_of(self, request) -> tuple:
         if self._affinity is not None:
             return self._affinity(request)
-        sampler = getattr(next(iter(self._hosts.values())).gateway,
-                          "sampler", None)
+        gw = next(iter(self._hosts.values())).gateway
+        sampler = getattr(gw, "sampler", None)
         top = getattr(sampler, "budgets", (None,))[-1]
-        return default_affinity(request, top_budget=top)
+        # tier-aware routing: when the hosts pad to a shape ladder, hash
+        # the TIER key so near-shapes home together (entry_affinity sees
+        # the padded shape_key, so steal/re-home keys agree with this)
+        return default_affinity(request, top_budget=top,
+                                tiers=getattr(gw, "tiers", None))
 
     def home(self, request) -> str:
         """The deterministic home host for ``request`` (no submission)."""

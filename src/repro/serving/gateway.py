@@ -103,6 +103,7 @@ from repro.serving.slo import (
     urgency_key,
 )
 from repro.serving.stream import ResponseStream, StreamSink
+from repro.serving.tiers import ShapeLadder, crop_row, pad_rows
 
 Array = jax.Array
 
@@ -217,6 +218,13 @@ class _Entry:
     # column, taken when its slot was evicted at an exit boundary
     # (repro.serving.slo.PausedCarry); resume restores it bit-identically
     paused: Optional[Any] = None
+    # shape tiering (repro.serving.tiers): the x0 shape BEFORE tier
+    # padding (None = untiered); ``shape_key``/``x0``/``tokens`` hold the
+    # padded tier forms, and every settle path crops back to this
+    native_shape: Optional[tuple] = None
+    # SLO calibration: the admission cost model's wait estimate stamped
+    # at submit; |estimate - actual| lands in ``cost_est_error_ms``
+    est_wait_ms: Optional[float] = None
 
 
 class RequestQueue:
@@ -476,7 +484,14 @@ METRIC_SCHEMA: tuple = (
     ("inflight", "gauge", "entries taken off the queue, unresolved"),
     ("jit_programs", "gauge", "distinct jit programs dispatched "
                               "(a climb in steady state = retracing)"),
+    ("tier_occupancy", "gauge",
+     "native/padded position-row share of dispatched work, per shape "
+     "tier (labelled tier=<shape>; the unlabelled base stays 0 — "
+     "populated only when a ShapeLadder is configured)"),
     ("wait_ms", "histogram", "queue wait per settled request (ms)"),
+    ("cost_est_error_ms", "histogram",
+     "admission cost model calibration: |estimated - actual| settle "
+     "time per deadline-carrying settled request (ms)"),
     ("host_assembly_ms", "histogram",
      "host-side batch assembly + transfer per dispatch (ms)"),
     ("device_dispatch_ms", "histogram",
@@ -511,6 +526,7 @@ def stats_projection(snap: dict, raw_elapsed: float) -> dict:
         return snap.get(key, 0) or 0
 
     w = snap.get("wait_ms") or {}
+    ce = snap.get("cost_est_error_ms") or {}
     completed = int(n("completed"))
     tokens_out = int(n("tokens_out"))
     slot_total = n("slot_steps_total")
@@ -561,6 +577,13 @@ def stats_projection(snap: dict, raw_elapsed: float) -> dict:
         "deadline_hit_rate": (
             n("goodput")
             / max(n("goodput") + n("deadline_misses") + n("rejected"), 1)),
+        # admission cost-model calibration (zero without deadline traffic):
+        # how far the wait estimate stamped at submit landed from the
+        # actual settle time, over every deadline request that settled
+        "cost_est_samples": int(ce.get("count", 0)),
+        "cost_est_error_mean_ms": (ce.get("sum", 0.0)
+                                   / max(ce.get("count", 0), 1)),
+        "cost_est_error_p95_ms": ce.get("p95", 0.0),
     }
 
 
@@ -658,6 +681,28 @@ class GatewayBase:
         self.metrics.counter("dispatches",
                              "dispatches per compiled jit program",
                              labels={"program": program}).inc()
+
+    def _note_tier(self, tier_shape: tuple, real: int, padded: int) -> None:
+        """Per-tier occupancy accounting (caller holds ``_stats_lock``):
+        labelled native/padded position-row counters per shape tier, and
+        the labelled ``tier_occupancy`` gauge as their running ratio —
+        1.0 means every padded position carried a native row; the gap is
+        what tier padding (plus batch padding) costs this tier."""
+        label = ShapeLadder.label(tier_shape)
+        reg = self.metrics
+        r = reg.counter("tier_real_rows",
+                        "native position-rows dispatched, per shape tier",
+                        labels={"tier": label})
+        p = reg.counter("tier_padded_rows",
+                        "padded position-rows dispatched, per shape tier",
+                        labels={"tier": label})
+        r.inc(real)
+        p.inc(padded)
+        reg.gauge(
+            "tier_occupancy",
+            "native/padded position-row share of dispatched work, per "
+            "shape tier",
+            labels={"tier": label}).set(r.value / max(p.value, 1))
 
     # -- intake ---------------------------------------------------------------
 
@@ -761,6 +806,10 @@ class GatewayBase:
         if slo is None or not slo.admission or entry.deadline is None:
             return
         est = self._estimate_wait_ms(entry)
+        # stamp the estimate for calibration: at settle, |estimate -
+        # actual| lands in cost_est_error_ms (a rejected entry never
+        # settles, so the stamp is inert on the reject path)
+        entry.est_wait_ms = est
         budget = (entry.deadline - self.clock()) * 1e3 - slo.slack_ms
         if est > budget:
             depth = self.queue.depth()
@@ -810,6 +859,10 @@ class GatewayBase:
             self._m.goodput.inc()
         else:
             self._m.deadline_misses.inc()
+        est = getattr(entry, "est_wait_ms", None)
+        if est is not None:
+            actual = (settle_t - entry.t_submit) * 1e3
+            self._m.cost_est_error_ms.observe(abs(actual - est))
 
     # -- streaming (repro.serving.stream) -------------------------------------
 
@@ -1007,10 +1060,18 @@ class Gateway(GatewayBase):
                  mesh=None, clock: Callable[[], float] = time.monotonic,
                  key: Optional[Array] = None,
                  metrics: Optional[MetricsRegistry] = None, recorder=None,
-                 slo: Optional[SLOConfig] = None):
+                 slo: Optional[SLOConfig] = None,
+                 tiers: Optional[ShapeLadder] = None):
         super().__init__(clock=clock, metrics=metrics, recorder=recorder,
                          slo=slo)
         self.sampler = sampler
+        # shape-tier ladder (repro.serving.tiers): when set, submit pads
+        # each request's position axis to its tier rung, so shape_key —
+        # the grouping key of every scheduler layer — IS the tier key and
+        # near-shapes share flush buckets / trajectory slots / programs.
+        # None keeps the exact-shape behaviour (per-position independence
+        # of the field is the tiering precondition; see tiers.py)
+        self.tiers = tiers
         can_mix = (hasattr(sampler, "sample_all_from")
                    and len(sampler.budgets) > 1)
         self.scheduler = BatchScheduler(
@@ -1024,7 +1085,9 @@ class Gateway(GatewayBase):
             from repro.serving import sharded
 
             sharded.shard_sampler(self.sampler, mesh)
-            self._place = sharded.batch_placer(mesh)
+            self._place = (sharded.tier_placer(mesh, tiers)
+                           if tiers is not None
+                           else sharded.batch_placer(mesh))
 
     @classmethod
     def from_zoo(cls, zoo, spec, *, params: dict, cfg, sched,
@@ -1068,12 +1131,29 @@ class Gateway(GatewayBase):
                    else jax.random.fold_in(self._base_key, uid))
             x0 = jax.random.normal(
                 key, (request.tokens.shape[0], self.sampler.cfg.latent_dim))
-        shape_key = (None if request.tokens is None
-                     else tuple(request.tokens.shape), tuple(x0.shape))
+        # tiering: noise is generated at the NATIVE shape above (the fold-in
+        # key path stays bit-identical to an untiered gateway), THEN the
+        # position axis pads to the tier rung. shape_key is computed from
+        # the padded forms, so every scheduler groups on the tier for free;
+        # settle paths crop back to native_shape. Oversize raises here —
+        # before the request is queued or counted (TierOversize).
+        tokens = request.tokens
+        native_shape = None
+        if self.tiers is not None:
+            rung = self.tiers.rung_for(x0.shape)
+            if rung is not None:
+                native_shape = tuple(x0.shape)
+                if rung != native_shape[0]:
+                    x0 = pad_rows(x0, rung)
+                if tokens is not None and tokens.shape[0] < rung:
+                    tokens = pad_rows(tokens, rung)
+        shape_key = (None if tokens is None
+                     else tuple(tokens.shape), tuple(x0.shape))
         t_submit = self.clock()
-        entry = _Entry(uid=uid, tokens=request.tokens, x0=x0,
+        entry = _Entry(uid=uid, tokens=tokens, x0=x0,
                        requested=requested, served=served,
                        shape_key=shape_key, t_submit=t_submit,
+                       native_shape=native_shape,
                        future=Future(), trace=request.trace,
                        deadline=(None if request.deadline_ms is None
                                  else t_submit + request.deadline_ms / 1e3),
@@ -1168,12 +1248,18 @@ class Gateway(GatewayBase):
             m.host_assembly_ms.observe((t1 - t0) * 1e3)
             m.device_dispatch_ms.observe((t2 - t1) * 1e3)
             self._note_program(program)
+            if es[0].native_shape is not None:
+                tier = es[0].shape_key[1]
+                self._note_tier(
+                    tier, sum(e.native_shape[0] for e in es),
+                    batch.bucket * tier[0])
             for e in es:
                 m.wait_ms.observe((dispatched - e.t_submit) * 1e3)
                 m.completed.inc()
                 self._note_deadline(e, settle_t)
         rec = self.recorder
         for e, row in zip(es, rows):
+            row = crop_row(row, e.native_shape)
             wait_ms = (dispatched - e.t_submit) * 1e3
             if rec:
                 rec.event(e.uid, "dispatch", dispatched, host=self._host,
@@ -1189,6 +1275,9 @@ class Gateway(GatewayBase):
                 "mixed": batch.mixed,
                 "wait_ms": wait_ms,
             })
+            if e.native_shape is not None:
+                response.meta["tier_shape"] = e.shape_key[1]
+                response.meta["native_shape"] = e.native_shape
             if e.trace and rec:
                 response.trace = rec.trace(e.uid)
             try:

@@ -81,6 +81,43 @@ def batch_placer(mesh):
     return place
 
 
+def tier_placer(mesh, ladder):
+    """``batch_placer`` specialised to a ``ShapeLadder``: a tier ladder
+    makes the set of dispatch shapes finite and known up front — every
+    batch is (bucket, rung, *tail) for a configured rung — so the
+    ``NamedSharding`` for each shape is built once and cached, and the
+    per-dispatch cost is a dict lookup instead of a spec construction.
+    The cache admits only shapes whose position axis is a configured
+    rung, so it is bounded by (buckets x rungs) regardless of traffic;
+    off-ladder shapes (untiered ndim<2 samples sharing the gateway)
+    place correctly but uncached, like ``batch_placer``."""
+    axes, size = _data_axes(mesh)
+    rungs = frozenset(ladder.rungs)
+    cache: dict = {}
+
+    def sharding_for(shape):
+        spec_b = axes if shape[0] % size == 0 else None
+        return NamedSharding(mesh, P(spec_b, *(None,) * (len(shape) - 1)))
+
+    def place_one(x):
+        shape = tuple(x.shape)
+        if len(shape) >= 2 and shape[1] in rungs:
+            s = cache.get(shape)
+            if s is None:
+                s = cache[shape] = sharding_for(shape)
+            return jax.device_put(x, s)
+        return jax.device_put(x, sharding_for(shape))
+
+    def place(cond, x0):
+        x0 = place_one(x0)
+        if cond is not None:
+            cond = {k: place_one(v) if hasattr(v, "ndim") and v.ndim else v
+                    for k, v in cond.items()}
+        return cond, x0
+
+    return place
+
+
 def carry_placer(mesh):
     """A ``place(carry) -> carry`` callable re-placing the continuous
     engine's slot-batched carry arrays after a join scatters new rows:

@@ -1,0 +1,202 @@
+"""Shape-tier ladder edges: rung mapping at exact boundaries, CLI
+parsing and validation, pad/crop as pure functions, oversize rejection
+BEFORE any queue/metric side effect, padded-crop bit-identity vs the
+direct sampler at every rung (flush and continuous), mixed-tier shared
+trajectories, per-tier occupancy accounting, drain under cancellation,
+and tier-keyed fleet affinity."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.serving import ContinuousGateway, Gateway, Request
+from repro.serving.fleet import default_affinity
+from repro.serving.tiers import ShapeLadder, TierOversize, crop_row, pad_rows
+from repro.serving.toy import FakeClock, ToyAnytimeSampler
+
+LADDER = ShapeLadder((8, 16))
+
+
+def _sampler():
+    return ToyAnytimeSampler(jit=False)
+
+
+def _flush(tiers=LADDER, **kw):
+    kw.setdefault("max_batch", 4)
+    kw.setdefault("max_wait_ms", 5.0)
+    return Gateway(_sampler(), clock=FakeClock(), tiers=tiers, **kw)
+
+
+def _continuous(tiers=LADDER, **kw):
+    kw.setdefault("max_slots", 4)
+    kw.setdefault("max_wait_ms", 5.0)
+    return ContinuousGateway(_sampler(), clock=FakeClock(), tiers=tiers, **kw)
+
+
+def _x0(i, rows):
+    return jax.random.normal(jax.random.PRNGKey(300 + i), (rows, 2))
+
+
+def _direct(x0, budget):
+    """The bit-identity oracle: a FRESH sampler at the NATIVE shape."""
+    s = _sampler()
+    return np.asarray(s.sample_from(None, x0[None], budget)[0])
+
+
+# ---------------------------------------------------------------------------
+# ladder mapping / parsing (pure)
+# ---------------------------------------------------------------------------
+
+
+def test_rung_maps_to_smallest_holding_rung():
+    assert LADDER.rung(1) == 8
+    assert LADDER.rung(7) == 8
+    assert LADDER.rung(8) == 8          # exact boundary stays on its rung
+    assert LADDER.rung(9) == 16
+    assert LADDER.rung(16) == 16
+
+
+def test_rung_oversize_raises_with_configured_rungs():
+    with pytest.raises(TierOversize) as ei:
+        LADDER.rung(17)
+    assert ei.value.length == 17
+    assert ei.value.rungs == (8, 16)
+    assert "--tiers" in str(ei.value)   # the fix is named in the message
+
+
+def test_parse_sorts_dedups_and_validates():
+    assert ShapeLadder.parse("8,16").rungs == (8, 16)
+    assert ShapeLadder.parse("16,8,8").rungs == (8, 16)
+    with pytest.raises(ValueError):
+        ShapeLadder.parse("8,sixteen")
+    with pytest.raises(ValueError):
+        ShapeLadder(())
+    with pytest.raises(ValueError):
+        ShapeLadder((0, 8))
+
+
+def test_no_position_axis_is_its_own_exact_tier():
+    assert LADDER.rung_for((5,)) is None
+    assert LADDER.tier_shape((5,)) == (5,)
+    assert LADDER.tier_shape((5, 2)) == (8, 2)
+    assert LADDER.tier_shape((16, 2)) == (16, 2)
+
+
+def test_pad_rows_zero_fills_and_crop_row_roundtrips():
+    arr = np.arange(10.0).reshape(5, 2)
+    padded = pad_rows(arr, 8)
+    assert padded.shape == (8, 2)
+    np.testing.assert_array_equal(padded[:5], arr)
+    np.testing.assert_array_equal(padded[5:], 0.0)
+    np.testing.assert_array_equal(crop_row(padded, (5, 2)), arr)
+    assert pad_rows(arr, 5) is arr      # exact rung: no copy
+    assert crop_row(arr, (5, 2)) is arr
+    assert crop_row(arr, None) is arr   # untiered entry
+
+
+# ---------------------------------------------------------------------------
+# gateway integration (flush + continuous)
+# ---------------------------------------------------------------------------
+
+
+def test_flush_bit_identity_at_every_rung():
+    """Padded-crop bit-identity vs the direct sampler: one native length
+    strictly inside each rung, plus the EXACT boundary length of each."""
+    gw = _flush()
+    lengths = (5, 8, 13, 16)
+    x0s = [_x0(i, n) for i, n in enumerate(lengths)]
+    futs = [gw.submit(Request(budget=4, x0=x)) for x in x0s]
+    gw.drain()
+    for fut, x0, n in zip(futs, x0s, lengths):
+        resp = fut.result()
+        got = np.asarray(resp.latents)
+        assert got.shape == (n, 2)      # cropped back to native
+        np.testing.assert_array_equal(got, _direct(x0, 4))
+        assert resp.meta["native_shape"] == (n, 2)
+        assert resp.meta["tier_shape"] == (LADDER.rung(n), 2)
+
+
+def test_continuous_bit_identity_and_shared_trajectory_across_tiers():
+    """Native lengths 5/7/8 all pad to rung 8 and must share ONE
+    trajectory (the whole point of the ladder), each settling
+    bit-identical to the direct sampler at its native shape."""
+    gw = _continuous(max_slots=3)
+    lengths = (5, 7, 8)
+    x0s = [_x0(10 + i, n) for i, n in enumerate(lengths)]
+    futs = [gw.submit(Request(budget=8, x0=x)) for x in x0s]
+    gw.drain()
+    assert gw.stats()["trajectories"] == 1
+    for fut, x0, n in zip(futs, x0s, lengths):
+        got = np.asarray(fut.result().latents)
+        assert got.shape == (n, 2)
+        np.testing.assert_array_equal(got, _direct(x0, 8))
+
+
+def test_oversize_rejected_at_submit_without_side_effects():
+    gw = _flush()
+    with pytest.raises(TierOversize):
+        gw.submit(Request(budget=4, x0=_x0(20, 17)))
+    assert gw.queue.depth() == 0
+    assert gw.stats()["submitted"] == 0
+
+
+def test_untiered_gateway_keeps_exact_shapes():
+    """tiers=None is the opt-out: no padding, no tier meta, two near
+    shapes stay in separate exact-shape groups (two flush batches)."""
+    gw = _flush(tiers=None)
+    futs = [gw.submit(Request(budget=4, x0=_x0(30 + i, n)))
+            for i, n in enumerate((5, 7))]
+    gw.drain()
+    for fut, n in zip(futs, (5, 7)):
+        resp = fut.result()
+        assert np.asarray(resp.latents).shape == (n, 2)
+        assert "tier_shape" not in resp.meta
+    assert gw.stats()["batches"] == 2
+
+
+def test_tier_occupancy_counters_and_gauge():
+    """Two natives (5 + 7 rows) in one full rung-8 flush batch: real
+    position-rows 12 of 16 padded -> labelled occupancy 0.75."""
+    gw = _flush(max_batch=2)
+    for i, n in enumerate((5, 7)):
+        gw.submit(Request(budget=4, x0=_x0(40 + i, n)))
+    gw.drain()
+    snap = gw.metrics.snapshot()
+    label = 'tier="8x2"'
+    assert snap[f"tier_real_rows{{{label}}}"] == 12
+    assert snap[f"tier_padded_rows{{{label}}}"] == 16
+    assert snap[f"tier_occupancy{{{label}}}"] == pytest.approx(0.75)
+
+
+def test_mixed_tier_drain_under_cancellation():
+    """Cancelling one tiered request mid-queue must not wedge the drain
+    or corrupt its batch-mates' crops."""
+    gw = _continuous(max_slots=3)
+    x0s = [_x0(50 + i, n) for i, n in enumerate((5, 7, 8))]
+    futs = [gw.submit(Request(budget=8, x0=x)) for x in x0s]
+    futs[1].cancel()
+    gw.drain()
+    assert gw.queue.depth() == 0 and gw._traj is None
+    for idx in (0, 2):
+        got = np.asarray(futs[idx].result().latents)
+        assert got.shape == x0s[idx].shape
+        np.testing.assert_array_equal(got, _direct(x0s[idx], 8))
+
+
+# ---------------------------------------------------------------------------
+# fleet affinity
+# ---------------------------------------------------------------------------
+
+
+def test_fleet_affinity_groups_near_shapes_on_one_tier_key():
+    a = default_affinity(Request(budget=4, x0=_x0(60, 5)), tiers=LADDER)
+    b = default_affinity(Request(budget=4, x0=_x0(61, 7)), tiers=LADDER)
+    c = default_affinity(Request(budget=4, x0=_x0(62, 13)), tiers=LADDER)
+    assert a == b                       # same rung -> same home
+    assert a != c                       # different rung -> different home
+    exact_a = default_affinity(Request(budget=4, x0=_x0(60, 5)))
+    exact_b = default_affinity(Request(budget=4, x0=_x0(61, 7)))
+    assert exact_a != exact_b           # no ladder: raw shapes fragment
+    # oversize must not raise in routing (submit rejects it later)
+    over = default_affinity(Request(budget=4, x0=_x0(63, 17)), tiers=LADDER)
+    assert over[3] == (17, 2)
